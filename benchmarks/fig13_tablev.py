@@ -1,0 +1,50 @@
+"""Paper Fig. 13 + Table V: speedup/energy vs baselines, TOPS and TOPS/W.
+
+The analytical simulator is calibrated on bert-base only (hw/simulator.py
+docstring); bert-large and gpt2-large rows and all ratios are predictions.
+GPU reference points are anchored to the paper's measured ratios (no CUDA in
+this container) and flagged as such.
+"""
+from __future__ import annotations
+
+import time
+
+
+def run() -> list[tuple]:
+    from repro.configs import get_config
+    from repro.hw.params import PAPER_CLAIMS
+    from repro.hw.simulator import Workload, gpu_reference, simulate
+
+    rows = []
+    print("# Table V — TOPS / TOPS/W (ours-modeled vs paper)")
+    print(f"{'model':12s} {'arch':14s} {'TOPS':>9s} {'paper':>9s} "
+          f"{'TOPS/W':>8s} {'paper':>8s}")
+    t0 = time.perf_counter()
+    for name in ("bert-base", "bert-large", "gpt2-large"):
+        w = Workload.from_config(get_config(name))
+        res = {a: simulate(w, a) for a in ("raceit", "puma", "retransformer")}
+        paper = PAPER_CLAIMS["table_v_tops"][name]
+        for a, label in (("puma", "PUMA"), ("retransformer", "ReTransformer"),
+                         ("raceit", "RACE-IT")):
+            r = res[a]
+            print(f"{name:12s} {label:14s} {r['tops']:9.1f} "
+                  f"{paper[label][0]:9.1f} {r['tops_per_w']:8.1f} "
+                  f"{paper[label][1]:8.1f}")
+        sp_puma = res["raceit"]["tokens_per_s"] / res["puma"]["tokens_per_s"]
+        sp_ret = (res["raceit"]["tokens_per_s"]
+                  / res["retransformer"]["tokens_per_s"])
+        en_puma = (res["puma"]["energy_per_token_uj"]
+                   / res["raceit"]["energy_per_token_uj"])
+        gpu = gpu_reference(res["raceit"])
+        print(f"  -> speedup vs PUMA {sp_puma:.2f} (paper 5.9) | vs ReT "
+              f"{sp_ret:.2f} (paper 4.0; NB paper Table V itself implies "
+              f"{paper['RACE-IT'][0]/paper['ReTransformer'][0]:.2f}) | "
+              f"energy-saving vs PUMA {en_puma:.2f} (paper 3.9)")
+        print(f"  -> anchored GPU refs: P100 {gpu['p100_tokens_per_s']:.0f} "
+              f"tok/s, H100 {gpu['h100_tokens_per_s']:.0f} tok/s "
+              f"(x{PAPER_CLAIMS['speedup_vs_p100']}/"
+              f"x{PAPER_CLAIMS['speedup_vs_h100']} paper-measured)")
+        rows.append((f"fig13/{name}/speedup_vs_puma",
+                     (time.perf_counter() - t0) * 1e6 / 3,
+                     f"{sp_puma:.2f}x_paper_5.9x"))
+    return rows

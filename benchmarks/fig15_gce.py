@@ -1,0 +1,29 @@
+"""Paper Fig. 15: speedup vs GCE multiplier:exponent ratio k."""
+from __future__ import annotations
+
+import time
+
+
+def run() -> list[tuple]:
+    from repro.configs import get_config
+    from repro.hw.gce import k_sweep, optimal_k_range
+
+    rows = []
+    print("# Fig. 15 — k sweep (multipliers : exp units)")
+    t0 = time.perf_counter()
+    for name, L in (("bert-base", 384), ("bert-large", 384),
+                    ("gpt2-large", 384)):
+        sw = k_sweep(get_config(name), seq_len=L)
+        lo, hi = optimal_k_range(sw, 0.15)
+        best = max(sw, key=lambda r: r["tokens_per_s"])
+        print(f"  {name:12s} optimal k in [{lo:.1f}, {hi:.1f}] "
+              f"(paper: 3.7..38 for BERT, 13.4..38 for GPT-2; chosen 28.3) "
+              f"best k={best['k']} bottleneck={best['bottleneck']}")
+        rows.append((f"fig15/{name}", (time.perf_counter() - t0) * 1e6 / 3,
+                     f"k_opt=[{lo:.1f},{hi:.1f}]"))
+    # the paper's design point (454 multipliers / 16 exp units, k=28.3)
+    from repro.hw.gce import split_for_k
+    s = split_for_k(28.3)
+    print(f"  design point k=28.3 -> {s['multipliers']} multipliers / "
+          f"{s['exp_units']} exp units (paper: 454 / 16)")
+    return rows

@@ -1,0 +1,43 @@
+"""Kernel micro-benchmarks (interpret mode on CPU — correctness/latency probe;
+the roofline for the real TPU path comes from the dry-run §Roofline)."""
+from __future__ import annotations
+
+import time
+
+
+def _time(fn, *args, n=3):
+    import jax
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> list[tuple]:
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(0)
+    rows = []
+    x = jnp.asarray(rng.integers(-128, 128, (256, 1024)), jnp.int8)
+    lut = jnp.asarray(rng.integers(-128, 128, 256), jnp.int32)
+    us = _time(lambda a: kops.acam_lut(a, lut), x)
+    rows.append(("kernel/acam_lut_256x1024", us, "int8_lut"))
+
+    a = jnp.asarray(rng.integers(-128, 128, (128, 512)), jnp.int8)
+    b = jnp.asarray(rng.integers(-128, 128, (512, 256)), jnp.int8)
+    us = _time(lambda p, q: kops.acam_mvm(p, q), a, b)
+    rows.append(("kernel/acam_mvm_128x512x256", us, "exact_adc"))
+
+    from repro.core.ops import LOGIT_FMT
+    logits = LOGIT_FMT.encode(jnp.asarray(rng.normal(0, 3, (64, 1024)),
+                                          jnp.float32))
+    us = _time(lambda c: kops.acam_softmax_codes(c), logits)
+    rows.append(("kernel/acam_softmax_64x1024", us, "fused_fig8"))
+
+    for name, us, derived in rows:
+        print(f"  {name}: {us:.0f} us/call ({derived})")
+    return rows

@@ -1,0 +1,65 @@
+"""§Roofline: per (arch x shape x mesh) roofline terms from the dry-run.
+
+Reads results/dryrun.json (written by repro.launch.dryrun) and prints the
+three-term table: compute / memory / collective seconds per step, dominant
+term, MODEL_FLOPS/HLO_FLOPS, and the roofline fraction used as the perf score.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun.json"
+
+
+def load(path=RESULTS) -> dict:
+    return json.loads(Path(path).read_text())
+
+
+def table(results: dict, mesh: str = "single") -> list[dict]:
+    rows = []
+    for key, v in sorted(results.items()):
+        if v.get("status") != "ok" or v.get("mesh") != mesh:
+            continue
+        r = v["roofline"]
+        frac = r["roofline_fraction"]
+        if v["shape"].startswith(("decode", "long")):
+            # decode is bandwidth-bound by nature: fraction = ideal time to
+            # stream weights+cache once (argument bytes / HBM bw) / bound
+            ideal = v["memory"]["argument_bytes"] / 819e9
+            frac = ideal / max(r["bound_s"], 1e-30)
+        rows.append({
+            "cell": f"{v['arch']}|{v['shape']}",
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "fraction": frac,
+            "useful": v.get("useful_flops_ratio"),
+            "fits": v["memory"]["fits_16GB"],
+            "mem_gb": v["memory"]["per_device_bytes"] / 1e9,
+        })
+    return rows
+
+
+def run() -> list[tuple]:
+    if not RESULTS.exists():
+        print("  (no results/dryrun.json — run `python -m repro.launch.dryrun"
+              " --all` first)")
+        return [("roofline/missing", 0.0, "no_data")]
+    res = load()
+    rows = table(res, "single")
+    print("# §Roofline — single-pod (16x16) baseline, per device, per step")
+    print(f"{'cell':42s} {'comp_s':>9s} {'mem_s':>9s} {'coll_s':>9s} "
+          f"{'dom':>12s} {'frac':>7s} {'useful':>7s} {'GB/dev':>7s}")
+    for r in rows:
+        print(f"{r['cell']:42s} {r['compute_s']:9.4f} {r['memory_s']:9.4f} "
+              f"{r['collective_s']:9.4f} {r['dominant']:>12s} "
+              f"{r['fraction']:7.4f} {(r['useful'] or 0):7.3f} "
+              f"{r['mem_gb']:7.2f}")
+    import collections
+    doms = collections.Counter(r["dominant"] for r in rows)
+    print(f"  dominant-term histogram: {dict(doms)}")
+    worst = sorted(rows, key=lambda r: r["fraction"])[:3]
+    print("  worst roofline fractions:", [(r['cell'], round(r['fraction'], 4))
+                                          for r in worst])
+    return [(f"roofline/{r['cell']}", 0.0,
+             f"frac={r['fraction']:.4f},dom={r['dominant']}") for r in rows]

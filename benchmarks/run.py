@@ -1,0 +1,36 @@
+"""Benchmark driver — one harness per paper table/figure + roofline.
+
+Prints a ``name,us_per_call,derived`` CSV summary at the end.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+def main() -> None:
+    from benchmarks import (fig13_tablev, fig14_accuracy, fig15_gce,
+                            kernels_bench, roofline, table_iv)
+
+    all_rows = []
+    for name, mod in (("table_iv", table_iv), ("fig13_tablev", fig13_tablev),
+                      ("fig15_gce", fig15_gce), ("kernels", kernels_bench),
+                      ("fig14_accuracy", fig14_accuracy),
+                      ("roofline", roofline)):
+        print(f"\n=== {name} " + "=" * (60 - len(name)))
+        try:
+            all_rows.extend(mod.run())
+        except Exception as e:  # noqa: BLE001
+            print(f"  FAILED: {e}")
+            all_rows.append((f"{name}/FAILED", 0.0, str(e)[:60]))
+
+    print("\n# CSV summary")
+    print("name,us_per_call,derived")
+    for name, us, derived in all_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

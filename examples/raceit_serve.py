@@ -1,0 +1,84 @@
+"""End-to-end driver (the paper is inference acceleration): train a small LM,
+then SERVE batched requests through the RACE-IT analog-faithful path and
+compare against the digital baseline.
+
+Run:  PYTHONPATH=src python examples/raceit_serve.py [--steps 300]
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ExecConfig
+from repro.data import SyntheticLM
+from repro.models import Model
+from repro.serve import BatchScheduler, GenerationEngine, Request
+from repro.train import optim, trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--requests", type=int, default=6)
+    args = ap.parse_args()
+
+    cfg = get_config("gpt2-large").replace(
+        name="serve-demo", n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=256, vocab_size=128, pos_emb="rope", norm="rmsnorm", glu=False,
+        qkv_bias=False, param_dtype="float32", compute_dtype="float32",
+        remat="none", tie_embeddings=True)
+    data = SyntheticLM(vocab_size=128, seq_len=64, global_batch=16, seed=3)
+
+    print(f"[1/3] training a {sum(p.size for p in jax.tree.leaves(Model(cfg).init(jax.random.PRNGKey(0))))/1e6:.2f}M-param LM "
+          f"for {args.steps} steps ...")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    step = jax.jit(trainer.make_train_step(
+        model, optim.AdamWConfig(lr=1e-3,
+                                 schedule=optim.warmup_cosine(20, args.steps))))
+    opt_state = optim.adamw_init(params)
+    for i in range(args.steps):
+        b = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+        params, opt_state, m = step(params, opt_state, b)
+    print(f"      final loss {float(m['loss']):.3f}")
+
+    print("[2/3] serving batched requests (digital vs RACE-IT)...")
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 128, rng.integers(4, 9)).astype(np.int32)
+               for _ in range(args.requests)]
+    outs = {}
+    for mode, ec in (("digital", ExecConfig()),
+                     ("raceit", ExecConfig(mode="raceit", softmax_mode="pot"))):
+        eng = GenerationEngine(cfg, params, exec_cfg=ec, max_len=64)
+        sched = BatchScheduler(eng, bucket_size=4)
+        for rid, p in enumerate(prompts):
+            sched.submit(Request(rid, p, n_new=8))
+        t0 = time.perf_counter()
+        done = sched.run_all()
+        dt = time.perf_counter() - t0
+        outs[mode] = done
+        total_toks = sum(len(r.result) for r in done.values())
+        print(f"      {mode:8s}: {total_toks} tokens in {dt:.2f}s "
+              f"({total_toks/dt:.1f} tok/s on 1 CPU core)")
+
+    print("[3/3] digital vs RACE-IT generations:")
+    agree = 0
+    for rid in sorted(outs["digital"]):
+        d = outs["digital"][rid].result
+        r = outs["raceit"][rid].result
+        agree += int((d == r).sum())
+        print(f"   req{rid}: digital {d.tolist()}  raceit {r.tolist()}")
+    n = sum(len(outs['digital'][r].result) for r in outs['digital'])
+    print(f"   token agreement: {agree}/{n} "
+          f"(quantized analog path vs fp32; paper reports ~0.2% task-level drop)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Distributed training driver with the fault-tolerant loop.
+
+CPU demo (default): a few-M-param model, a few hundred steps, checkpointing +
+auto-resume exercised for real. `--preset cluster` selects the ~100M-param
+configuration this driver runs on a real pod (same code path; the 40-cell
+dry-run proves the sharded train_step compiles at 512 chips).
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
+Kill it mid-run and re-run: it resumes from the latest checkpoint.
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.models import Model
+from repro.train import TrainLoopConfig, optim, run_training, trainer
+
+PRESETS = {
+    # ~3M params: CPU-friendly "few hundred steps" demo
+    "cpu": dict(n_layers=4, d_model=192, n_heads=6, n_kv_heads=6, d_ff=768,
+                vocab_size=512, seq=128, batch=8),
+    # ~100M params: the e2e config for real hardware (also dry-run-proven)
+    "cluster": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+                    d_ff=3072, vocab_size=32_768, seq=1024, batch=64),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--preset", choices=PRESETS, default="cpu")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+
+    cfg = get_config("gpt2-large").replace(
+        name=f"train-lm-{args.preset}", n_layers=p["n_layers"],
+        d_model=p["d_model"], n_heads=p["n_heads"], n_kv_heads=p["n_kv_heads"],
+        d_ff=p["d_ff"], vocab_size=p["vocab_size"], pos_emb="rope",
+        norm="rmsnorm", glu=True, qkv_bias=False, tie_embeddings=True,
+        param_dtype="float32", compute_dtype="float32", remat="none")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {n/1e6:.1f}M params | preset={args.preset}")
+
+    data = SyntheticLM(vocab_size=p["vocab_size"], seq_len=p["seq"],
+                       global_batch=p["batch"], seed=11)
+    opt_cfg = optim.AdamWConfig(
+        lr=3e-4, schedule=optim.warmup_cosine(50, args.steps))
+    step = jax.jit(trainer.make_train_step(model, opt_cfg))
+    opt_state = optim.adamw_init(params)
+
+    loop_cfg = TrainLoopConfig(
+        steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=50,
+        log_every=10, metrics_path=f"{args.ckpt_dir}/metrics.csv")
+    params, opt_state, out = run_training(
+        step, params, opt_state, data, loop_cfg,
+        make_batch=lambda b: {k: jnp.asarray(v) for k, v in b.items()})
+    hist = out["history"]
+    if hist:
+        print(f"done: step {out['final_step']}  loss "
+              f"{hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}  "
+              f"stragglers flagged: {out['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

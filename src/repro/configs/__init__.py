@@ -1,0 +1,4 @@
+from .base import (  # noqa: F401
+    ModelConfig, ExecConfig, ShapeSpec, SHAPES,
+    register, get_config, list_configs,
+)

@@ -1,0 +1,154 @@
+"""Model / execution / training configuration system.
+
+Every assigned architecture is a `ModelConfig`; layer heterogeneity (jamba's
+1:7 mamba:attn interleave, gemma3's 5:1 local:global, MoE-every-other-layer)
+is expressed with cyclic *patterns* that the block machinery turns into
+scan-able parameter stacks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["ModelConfig", "ExecConfig", "register", "get_config", "list_configs", "SHAPES", "ShapeSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default: d_model // n_heads
+    # pad attention heads up to this count for TP divisibility; padded head
+    # outputs are hard-masked to zero, so the function equals the unpadded
+    # model (standard head-padding trick; waste shows up in useful-FLOPs).
+    head_pad_to: Optional[int] = None
+
+    # --- layer heterogeneity (cycled over layer index) ---
+    mixer_pattern: tuple = ("attn",)       # "attn" | "attn_local" | "mamba"
+    ffn_pattern: tuple = ("dense",)        # "dense" | "moe" | "none"
+    window: int = 1024                     # local-attention window
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 1
+    capacity_factor: float = 1.25
+    expert_parallel: bool = False          # EP over "model" (else TP-in-expert)
+
+    # --- SSM (mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_groups: int = 1
+    conv_width: int = 4
+    ssm_chunk: int = 256
+
+    # --- misc ---
+    activation: str = "silu"               # "silu" | "gelu"
+    glu: bool = True                       # gated FFN (SwiGLU/GeGLU)
+    norm: str = "rmsnorm"                  # "rmsnorm"|"layernorm"|"np_layernorm"
+    qkv_bias: bool = False
+    pos_emb: str = "rope"                  # "rope"|"mrope"|"learned"|"sinusoidal"|"none"
+    rope_theta: float = 1e6
+    mrope_sections: Optional[tuple] = None
+    causal: bool = True                    # False => encoder-only (BERT)
+    tie_embeddings: bool = False
+    max_seq_len: int = 524_288
+
+    # --- encoder-decoder (whisper) ---
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_len: int = 1500                # audio frames after the (stub) conv
+    frontend: str = "none"                 # "none"|"audio_stub"|"vision_stub"
+
+    # --- distribution policy ---
+    fsdp: bool = False                     # shard weights over "data" too
+    remat: str = "dots"                    # "none"|"full"|"dots"
+    scan_unroll: int = 1
+
+    # --- dtypes / perf knobs (hillclimb levers, see EXPERIMENTS.md §Perf) ---
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    matmul_out_dtype: str = "compute"   # "compute" (bf16 boundary/collectives)
+                                        # | "f32" (paper-baseline behavior)
+    attn_probs_dtype: str = "bfloat16"  # p matrix fed to the PV matmul
+
+    # --- applicability (see DESIGN.md) ---
+    supports_long_context: bool = False    # run long_500k?
+    family: str = "dense"                  # dense|moe|ssm|hybrid|vlm|audio|encoder
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def block_period(self) -> int:
+        import math
+        return math.lcm(len(self.mixer_pattern), len(self.ffn_pattern))
+
+    def layer_spec(self, i: int) -> tuple:
+        """(mixer, ffn) kind of layer i."""
+        return (self.mixer_pattern[i % len(self.mixer_pattern)],
+                self.ffn_pattern[i % len(self.ffn_pattern)])
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecConfig:
+    """Execution mode: digital baseline vs RACE-IT analog-faithful inference."""
+
+    mode: str = "digital"                  # "digital" | "raceit"
+    softmax_mode: str = "pot"              # "pot"|"pot_fine"|"uniform" (raceit)
+    matmul_fidelity: str = "int"           # "int"|"acam" (raceit, tests only)
+    crossbar_adc: str = "exact"            # "exact"|"quantize"
+    act_bits: int = 8
+    weight_bits: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+_REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        # populate the registry lazily
+        from . import catalog  # noqa: F401
+    return _REGISTRY[name]
+
+
+def list_configs() -> list[str]:
+    from . import catalog  # noqa: F401
+    return sorted(_REGISTRY)

@@ -1,0 +1,221 @@
+"""Vectorized functional simulation of Compute-ACAM arrays (paper Section III).
+
+Two equivalent evaluation paths are provided:
+
+* the **hardware path** — pad the compiled ranges/rectangles into dense arrays
+  and evaluate the analog semantics directly (per output bit: OR over cells of
+  "input in [lo, hi)"), then Gray-decode with the XOR prefix; and
+* the **LUT path** — because the compiler is exact, the range program of an
+  n-bit function is equivalent to its 2^n-entry table; production kernels use
+  this (a gather / one-hot matmul on TPU).
+
+Tests assert the two paths agree bit-exactly on every input.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import compiler
+from .gray import gray_decode
+from .quant import FixedPointFormat, PoTFormat, ScaledFormat
+
+Format = Union[FixedPointFormat, ScaledFormat, PoTFormat]
+
+__all__ = ["RangeArrays", "RectArrays", "AcamFunction", "Acam2VarFunction"]
+
+
+def _fmt_num_codes(fmt: Format) -> int:
+    return fmt.num_codes
+
+
+def _fmt_to_position(fmt: Format, codes):
+    """Map stored codes to value-order positions (= unsigned code)."""
+    if isinstance(fmt, PoTFormat):
+        return codes  # PoT codes are already value-ordered, unsigned
+    return fmt.to_unsigned(codes)
+
+
+def _fmt_from_position(fmt: Format, pos):
+    if isinstance(fmt, PoTFormat):
+        return pos
+    return fmt.from_unsigned(pos)
+
+
+@dataclasses.dataclass
+class RangeArrays:
+    """Padded [lo, hi) ranges per output bit for vectorized evaluation."""
+
+    lo: np.ndarray  # (out_bits, R) int32
+    hi: np.ndarray  # (out_bits, R) int32
+    mask: np.ndarray  # (out_bits, R) bool
+    out_bits: int
+    encoded: bool
+
+    @classmethod
+    def from_program(cls, prog: compiler.RangeProgram) -> "RangeArrays":
+        R = max(1, max(len(r) for r in prog.ranges))
+        lo = np.zeros((prog.out_bits, R), np.int32)
+        hi = np.zeros((prog.out_bits, R), np.int32)
+        mask = np.zeros((prog.out_bits, R), bool)
+        for i, ranges in enumerate(prog.ranges):
+            for k, (a, b) in enumerate(ranges):
+                lo[i, k], hi[i, k], mask[i, k] = a, b, True
+        return cls(lo, hi, mask, prog.out_bits, prog.encoded)
+
+    def __call__(self, positions: jax.Array) -> jax.Array:
+        """positions (...,) int32 -> unsigned output patterns (...,) int32."""
+        p = positions[..., None, None]  # (..., 1, 1)
+        lo, hi, mask = jnp.asarray(self.lo), jnp.asarray(self.hi), jnp.asarray(self.mask)
+        match = (p >= lo) & (p < hi) & mask  # (..., bits, R)
+        bits = jnp.any(match, axis=-1)  # (..., bits) MSB first
+        weights = jnp.left_shift(1, jnp.arange(self.out_bits - 1, -1, -1))
+        out = jnp.sum(bits.astype(jnp.int32) * weights, axis=-1)
+        if self.encoded:
+            out = gray_decode(out, self.out_bits)
+        return out
+
+
+@dataclasses.dataclass
+class RectArrays:
+    x_lo: np.ndarray
+    x_hi: np.ndarray
+    y_lo: np.ndarray
+    y_hi: np.ndarray
+    mask: np.ndarray
+    out_bits: int
+    encoded: bool
+
+    @classmethod
+    def from_program(cls, prog: compiler.RectProgram) -> "RectArrays":
+        R = max(1, max(len(r) for r in prog.rects))
+        arrs = {k: np.zeros((prog.out_bits, R), np.int32) for k in ("xl", "xh", "yl", "yh")}
+        mask = np.zeros((prog.out_bits, R), bool)
+        for i, rects in enumerate(prog.rects):
+            for k, r in enumerate(rects):
+                arrs["xl"][i, k], arrs["xh"][i, k] = r.x_lo, r.x_hi
+                arrs["yl"][i, k], arrs["yh"][i, k] = r.y_lo, r.y_hi
+                mask[i, k] = True
+        return cls(
+            arrs["xl"], arrs["xh"], arrs["yl"], arrs["yh"],
+            mask, prog.out_bits, prog.encoded,
+        )
+
+    def __call__(self, xpos: jax.Array, ypos: jax.Array) -> jax.Array:
+        xp = xpos[..., None, None]
+        yp = ypos[..., None, None]
+        match = (
+            (xp >= jnp.asarray(self.x_lo)) & (xp < jnp.asarray(self.x_hi))
+            & (yp >= jnp.asarray(self.y_lo)) & (yp < jnp.asarray(self.y_hi))
+            & jnp.asarray(self.mask)
+        )
+        bits = jnp.any(match, axis=-1)
+        weights = jnp.left_shift(1, jnp.arange(self.out_bits - 1, -1, -1))
+        out = jnp.sum(bits.astype(jnp.int32) * weights, axis=-1)
+        if self.encoded:
+            out = gray_decode(out, self.out_bits)
+        return out
+
+
+@dataclasses.dataclass
+class AcamFunction:
+    """A compiled 1-variable Compute-ACAM function."""
+
+    name: str
+    in_fmt: Format
+    out_fmt: Format
+    table: np.ndarray  # unsigned output pattern per value-ordered input
+    program: compiler.RangeProgram
+    cost: compiler.ArrayCost
+    _lut: np.ndarray = None  # value-position -> output code (signed domain)
+    _hw: RangeArrays = None
+
+    @classmethod
+    def compile(
+        cls,
+        name: str,
+        fn: Callable,
+        in_fmt: Format,
+        out_fmt: Format,
+        encode: bool = True,
+    ) -> "AcamFunction":
+        if isinstance(in_fmt, PoTFormat):
+            x = in_fmt.decode(np.arange(in_fmt.num_codes))
+        else:
+            x = in_fmt.decode(in_fmt.all_codes_value_order())
+        y = np.asarray(fn(x), dtype=np.float64)
+        if isinstance(out_fmt, PoTFormat):
+            table = out_fmt.encode(y).astype(np.uint32)
+        else:
+            table = out_fmt.to_bits(out_fmt.encode(y))
+        out_bits = 8 if isinstance(out_fmt, PoTFormat) else out_fmt.bits
+        prog = compiler.compile_1var(table, out_bits, encode=encode)
+        # LUT in signed-code domain for the fast path.
+        out_codes = table.astype(np.int64)
+        if not isinstance(out_fmt, PoTFormat):
+            out_codes = out_fmt.from_unsigned(out_codes)
+        return cls(
+            name=name, in_fmt=in_fmt, out_fmt=out_fmt, table=table,
+            program=prog, cost=compiler.array_cost(prog),
+            _lut=out_codes.astype(np.int32),
+            _hw=RangeArrays.from_program(prog),
+        )
+
+    # ---- code-domain application ----
+    def apply_codes(self, codes: jax.Array, hw: bool = False) -> jax.Array:
+        """Input codes -> output codes. hw=True uses the analog range semantics."""
+        pos = _fmt_to_position(self.in_fmt, codes)
+        if hw:
+            pattern = self._hw(pos)
+            if not isinstance(self.out_fmt, PoTFormat):
+                return _fmt_from_position(self.out_fmt, pattern)
+            return pattern
+        return jnp.take(jnp.asarray(self._lut), pos, axis=0)
+
+    # ---- float-domain convenience (quantize -> LUT -> dequantize) ----
+    def __call__(self, x: jax.Array, hw: bool = False) -> jax.Array:
+        codes = self.in_fmt.encode(x)
+        out = self.apply_codes(codes, hw=hw)
+        return self.out_fmt.decode(out)
+
+
+@dataclasses.dataclass
+class Acam2VarFunction:
+    """A compiled 2-variable (4-bit x 4-bit) Compute-ACAM function."""
+
+    name: str
+    x_fmt: FixedPointFormat
+    y_fmt: FixedPointFormat
+    out_fmt: FixedPointFormat
+    table: np.ndarray  # (Nx, Ny) unsigned output patterns
+    program: compiler.RectProgram
+    cost: compiler.ArrayCost
+    _lut: np.ndarray = None
+    _hw: RectArrays = None
+
+    @classmethod
+    def compile(cls, name, fn, x_fmt, y_fmt, out_fmt, encode: bool = True):
+        table = compiler.build_table_2var(fn, x_fmt, y_fmt, out_fmt)
+        prog = compiler.compile_2var(table, out_fmt.bits, encode=encode)
+        out_codes = out_fmt.from_unsigned(table.astype(np.int64))
+        return cls(
+            name=name, x_fmt=x_fmt, y_fmt=y_fmt, out_fmt=out_fmt, table=table,
+            program=prog, cost=compiler.array_cost(prog),
+            _lut=out_codes.astype(np.int32),
+            _hw=RectArrays.from_program(prog),
+        )
+
+    def apply_codes(self, xc: jax.Array, yc: jax.Array, hw: bool = False) -> jax.Array:
+        xpos = _fmt_to_position(self.x_fmt, xc)
+        ypos = _fmt_to_position(self.y_fmt, yc)
+        if hw:
+            return _fmt_from_position(self.out_fmt, self._hw(xpos, ypos))
+        return jnp.asarray(self._lut)[xpos, ypos]
+
+    def __call__(self, x, y, hw: bool = False):
+        out = self.apply_codes(self.x_fmt.encode(x), self.y_fmt.encode(y), hw=hw)
+        return self.out_fmt.decode(out)

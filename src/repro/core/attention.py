@@ -1,0 +1,74 @@
+"""RACE-IT attention numerics: the five-stage MHA pipeline (paper Fig. 12).
+
+mvm       Q = X W_q on the crossbar DPE lane           (crossbar.py)
+matmul-1  r = q . K^T as 4-bit 2-var ACAM multiplies   (ops.mult8_codes)
+div-add   r / sqrt(d_k) + mask on the adder lane        (scale folding)
+softmax   Compute-ACAM dataflow                         (softmax.py)
+matmul-2  out = s . V as ACAM multiplies + adds
+
+This is the bit-accurate reference used to validate the RACE-IT execution mode
+of the model stack and the Pallas kernels. The data-dependent matmuls operate
+on int8 codes; `fidelity="acam"` routes every scalar product through the
+compiled 4-bit nibble tables (slow, exact), `fidelity="int"` uses the
+equivalent integer matmul (proven equal in tests).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .ops import LOGIT_FMT, mult8_codes
+from .quant import quantize_tensor
+from .softmax import acam_softmax
+
+__all__ = ["raceit_attention", "dd_matmul_codes"]
+
+
+def dd_matmul_codes(a_codes: jax.Array, b_codes: jax.Array, fidelity: str = "int") -> jax.Array:
+    """Data-dependent matmul on int8 codes: (..., M, K) x (..., K, N) -> int32.
+
+    fidelity="acam": each scalar product goes through the four compiled 4-bit
+    Compute-ACAM nibble tables + three adds (paper §IV-B).
+    fidelity="int": plain integer dot products (bit-identical, fast path).
+    """
+    if fidelity == "acam":
+        prod = mult8_codes(a_codes[..., :, :, None], b_codes[..., None, :, :])
+        return jnp.sum(prod, axis=-2, dtype=jnp.int32)
+    a = a_codes.astype(jnp.int32)
+    b = b_codes.astype(jnp.int32)
+    return jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (b.ndim - 2,)), (tuple(range(a.ndim - 2)),) * 2),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@partial(jax.jit, static_argnames=("fidelity", "softmax_mode", "hw"))
+def raceit_attention(
+    q: jax.Array,  # (B, H, Sq, D) float
+    k: jax.Array,  # (B, H, Sk, D) float
+    v: jax.Array,  # (B, H, Sk, D) float
+    mask: jax.Array | None = None,  # broadcastable to (B, H, Sq, Sk), bool
+    fidelity: str = "int",
+    softmax_mode: str = "pot",
+    hw: bool = False,
+) -> jax.Array:
+    """Bit-accurate RACE-IT attention (float in/out, int8 internal)."""
+    d = q.shape[-1]
+    qq = quantize_tensor(q, bits=8)
+    kq = quantize_tensor(k, bits=8)
+    vq = quantize_tensor(v, bits=8)
+
+    # matmul-1: r = q . K^T on the GCE multiplier lane.
+    r = dd_matmul_codes(qq.codes, jnp.swapaxes(kq.codes, -1, -2), fidelity)
+    # div-add: scale by s_q s_k / sqrt(d) and apply the mask additively.
+    logits = r.astype(jnp.float32) * (qq.scale * kq.scale) / jnp.sqrt(jnp.float32(d))
+    if mask is not None:
+        logits = jnp.where(mask, logits, LOGIT_FMT.min_value)
+    # softmax: the Fig. 8 dataflow (integer, table-driven).
+    probs = acam_softmax(logits, axis=-1, mode=softmax_mode, hw=hw)
+    # matmul-2: out = s . V, probs re-enter the multiplier lane as 8-bit codes.
+    pq = quantize_tensor(probs, bits=8)
+    out = dd_matmul_codes(pq.codes, vq.codes, fidelity)
+    return out.astype(jnp.float32) * (pq.scale * vq.scale)

@@ -1,0 +1,126 @@
+"""Bit-sliced ReRAM crossbar MVM with Compute-ACAM ADCs (paper §II-A, §IV-A).
+
+Weights are spatially bit-sliced into `cell_bits`-wide conductance slices
+(adjacent columns); inputs are temporally bit-sliced into `dac_bits`-wide
+pulses. Each crossbar column's analog partial sum is digitized by the
+Compute-ACAM-based ADC (folded 2x4-bit identity conversion, §IV-A) and the
+planes are consolidated with shift-&-add. The ISAAC weight-offset encoding is
+used: unsigned (offset) operands on the array, with the offset corrections
+applied digitally — the row-sum of inputs comes from a ones-column, and the
+column-sum of (static) weights is precomputed.
+
+`adc_mode="exact"` models a conversion with enough resolution (the default
+configuration: 128 rows x 2-bit cells x 1-bit DAC -> 385 levels ~ 8.6 bits;
+with ISAAC encoding <= 8 bits, matching the paper); `adc_mode="quantize"`
+applies an explicit `adc_bits` uniform transfer so resolution loss can be
+studied. This module is the pure-jnp oracle; kernels/acam_mvm.py is the
+Pallas TPU kernel with identical semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .quant import QuantizedTensor, quantize_tensor
+
+__all__ = ["CrossbarConfig", "bit_sliced_matmul", "crossbar_linear"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossbarConfig:
+    rows: int = 128        # crossbar height (K is chunked to this)
+    cell_bits: int = 2     # ReRAM bits per cell
+    dac_bits: int = 1      # input bits per pulse
+    weight_bits: int = 8
+    input_bits: int = 8
+    adc_bits: int = 8      # Compute-ACAM ADC resolution
+    adc_mode: str = "exact"  # "exact" | "quantize"
+
+    @property
+    def num_weight_slices(self) -> int:
+        return -(-self.weight_bits // self.cell_bits)
+
+    @property
+    def num_input_slices(self) -> int:
+        return -(-self.input_bits // self.dac_bits)
+
+
+def _adc(p: jax.Array, cfg: CrossbarConfig, rows: int) -> jax.Array:
+    """ADC transfer function on a non-negative integer partial sum."""
+    p_max = rows * ((1 << cfg.cell_bits) - 1) * ((1 << cfg.dac_bits) - 1)
+    levels = (1 << cfg.adc_bits) - 1
+    if cfg.adc_mode == "exact" or p_max <= levels:
+        return p
+    step = p_max / levels
+    return jnp.round(jnp.round(p / step) * step).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def bit_sliced_matmul(
+    x_codes: jax.Array, w_codes: jax.Array, cfg: CrossbarConfig = CrossbarConfig()
+) -> jax.Array:
+    """Integer matmul via crossbar bit-slicing. x (M, K) int; w (K, N) int.
+
+    Exactly equals x @ w (int32) when the ADC has sufficient resolution.
+    """
+    M, K = x_codes.shape
+    K2, N = w_codes.shape
+    assert K == K2, (x_codes.shape, w_codes.shape)
+    ox = 1 << (cfg.input_bits - 1)
+    ow = 1 << (cfg.weight_bits - 1)
+    xu = (x_codes.astype(jnp.int32) + ox).astype(jnp.uint32)
+    wu = (w_codes.astype(jnp.int32) + ow).astype(jnp.uint32)
+
+    # Pad K to a multiple of the crossbar height; offset-padding with zeros
+    # contributes nothing to the unsigned accumulations below.
+    pad = (-K) % cfg.rows
+    if pad:
+        xu = jnp.pad(xu, ((0, 0), (0, pad)))
+        wu = jnp.pad(wu, ((0, pad), (0, 0)))
+    n_chunks = (K + pad) // cfg.rows
+    xu_c = xu.reshape(M, n_chunks, cfg.rows)
+    wu_c = wu.reshape(n_chunks, cfg.rows, N)
+
+    dac_mask = (1 << cfg.dac_bits) - 1
+    cell_mask = (1 << cfg.cell_bits) - 1
+    acc = jnp.zeros((M, N), jnp.int32)
+    for t in range(cfg.num_input_slices):  # temporal input slices
+        x_t = ((xu_c >> (t * cfg.dac_bits)) & dac_mask).astype(jnp.int32)
+        for s in range(cfg.num_weight_slices):  # spatial weight slices
+            w_s = ((wu_c >> (s * cfg.cell_bits)) & cell_mask).astype(jnp.int32)
+            # Analog column currents per crossbar chunk -> ADC -> shift-&-add.
+            p = jnp.einsum("mck,ckn->mcn", x_t, w_s,
+                           preferred_element_type=jnp.int32)
+            q = _adc(p, cfg, cfg.rows).sum(axis=1)
+            acc = acc + (q << (t * cfg.dac_bits + s * cfg.cell_bits))
+
+    # ISAAC offset-encoding corrections (digital).
+    rowsum_x = xu.astype(jnp.int32).sum(axis=1, keepdims=True)   # ones column
+    colsum_w = wu.astype(jnp.int32).sum(axis=0, keepdims=True)   # precomputed
+    return acc - ow * rowsum_x - ox * colsum_w + K * ox * ow
+
+
+def crossbar_linear(
+    x: jax.Array,
+    wq: QuantizedTensor,
+    bias: jax.Array | None = None,
+    cfg: CrossbarConfig = CrossbarConfig(),
+) -> jax.Array:
+    """Float-in/float-out linear layer on the crossbar DPE lane.
+
+    x: (..., K) float. wq: per-out-channel int8 weights (K, N). The input is
+    uniformly quantized per-tensor (the DAC path), multiplied bit-sliced, and
+    rescaled.
+    """
+    xq = quantize_tensor(x, bits=cfg.input_bits)
+    lead = x.shape[:-1]
+    x2 = xq.codes.reshape(-1, x.shape[-1]).astype(jnp.int32)
+    y = bit_sliced_matmul(x2, wq.codes.astype(jnp.int32), cfg)
+    yf = y.astype(jnp.float32) * (xq.scale * wq.scale)
+    yf = yf.reshape(*lead, -1)
+    if bias is not None:
+        yf = yf + bias
+    return yf

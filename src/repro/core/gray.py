@@ -1,0 +1,41 @@
+"""Gray-code output encoding (paper Section V-A, Table I).
+
+Encoding the ACAM *output* bits in Gray code halves the number of runs-of-1s
+per output bit, which halves the number of stored ranges (= ACAM cells).
+The binary result is recovered with an XOR prefix over the higher-order bits —
+cheap CMOS gates (the XOR row in Table II).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = ["gray_encode", "gray_decode", "gray_decode_bits"]
+
+
+def gray_encode(n):
+    """Binary code -> Gray code (works on ints, numpy, or jax arrays)."""
+    return n ^ (n >> 1)
+
+
+def gray_decode(g, bits: int):
+    """Gray code -> binary code via XOR-prefix (b_i = XOR of g_{n-1..i})."""
+    b = g
+    shift = 1
+    while shift < bits:
+        b = b ^ (b >> shift)
+        shift <<= 1
+    mask = (1 << bits) - 1
+    return b & mask
+
+
+def gray_decode_bits(bits_array, axis: int = -1):
+    """Decode a Gray bit-plane array (MSB first along `axis`) to binary planes.
+
+    This mirrors the hardware: each binary bit is the XOR of all higher-order
+    Gray bits (paper eq. for b_i). Accepts numpy or jax arrays of 0/1.
+    """
+    xp = jnp if not isinstance(bits_array, np.ndarray) else np
+    moved = xp.moveaxis(bits_array, axis, 0)
+    acc = xp.cumsum(moved.astype(xp.int32), axis=0) % 2  # XOR prefix of 0/1
+    return xp.moveaxis(acc.astype(bits_array.dtype), 0, axis)

@@ -1,0 +1,264 @@
+"""Fixed-point formats and quantizers used by Compute-ACAM numerics.
+
+The paper uses S-I-F notation (sign / integer / fraction bits) for fixed-point
+data, uniform symmetric quantization for tensors, and Power-of-Two (PoT)
+quantization for the outputs of exponent functions (Section VIII-C).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FixedPointFormat",
+    "ScaledFormat",
+    "PoTFormat",
+    "QuantizedTensor",
+    "quantize_tensor",
+    "dequantize_tensor",
+    "fake_quant",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointFormat:
+    """An S-I-F fixed point format, e.g. 1-0-3 = sign + 0 int bits + 3 frac bits.
+
+    Codes are two's-complement integers in [-2^(n-1), 2^(n-1)) for signed
+    formats, [0, 2^n) for unsigned; value = code * 2^-frac_bits.
+    """
+
+    int_bits: int
+    frac_bits: int
+    signed: bool = True
+
+    @property
+    def bits(self) -> int:
+        return int(self.signed) + self.int_bits + self.frac_bits
+
+    @property
+    def scale(self) -> float:
+        return 2.0 ** (-self.frac_bits)
+
+    @property
+    def num_codes(self) -> int:
+        return 1 << self.bits
+
+    @property
+    def code_min(self) -> int:
+        return -(1 << (self.bits - 1)) if self.signed else 0
+
+    @property
+    def code_max(self) -> int:
+        return (1 << (self.bits - 1)) - 1 if self.signed else (1 << self.bits) - 1
+
+    @property
+    def min_value(self) -> float:
+        return self.code_min * self.scale
+
+    @property
+    def max_value(self) -> float:
+        return self.code_max * self.scale
+
+    def __str__(self) -> str:  # S-I-F, as in the paper
+        return f"{int(self.signed)}-{self.int_bits}-{self.frac_bits}"
+
+    # ---- encoding / decoding (work on numpy or jax arrays) ----
+    def encode(self, x):
+        """Float -> two's complement code (saturating round-to-nearest-even)."""
+        xp = jnp if isinstance(x, jax.Array) else np
+        c = xp.clip(xp.round(x / self.scale), self.code_min, self.code_max)
+        return c.astype(xp.int32)
+
+    def decode(self, code):
+        xp = jnp if isinstance(code, jax.Array) else np
+        return code.astype(xp.float32) * self.scale
+
+    def to_unsigned(self, code):
+        """Two's-complement code -> unsigned LUT index in [0, 2^n)."""
+        if not self.signed:
+            return code
+        return code + (1 << (self.bits - 1))
+
+    def from_unsigned(self, u):
+        if not self.signed:
+            return u
+        return u - (1 << (self.bits - 1))
+
+    def to_bits(self, code) -> np.ndarray:
+        """Unsigned bit-pattern of the two's-complement code (numpy)."""
+        u = np.asarray(self.to_unsigned(np.asarray(code)))
+        return u.astype(np.uint32)
+
+    def all_codes_value_order(self) -> np.ndarray:
+        """All codes sorted by their analog (decoded) value, ascending."""
+        return np.arange(self.code_min, self.code_max + 1, dtype=np.int64)
+
+    def quantize_value(self, x):
+        """Round-trip through the format (= what ACAM output quantization does)."""
+        return self.decode(self.encode(x))
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaledFormat:
+    """Integer format with an arbitrary (calibrated) float scale.
+
+    Same interface as FixedPointFormat; used when a power-of-two step is too
+    coarse/fine — e.g. the paper's "straightforward uniform quantization" of
+    exp outputs (§VIII-C ablation), or calibrated activation formats.
+    """
+
+    scale_value: float
+    bits: int = 8
+    signed: bool = True
+
+    @property
+    def scale(self) -> float:
+        return self.scale_value
+
+    @property
+    def num_codes(self) -> int:
+        return 1 << self.bits
+
+    @property
+    def code_min(self) -> int:
+        return -(1 << (self.bits - 1)) if self.signed else 0
+
+    @property
+    def code_max(self) -> int:
+        return (1 << (self.bits - 1)) - 1 if self.signed else (1 << self.bits) - 1
+
+    @property
+    def min_value(self) -> float:
+        return self.code_min * self.scale
+
+    @property
+    def max_value(self) -> float:
+        return self.code_max * self.scale
+
+    def encode(self, x):
+        xp = jnp if isinstance(x, jax.Array) else np
+        c = xp.clip(xp.round(x / self.scale), self.code_min, self.code_max)
+        return c.astype(xp.int32)
+
+    def decode(self, code):
+        xp = jnp if isinstance(code, jax.Array) else np
+        return code.astype(xp.float32) * self.scale
+
+    def to_unsigned(self, code):
+        return code + (1 << (self.bits - 1)) if self.signed else code
+
+    def from_unsigned(self, u):
+        return u - (1 << (self.bits - 1)) if self.signed else u
+
+    def to_bits(self, code) -> np.ndarray:
+        return np.asarray(self.to_unsigned(np.asarray(code))).astype(np.uint32)
+
+    def all_codes_value_order(self) -> np.ndarray:
+        return np.arange(self.code_min, self.code_max + 1, dtype=np.int64)
+
+    def quantize_value(self, x):
+        return self.decode(self.encode(x))
+
+
+@dataclasses.dataclass(frozen=True)
+class PoTFormat:
+    """Power-of-Two quantization for non-negative values (exp outputs).
+
+    Code 0 represents exactly 0; code c >= 1 represents
+    2^(e_min + (c-1)*octave_step). octave_step=1 is the paper's PoT (§VIII-C):
+    255 integer octaves of dynamic range. octave_step<1 ("fractional PoT",
+    i.e. log-domain uniform) is our beyond-paper refinement — same ACAM table
+    cost, ~step/2 octaves of relative error instead of +-0.5 octave.
+    """
+
+    e_min: int
+    bits: int = 8
+    octave_step: float = 1.0
+
+    @property
+    def num_codes(self) -> int:
+        return 1 << self.bits
+
+    @property
+    def e_max(self) -> float:
+        return self.e_min + (self.num_codes - 2) * self.octave_step
+
+    def encode(self, x):
+        xp = jnp if isinstance(x, jax.Array) else np
+        x = xp.asarray(x, xp.float64 if xp is np else xp.float32)
+        safe = xp.maximum(x, 2.0 ** (self.e_min - 1))
+        e = xp.clip(xp.round((xp.log2(safe) - self.e_min) / self.octave_step),
+                    0, self.num_codes - 2)
+        code = (e + 1).astype(xp.int32)
+        return xp.where(x < 2.0 ** (self.e_min - self.octave_step / 2), 0, code)
+
+    def decode(self, code):
+        xp = jnp if isinstance(code, jax.Array) else np
+        dt = xp.float64 if xp is np else xp.float32
+        e = (code - 1).astype(dt) * self.octave_step + self.e_min
+        val = xp.exp2(xp.minimum(e, 126.0).astype(dt))
+        return xp.where(code == 0, xp.zeros((), dt), val)
+
+    def quantize_value(self, x):
+        return self.decode(self.encode(x))
+
+    def all_codes_value_order(self) -> np.ndarray:
+        # PoT codes are already monotone in value: 0, 2^e_min, 2^(e_min+1), ...
+        return np.arange(self.num_codes, dtype=np.int64)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Symmetric-quantized integer tensor + scale (per-tensor or per-channel)."""
+
+    codes: jax.Array  # int8 / int32
+    scale: jax.Array  # f32, broadcastable to codes
+    bits: int = 8
+
+    def dequantize(self) -> jax.Array:
+        return self.codes.astype(jnp.float32) * self.scale
+
+    def tree_flatten(self):
+        return (self.codes, self.scale), (self.bits,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+
+def _qrange(bits: int) -> int:
+    return (1 << (bits - 1)) - 1
+
+
+@partial(jax.jit, static_argnames=("bits", "axis"))
+def quantize_tensor(x: jax.Array, bits: int = 8, axis=None) -> QuantizedTensor:
+    """Symmetric max-abs quantization. axis=None -> per-tensor scale;
+    axis=k -> per-channel scales along every dim except k reduced."""
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        reduce_dims = tuple(d for d in range(x.ndim) if d != axis)
+        amax = jnp.max(jnp.abs(x), axis=reduce_dims, keepdims=True)
+    qmax = _qrange(bits)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    codes = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    dtype = jnp.int8 if bits <= 8 else jnp.int32
+    return QuantizedTensor(codes.astype(dtype), scale.astype(jnp.float32), bits)
+
+
+def dequantize_tensor(q: QuantizedTensor) -> jax.Array:
+    return q.dequantize()
+
+
+@partial(jax.jit, static_argnames=("bits", "axis"))
+def fake_quant(x: jax.Array, bits: int = 8, axis=None) -> jax.Array:
+    """Quantize-dequantize with a straight-through gradient (QAT helper)."""
+    q = quantize_tensor(jax.lax.stop_gradient(x), bits=bits, axis=axis)
+    y = q.dequantize()
+    return x + jax.lax.stop_gradient(y - x)

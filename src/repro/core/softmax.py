@@ -1,0 +1,57 @@
+"""The Compute-ACAM Softmax dataflow (paper Figure 8 and §IV-C).
+
+softmax(x)_i = exp(x_i) / sum_j exp(x_j), computed without divider hardware via
+a/b = exp(log a - log b):
+
+  1. e_i = EXP(x_i)         8-bit 1-var Compute-ACAM, PoT-quantized output
+  2. S   = sum_i e_i        CMOS adder lane
+  3. L   = LOG(S)           8-bit 1-var Compute-ACAM (log(0) := min code)
+  4. d_i = x_i - L          CMOS adder lane (subtract)
+  5. p_i = EXP(d_i)         8-bit 1-var Compute-ACAM, uniform [0,1) output
+
+`mode="pot"` is the paper's configuration; `mode="uniform"` reproduces the
+Fig. 14 ablation where step 1 uses straightforward uniform quantization and
+accuracy collapses (exp outputs are exponentially distributed, so a uniform
+8-bit grid zeroes almost everything).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ops
+from .ops import LOGIT_FMT, LOG_OUT_FMT
+
+__all__ = ["acam_softmax", "softmax_reference"]
+
+
+def softmax_reference(x: jax.Array, axis: int = -1) -> jax.Array:
+    return jax.nn.softmax(x, axis=axis)
+
+
+@partial(jax.jit, static_argnames=("axis", "mode", "hw"))
+def acam_softmax(x: jax.Array, axis: int = -1, mode: str = "pot", hw: bool = False) -> jax.Array:
+    """Softmax over float logits with full ACAM integer semantics.
+
+    x is first quantized into the div-add stage's LOGIT format (1-4-3); masked
+    positions should already be at LOGIT_FMT.min_value.
+    """
+    exp_name = {"pot": "exp_pot", "pot_fine": "exp_pot_fine", "uniform": "exp_uniform"}[mode]
+    exp_op = ops.get_op(exp_name)
+    log_op = ops.get_op("log_fine" if mode == "pot_fine" else "log")
+    final_op = ops.get_op("exp_prob")
+
+    xc = LOGIT_FMT.encode(x)  # step 0: output of the div-add stage
+    e_codes = exp_op.apply_codes(xc, hw=hw)  # step 1
+    e_vals = exp_op.out_fmt.decode(e_codes)
+    S = jnp.sum(e_vals, axis=axis, keepdims=True)  # step 2 (adder lane)
+    s_codes = log_op.in_fmt.encode(S)  # PoT re-quantization of the sum
+    L = log_op.apply_codes(s_codes, hw=hw)  # step 3, LOG_OUT (1-5-2) codes
+    # step 4: subtract in a common fixed-point grid. LOGIT has 3 frac bits,
+    # LOG_OUT has 2 -> shift L left by 1. Saturate to the exp table's domain.
+    d = xc - (L << (LOGIT_FMT.frac_bits - LOG_OUT_FMT.frac_bits))
+    d = jnp.clip(d, LOGIT_FMT.code_min, LOGIT_FMT.code_max)
+    p = final_op.apply_codes(d, hw=hw)  # step 5
+    return final_op.out_fmt.decode(p)

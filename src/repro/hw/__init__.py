@@ -1,0 +1,1 @@
+from . import area, gce, params, simulator  # noqa: F401

@@ -1,0 +1,4 @@
+from .ops import (  # noqa: F401
+    acam_lut, acam_lut_2d, acam_mvm, acam_softmax_codes, acam_softmax_kernel,
+    acam_activation, raceit_linear,
+)

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: Compute-ACAM 1-variable op as a vectorized 256-entry LUT.
+
+Hardware adaptation (DESIGN.md §2): an ACAM array's OR-of-ranges per output
+bit is provably equivalent to a 2^n-entry table, so the TPU-native form of an
+8-bit Compute-ACAM op is a 256-entry lookup over int8 codes. The kernel biases
+two's-complement codes to unsigned positions and gathers from a VMEM-resident
+table; on TPU the gather vectorizes on the VPU (or lowers to a one-hot matmul
+on the MXU for very wide tiles). Tiles are (block_rows x 128)-aligned so the
+lane dimension matches the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+LANES = 128
+
+
+def _lut_kernel(x_ref, lut_ref, o_ref, *, bias: int):
+    x = x_ref[...].astype(jnp.int32) + bias  # codes -> unsigned positions
+    o_ref[...] = lut_ref[x].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bias", "block_rows", "interpret"))
+def acam_lut_2d(x: jax.Array, lut: jax.Array, bias: int = 128,
+                block_rows: int = DEFAULT_BLOCK_ROWS,
+                interpret: bool = True) -> jax.Array:
+    """Apply an ACAM LUT to a 2-D int tensor of shape (R, C).
+
+    x: int8/int32 codes in [-2^(n-1), 2^(n-1)); lut: (2^n,) output codes.
+    Rows/cols are padded to tile boundaries and cropped after.
+    """
+    R, C = x.shape
+    br = min(block_rows, max(8, R))
+    pad_r = (-R) % br
+    pad_c = (-C) % LANES
+    xp = jnp.pad(x, ((0, pad_r), (0, pad_c)))
+    Rp, Cp = xp.shape
+
+    out = pl.pallas_call(
+        functools.partial(_lut_kernel, bias=bias),
+        out_shape=jax.ShapeDtypeStruct((Rp, Cp), jnp.int32),
+        in_specs=[
+            pl.BlockSpec((br, Cp), lambda i: (i, 0)),
+            pl.BlockSpec((lut.shape[0],), lambda i: (0,)),  # table in VMEM
+        ],
+        out_specs=pl.BlockSpec((br, Cp), lambda i: (i, 0)),
+        grid=(Rp // br,),
+        interpret=interpret,
+    )(xp, lut.astype(jnp.int32))
+    return out[:R, :C]
+
+
+def acam_lut(x: jax.Array, lut: jax.Array, bias: int = 128,
+             interpret: bool = True) -> jax.Array:
+    """N-D wrapper: flatten leading dims to rows."""
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1]) if x.ndim >= 2 else x.reshape(1, -1)
+    y = acam_lut_2d(flat, lut, bias=bias, interpret=interpret)
+    return y.reshape(shape)

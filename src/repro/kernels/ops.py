@@ -1,0 +1,42 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+These are the entry points the serving stack uses on TPU; `interpret=True`
+(the default in this CPU container) executes the kernel bodies in Python for
+bit-exact validation against ref.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops as acam_ops
+from repro.core.crossbar import CrossbarConfig
+from repro.core.quant import quantize_tensor
+
+from .acam_lut import acam_lut, acam_lut_2d  # noqa: F401
+from .acam_mvm import acam_mvm  # noqa: F401
+from .acam_softmax import acam_softmax_codes, acam_softmax_kernel  # noqa: F401
+
+
+def acam_activation(x: jax.Array, name: str = "gelu",
+                    interpret: bool = True) -> jax.Array:
+    """Float tensor through a named Compute-ACAM activation (kernelized)."""
+    op = acam_ops.get_op(name)
+    codes = op.in_fmt.encode(x)
+    out = acam_lut(codes, jnp.asarray(op._lut), bias=1 << (op.in_fmt.bits - 1),
+                   interpret=interpret)
+    return op.out_fmt.decode(out)
+
+
+def raceit_linear(x: jax.Array, w: jax.Array,
+                  cfg: CrossbarConfig = CrossbarConfig(),
+                  interpret: bool = True) -> jax.Array:
+    """Float linear layer on the kernelized crossbar DPE lane."""
+    xq = quantize_tensor(x.astype(jnp.float32), bits=cfg.input_bits)
+    wq = quantize_tensor(w.astype(jnp.float32), bits=cfg.weight_bits, axis=1)
+    lead = x.shape[:-1]
+    y = acam_mvm(xq.codes.reshape(-1, x.shape[-1]), wq.codes, cfg,
+                 interpret=interpret)
+    return (y.astype(jnp.float32) * (xq.scale * wq.scale)).reshape(*lead, -1)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops as acam_ops
+from repro.core.crossbar import CrossbarConfig, bit_sliced_matmul
+from repro.core.ops import LOGIT_FMT
+from repro.core.softmax import acam_softmax as _core_acam_softmax
+
+
+def lut_ref(x: jax.Array, lut: jax.Array, bias: int = 128) -> jax.Array:
+    """Oracle for kernels.acam_lut: plain gather."""
+    return jnp.take(lut.astype(jnp.int32), x.astype(jnp.int32) + bias, axis=0)
+
+
+def mvm_ref(x: jax.Array, w: jax.Array,
+            cfg: CrossbarConfig = CrossbarConfig()) -> jax.Array:
+    """Oracle for kernels.acam_mvm: core.crossbar bit-sliced matmul."""
+    return bit_sliced_matmul(x.astype(jnp.int32), w.astype(jnp.int32), cfg)
+
+
+def mvm_exact_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return x.astype(jnp.int32) @ w.astype(jnp.int32)
+
+
+def softmax_codes_ref(x_codes: jax.Array, mode: str = "pot") -> jax.Array:
+    """Oracle for kernels.acam_softmax: the core Fig.-8 dataflow on codes."""
+    prob_op = acam_ops.get_op("exp_prob")
+    x = LOGIT_FMT.decode(x_codes)
+    p = _core_acam_softmax(x, axis=-1, mode=mode)
+    return prob_op.out_fmt.encode(p)
+
+
+def softmax_ref(x: jax.Array, mode: str = "pot") -> jax.Array:
+    return _core_acam_softmax(x, axis=-1, mode=mode)

@@ -1,0 +1,379 @@
+"""Static cost analysis of compiled (post-SPMD) HLO text.
+
+XLA's HloCostAnalysis counts `while` bodies once, which silently underreports
+scanned-layer programs by ~n_layers x. This analyzer walks the computation
+call graph with loop trip counts (from `backend_config.known_trip_count`) and
+produces per-device totals:
+
+* flops            — 2*M*N*K for every dot (incl. dots inside fusions)
+* memory_bytes     — HBM traffic model: result + operand bytes of every
+                     materialized top-level instruction (fusion internals are
+                     free; parameters/tuples/bitcasts are not traffic)
+* collective_bytes — link-traffic model per op type (ring algorithms):
+                     all-gather/all-to-all/permute ~= result bytes,
+                     reduce-scatter ~= input bytes, all-reduce ~= 2x input
+
+These feed the three roofline terms in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+__all__ = ["HloCost", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%(?P<name>[\w.\-]+) = (?P<type>.+?) "
+    r"(?P<op>[\w\-]+)\((?P<rest>.*)$")
+_CALLED_RE = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)="
+                        r"\{?%?([\w.\-]+(?:, ?%[\w.\-]+)*)\}?")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_SKIP_MEM_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "rng-bit-generator",
+    "copy-start", "copy-done", "opt-barrier",
+}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_elems(type_str: str) -> int:
+    m = _ARRAY_RE.search(type_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _ARRAY_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    memory_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_type: dict = dataclasses.field(default_factory=dict)
+    collective_count: int = 0
+    notes: list = dataclasses.field(default_factory=list)
+
+    def scaled(self, k: float) -> "HloCost":
+        return HloCost(
+            self.flops * k, self.memory_bytes * k, self.collective_bytes * k,
+            {t: v * k for t, v in self.collective_by_type.items()},
+            int(self.collective_count * k), list(self.notes))
+
+    def add(self, other: "HloCost"):
+        self.flops += other.flops
+        self.memory_bytes += other.memory_bytes
+        self.collective_bytes += other.collective_bytes
+        for t, v in other.collective_by_type.items():
+            self.collective_by_type[t] = self.collective_by_type.get(t, 0.0) + v
+        self.collective_count += other.collective_count
+
+    def to_dict(self) -> dict:
+        return {"flops": self.flops, "memory_bytes": self.memory_bytes,
+                "collective_bytes": self.collective_bytes,
+                "collective_by_type": self.collective_by_type,
+                "collective_count": self.collective_count, "notes": self.notes}
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur_name, cur_lines = None, []
+    for line in text.splitlines():
+        stripped = line.rstrip()
+        if cur_name is None:
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$", stripped)
+            if m:
+                cur_name = m.group(1)
+                cur_lines = []
+                if stripped.startswith("ENTRY"):
+                    comps["__entry__"] = cur_lines
+        else:
+            if stripped == "}":
+                comps[cur_name] = comps.get(cur_name, cur_lines)
+                if cur_lines is not comps[cur_name]:
+                    comps[cur_name] = cur_lines
+                cur_name = None
+            else:
+                cur_lines.append(stripped)
+    return comps
+
+
+def _fusion_traffic(comp_lines: list[str], operand_bytes_by_idx: dict,
+                    result_bytes: int) -> float:
+    """HBM traffic of a fusion: full reads of non-sliced params, slice-sized
+    reads for params consumed via dynamic-slice/gather, in-place accounting
+    for root dynamic-update-slice (update-sized write, aliased result)."""
+    params: dict[str, int] = {}
+    defs: dict[str, tuple] = {}
+    root_line = None
+    all_ops = set()
+    for line in comp_lines:
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, itype, op, rest = (m.group("name"), m.group("type"),
+                                 m.group("op"), m.group("rest"))
+        ops = re.findall(r"%([\w.\-]+)", rest.split("), ")[0])
+        defs[name] = (op, itype, ops)
+        all_ops.add(op)
+        if op == "parameter":
+            pm = re.match(r"(\d+)\)", rest)
+            if pm:
+                params[name] = int(pm.group(1))
+        if line.strip().startswith("ROOT"):
+            root_line = (op, itype, ops)
+
+    # Fusions made only of dtype/layout plumbing are CPU bf16-emulation
+    # artifacts; a TPU backend never materializes them. Zero traffic.
+    if all_ops <= {"parameter", "constant", "convert", "bitcast", "reshape",
+                   "copy", "transpose", "reduce-precision", "tuple",
+                   "get-tuple-element"}:
+        return 0.0
+
+    def resolve_param(name: str, depth=0):
+        """Walk through layout/precision-preserving ops to a parameter index.
+
+        convert/reduce-precision are included deliberately: the CPU backend
+        emulates bf16 by upcasting whole buffers around in-place updates —
+        a TPU backend keeps the buffer dtype and updates in place, which is
+        the semantics the roofline should reflect."""
+        while depth < 10 and name in defs:
+            op, _, ops = defs[name]
+            if op == "parameter":
+                return params.get(name)
+            if op in ("bitcast", "reshape", "copy", "transpose", "convert",
+                      "reduce-precision") and ops:
+                name = ops[0]
+                depth += 1
+                continue
+            return None
+        return None
+
+    sliced: set[int] = set()
+    excluded: set[int] = set()
+    extra = 0.0
+    # root may be convert(DUS(...)) on the CPU backend: walk through wrappers
+    root_is_dus = False
+    if root_line is not None:
+        op, _, ops = root_line
+        depth = 0
+        while depth < 10:
+            if op == "dynamic-update-slice":
+                root_is_dus = True
+                break
+            if op in ("bitcast", "reshape", "copy", "transpose", "convert",
+                      "reduce-precision") and ops and ops[0] in defs:
+                op, _, ops = defs[ops[0]]
+                depth += 1
+                continue
+            break
+    for name, (op, itype, ops) in defs.items():
+        if op in ("dynamic-slice", "gather") and ops:
+            idx = resolve_param(ops[0])
+            if idx is not None:
+                sliced.add(idx)
+                extra += _type_bytes(itype)  # read only the slice
+        if op == "dynamic-update-slice" and len(ops) >= 2:
+            tgt = resolve_param(ops[0])
+            if tgt is not None:
+                excluded.add(tgt)  # aliased in-place target: not re-read
+            upd = resolve_param(ops[1])
+            ub = (operand_bytes_by_idx.get(upd, 0) if upd is not None
+                  else _type_bytes(defs.get(ops[1], ("", "", []))[1]))
+            extra += 2.0 * ub  # write the region (+ its read-modify)
+    total = extra
+    for idx, b in operand_bytes_by_idx.items():
+        if idx not in sliced and idx not in excluded:
+            total += b
+    if not root_is_dus:
+        total += result_bytes
+    return total
+
+
+def _collective_traffic(op: str, result_bytes: int, operand_bytes: int,
+                        group: int) -> float:
+    if op == "all-gather":
+        return float(result_bytes)
+    if op == "all-reduce":
+        return 2.0 * operand_bytes
+    if op == "reduce-scatter":
+        return float(operand_bytes)
+    return float(max(result_bytes, operand_bytes))  # all-to-all / permute
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = _split_computations(text)
+    # find entry: computation named like main / with ENTRY marker
+    entry = None
+    for name in comps:
+        if name.startswith("main"):
+            entry = name
+    if entry is None:
+        entry = next(iter(comps))
+
+    memo: dict[str, HloCost] = {}
+
+    def comp_cost(name: str) -> HloCost:
+        if name in memo:
+            return memo[name]
+        memo[name] = HloCost()  # cycle guard
+        lines = comps.get(name, [])
+        symtab: dict[str, str] = {}
+        cost = HloCost()
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            iname, itype, op, rest = (m.group("name"), m.group("type"),
+                                      m.group("op"), m.group("rest"))
+            symtab[iname] = itype
+
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            iname, itype, op, rest = (m.group("name"), m.group("type"),
+                                      m.group("op"), m.group("rest"))
+            called = []
+            for grp in _CALLED_RE.findall(line):
+                for c in grp.split(","):
+                    called.append(c.strip().lstrip("%"))
+            # operand names = %refs in the call parens, excluding called comps
+            paren = rest.split("), ")[0]
+            operands = [o.lstrip("%") for o in re.findall(r"%([\w.\-]+)", paren)
+                        if o.lstrip("%") not in called]
+            operand_bytes = sum(_type_bytes(symtab.get(o, "")) for o in operands)
+            result_bytes = _type_bytes(itype)
+
+            base_op = op[:-6] if op.endswith("-start") else op
+            if op.endswith("-done"):
+                continue
+            if base_op in _COLLECTIVES:
+                grp_sz = _group_size(line)
+                traffic = _collective_traffic(base_op, result_bytes,
+                                              operand_bytes, grp_sz)
+                # scale to the fraction actually crossing links: (g-1)/g
+                if grp_sz > 1:
+                    traffic *= (grp_sz - 1) / grp_sz
+                else:
+                    traffic = 0.0
+                cost.collective_bytes += traffic
+                cost.collective_by_type[base_op] = (
+                    cost.collective_by_type.get(base_op, 0.0) + traffic)
+                cost.collective_count += 1
+                cost.memory_bytes += result_bytes + operand_bytes
+                continue
+
+            if op == "dot":
+                cd = _CDIMS_RE.search(line)
+                lhs_type = symtab.get(operands[0], "") if operands else ""
+                lhs_dims = _shape_dims(lhs_type)
+                contract = 1
+                if cd and cd.group(1):
+                    for d in cd.group(1).split(","):
+                        if int(d) < len(lhs_dims):
+                            contract *= lhs_dims[int(d)]
+                cost.flops += 2.0 * _type_elems(itype) * contract
+            if op == "convolution":
+                # rough: 2 * result_elems * (operand1 elems / out_channels)
+                cost.flops += 2.0 * _type_elems(itype) * max(
+                    1, _type_elems(symtab.get(operands[1], "")) // max(
+                        1, _shape_dims(itype)[-1] if _shape_dims(itype) else 1))
+
+            if op == "while":
+                trips = 1
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    trips = int(tm.group(1))
+                else:
+                    cost.notes.append(f"unknown trip count for {iname}")
+                body = [c for c in called if "region" in c or "body" in c.lower()]
+                for c in called:
+                    sub = comp_cost(c)
+                    cost.add(sub.scaled(trips))
+                cost.memory_bytes += result_bytes
+                continue
+
+            if op in ("fusion", "call", "conditional", "custom-call",
+                      "reduce", "sort", "scatter", "map", "reduce-window",
+                      "select-and-scatter"):
+                for c in called:
+                    sub = comp_cost(c)
+                    # fusion internals: count only flops (memory stays at the
+                    # fusion boundary); calls/conditionals count fully.
+                    if op == "fusion":
+                        cost.flops += sub.flops
+                        cost.collective_bytes += sub.collective_bytes
+                    else:
+                        cost.add(sub)
+                if op == "fusion" and called:
+                    ob_idx = {i: _type_bytes(symtab.get(o, ""))
+                              for i, o in enumerate(operands)}
+                    cost.memory_bytes += _fusion_traffic(
+                        comps.get(called[0], []), ob_idx, result_bytes)
+                else:
+                    cost.memory_bytes += result_bytes + operand_bytes
+                continue
+
+            # slicing ops touch only the slice, not the backing buffer;
+            # dynamic-update-slice writes in place (result aliases operand 0).
+            if op in ("dynamic-slice", "gather"):
+                cost.memory_bytes += 2.0 * result_bytes
+                continue
+            if op == "dynamic-update-slice":
+                upd = (_type_bytes(symtab.get(operands[1], ""))
+                       if len(operands) > 1 else 0)
+                cost.memory_bytes += 2.0 * upd
+                continue
+            if op not in _SKIP_MEM_OPS:
+                cost.memory_bytes += result_bytes + operand_bytes
+        memo[name] = cost
+        return cost
+
+    return comp_cost(entry)

@@ -1,0 +1,150 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation ever happens here: params/opt/caches come from
+jax.eval_shape over the real init functions, and inputs are synthesized
+ShapeDtypeStructs with NamedShardings attached (weak-type-correct and
+shardable, per the dry-run contract).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.dist.sharding import MeshContext, ShardingPolicy, param_specs
+
+__all__ = ["input_specs", "cache_specs", "attach", "batch_specs", "model_flops"]
+
+
+def attach(shapes_tree, shard_tree):
+    """Zip ShapeDtypeStructs with NamedShardings."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes_tree, shard_tree)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, policy: ShardingPolicy):
+    """Input batch ShapeDtypeStructs (+shardings) for a cell."""
+    mesh = policy.mesh
+    B, S = shape.global_batch, shape.seq_len
+    tok_spec = policy.spec_for((B, S), ("batch", None))
+    out = {"tokens": jax.ShapeDtypeStruct(
+        (B, S), jnp.int32, sharding=NamedSharding(mesh, tok_spec))}
+    if cfg.frontend in ("audio_stub", "vision_stub") or cfg.is_encoder_decoder:
+        # precomputed frame/patch embeddings from the (stub) modality frontend
+        enc_len = cfg.encoder_len
+        fe_spec = policy.spec_for((B, enc_len, cfg.d_model), ("batch", None, None))
+        out["enc_feats"] = jax.ShapeDtypeStruct(
+            (B, enc_len, cfg.d_model), jnp.bfloat16,
+            sharding=NamedSharding(mesh, fe_spec))
+    return out
+
+
+def _cache_axes_for(path: str, shape: tuple) -> tuple:
+    name = path.split("/")[-1]
+    if name in ("k", "v") or "enc_kv" in path:
+        return ("batch", "seq", None, None) if len(shape) == 4 else \
+               tuple(None for _ in shape)
+    if name == "state":
+        return ("batch", "heads", "headdim", None)
+    if name.startswith("conv"):
+        return ("batch", None, "heads")
+    return tuple(None for _ in shape)
+
+
+def cache_specs(cache_shapes, policy: ShardingPolicy):
+    flat = jax.tree_util.tree_flatten_with_path(cache_shapes)[0]
+    treedef = jax.tree_util.tree_structure(cache_shapes)
+    out = []
+    for keypath, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath)
+        stacked = path.split("/")[0] == "scan" and leaf.ndim >= 1
+        base_shape = leaf.shape[1:] if stacked else leaf.shape
+        axes = _cache_axes_for(path, base_shape)
+        if len(axes) != len(base_shape):
+            axes = tuple(None for _ in base_shape)
+        if stacked:
+            axes = (None,) + axes
+        out.append(policy.spec_for(leaf.shape, axes))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def make_policy(mesh, cfg: ModelConfig, shape: ShapeSpec) -> ShardingPolicy:
+    """Shape-aware policy: when the batch can't use the dp axes (B=1 long
+    decode), hand them to the sequence dimension of caches instead."""
+    policy = ShardingPolicy(mesh)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    if shape.global_batch % dp_size != 0:
+        policy.axis_map = dict(policy.axis_map)
+        policy.axis_map["seq"] = dp + ("model",)
+    return policy
+
+
+def model_flops(cfg: ModelConfig, params, shape: ShapeSpec) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*D train / 2*N_active*D inference."""
+    sizes = {}
+    for keypath, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath)
+        sizes[path] = int(np.prod(leaf.shape))
+    total = sum(sizes.values())
+    moe = sum(v for p, v in sizes.items() if "moe" in p and p.split("/")[-1] in
+              ("w1", "w2", "w3"))
+    emb = sum(v for p, v in sizes.items() if p.split("/")[-1] in
+              ("tok_emb", "pos_emb"))
+    n_active = total - emb - (moe * (1 - cfg.top_k / max(cfg.n_experts, 1))
+                              if cfg.n_experts else 0)
+    if cfg.tie_embeddings:
+        n_active += cfg.vocab_size * cfg.d_model  # unembed matmul reuses tok_emb
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, policy: ShardingPolicy,
+                model, quantize: bool = False) -> dict:
+    """Everything the step function needs, as sharded ShapeDtypeStructs."""
+    from repro.dist.sharding import named_sharding_tree
+    from repro.train import optim
+
+    mesh = policy.mesh
+    rng = jax.random.PRNGKey(0)
+    if quantize:  # resident int8 crossbar weights (serving, paper-faithful)
+        from repro.models.model import quantize_model_params
+        params_shapes = jax.eval_shape(
+            lambda r: quantize_model_params(model.init(r)), rng)
+    else:
+        params_shapes = jax.eval_shape(model.init, rng)
+    pspecs = param_specs(params_shapes, cfg, policy)
+    params_sds = attach(params_shapes, named_sharding_tree(pspecs, mesh))
+    out = {"params": params_sds, "param_specs": pspecs}
+
+    if shape.kind == "train":
+        opt_shapes = jax.eval_shape(optim.adamw_init, params_shapes)
+        ospecs = {"mu": pspecs, "nu": pspecs, "step": P()}
+        out["opt_state"] = attach(opt_shapes, named_sharding_tree(ospecs, mesh))
+        out["ospecs"] = ospecs
+        out["batch"] = batch_specs(cfg, shape, policy)
+    elif shape.kind == "prefill":
+        out["batch"] = batch_specs(cfg, shape, policy)
+        if cfg.family != "encoder":
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            cspecs = cache_specs(cache_shapes, policy)
+            out["cache"] = attach(cache_shapes, named_sharding_tree(cspecs, mesh))
+            out["cspecs"] = cspecs
+    else:  # decode
+        B = shape.global_batch
+        tok_spec = policy.spec_for((B, 1), ("batch", None))
+        out["token"] = jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                            sharding=NamedSharding(mesh, tok_spec))
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(B, shape.seq_len))
+        cspecs = cache_specs(cache_shapes, policy)
+        out["cache"] = attach(cache_shapes, named_sharding_tree(cspecs, mesh))
+        out["cspecs"] = cspecs
+    return out

@@ -1,0 +1,68 @@
+"""Serving launcher: load (or init) a model and serve batched requests,
+optionally through the RACE-IT analog-faithful path with resident int8
+crossbar weights.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt2-large --mode raceit_q8 \
+      --set n_layers=2 d_model=128 vocab_size=512 --requests 4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--mode", default="digital",
+                    choices=["digital", "raceit", "raceit_q8"])
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--n-new", type=int, default=8)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--set", nargs="*", default=[])
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.configs.base import ExecConfig
+    from repro.ckpt import CheckpointManager
+    from repro.models import Model
+    from repro.models.model import quantize_model_params
+    from repro.serve import BatchScheduler, GenerationEngine, Request
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+    cfg = get_config(args.arch).replace(
+        param_dtype="float32", compute_dtype="float32", **overrides)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    if args.ckpt:
+        (params, _), _ = CheckpointManager(args.ckpt).restore((params, None))
+    exec_cfg = ExecConfig(mode="raceit" if args.mode.startswith("raceit")
+                          else "digital")
+    if args.mode == "raceit_q8":
+        params = quantize_model_params(params)
+        print("[serve] weights quantized to resident int8 crossbar codes")
+
+    eng = GenerationEngine(cfg, params, exec_cfg=exec_cfg, max_len=128)
+    sched = BatchScheduler(eng, bucket_size=4)
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        sched.submit(Request(rid, rng.integers(0, cfg.vocab_size,
+                                               rng.integers(4, 9)).astype(np.int32),
+                             n_new=args.n_new))
+    done = sched.run_all()
+    for rid in sorted(done):
+        print(f"[serve] req{rid}: {done[rid].result.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,235 @@
+"""BlockPattern machinery: heterogeneous layer stacks under jax.lax.scan.
+
+A config's (mixer_pattern, ffn_pattern) defines a repeating *period* of P
+layers (jamba: P=8 with one attention + 7 mamba and MoE every 2nd; gemma3:
+P=6 with 5 local + 1 global). The stack is executed as
+
+    scan over n_full = n_layers // P repetitions of the period
+      (each period position has its params stacked along the scan dim)
+    + an unrolled tail of n_layers % P layers
+
+which keeps HLO size O(P) instead of O(n_layers) — essential when lowering
+at 512 devices — while preserving the exact layer ordering.
+Caches thread through the scan as per-position stacked pytrees.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ExecConfig, ModelConfig
+from repro.dist.sharding import MeshContext
+
+from repro.dist.sharding import constraint
+
+from . import layers, moe as moe_mod, ssm
+
+Params = dict
+
+
+# --------------------------------------------------------------------------
+# single layer
+# --------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, mixer: str, ffn_kind: str, dtype,
+               cross: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": layers.init_norm(cfg, dtype)}
+    if mixer in ("attn", "attn_local"):
+        p["attn"] = layers.init_attention(ks[0], cfg, dtype)
+    elif mixer == "mamba":
+        p["mamba"] = ssm.init_mamba_with_out(ks[0], cfg, dtype)
+    if cross:
+        p["norm_x"] = layers.init_norm(cfg, dtype)
+        p["cross"] = layers.init_attention(ks[2], cfg, dtype)
+    if ffn_kind == "dense":
+        p["norm2"] = layers.init_norm(cfg, dtype)
+        p["ffn"] = layers.init_ffn(ks[1], cfg, dtype)
+    elif ffn_kind == "moe":
+        p["norm2"] = layers.init_norm(cfg, dtype)
+        p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+    return p
+
+
+def apply_layer(p: Params, x: jax.Array, *, cfg: ModelConfig,
+                exec_cfg: ExecConfig, mixer: str, ffn_kind: str,
+                positions: jax.Array, cache: Optional[Params],
+                mesh_ctx: Optional[MeshContext],
+                enc_kv: Optional[tuple] = None) -> tuple[jax.Array, Any]:
+    h = layers.apply_norm(p["norm1"], x, cfg)
+    if mixer in ("attn", "attn_local"):
+        m, new_cache = layers.attention(
+            p["attn"], h, cfg=cfg, exec_cfg=exec_cfg, positions=positions,
+            local=(mixer == "attn_local"),
+            cache=cache.get("attn") if cache else None)
+        if cache is not None:
+            new_cache = {"attn": new_cache}
+    elif mixer == "mamba":
+        m, new_cache = ssm.mamba(p["mamba"], h, cfg=cfg, exec_cfg=exec_cfg,
+                                 cache=cache.get("mamba") if cache else None)
+        if cache is not None:
+            new_cache = {"mamba": new_cache}
+    else:
+        raise ValueError(mixer)
+    x = x + m
+
+    if "cross" in p and enc_kv is not None:
+        hx = layers.apply_norm(p["norm_x"], x, cfg)
+        cx, _ = layers.attention(p["cross"], hx, cfg=cfg, exec_cfg=exec_cfg,
+                                 positions=positions, cross_kv=enc_kv)
+        x = x + cx
+
+    if ffn_kind == "dense":
+        h2 = layers.apply_norm(p["norm2"], x, cfg)
+        x = x + layers.ffn(p["ffn"], h2, cfg, exec_cfg)
+    elif ffn_kind == "moe":
+        h2 = layers.apply_norm(p["norm2"], x, cfg)
+        x = x + moe_mod.moe(p["moe"], h2, cfg, exec_cfg, mesh_ctx)
+    # sequence-parallel residual stream: the carried activation (and thus the
+    # remat stash) lives sharded over "model"; XLA inserts AG/RS at the
+    # boundaries that need full sequence (Megatron-SP pattern).
+    x = constraint(x, "batch", "sp_seq", None)
+    return x, (new_cache if cache is not None else None)
+
+
+# --------------------------------------------------------------------------
+# cache construction
+# --------------------------------------------------------------------------
+
+def init_layer_cache(cfg: ModelConfig, mixer: str, batch: int, max_len: int,
+                     dtype) -> Optional[Params]:
+    if mixer in ("attn", "attn_local"):
+        hd = cfg.resolved_head_dim
+        # local layers keep a ring buffer of window size (DESIGN.md §4)
+        length = min(max_len, cfg.window) if mixer == "attn_local" else max_len
+        return {"attn": {
+            "k": jnp.zeros((batch, length, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, length, cfg.n_kv_heads, hd), dtype),
+            "idx": jnp.zeros((), jnp.int32),
+        }}
+    if mixer == "mamba":
+        W = cfg.conv_width
+        return {"mamba": {
+            "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim,
+                                cfg.ssm_state), jnp.float32),
+            "conv_x": jnp.zeros((batch, W - 1, cfg.d_inner), dtype),
+            "conv_B": jnp.zeros((batch, W - 1, cfg.ssm_groups * cfg.ssm_state), dtype),
+            "conv_C": jnp.zeros((batch, W - 1, cfg.ssm_groups * cfg.ssm_state), dtype),
+        }}
+    return None
+
+
+# --------------------------------------------------------------------------
+# the stack
+# --------------------------------------------------------------------------
+
+def layer_plan(cfg: ModelConfig, n_layers: Optional[int] = None):
+    n = n_layers if n_layers is not None else cfg.n_layers
+    P = cfg.block_period
+    n_full = n // P
+    specs = [cfg.layer_spec(i) for i in range(n)]
+    return P, n_full, specs
+
+
+def init_stack(key, cfg: ModelConfig, dtype, n_layers: Optional[int] = None,
+               cross: bool = False) -> Params:
+    P, n_full, specs = layer_plan(cfg, n_layers)
+    keys = jax.random.split(key, len(specs))
+    scan_params = []
+    for j in range(P):
+        if n_full == 0:
+            break
+        layer_keys = [keys[r * P + j] for r in range(n_full)]
+        mixer, ffn_kind = specs[j]
+        init_j = partial(init_layer, cfg=cfg, mixer=mixer, ffn_kind=ffn_kind,
+                         dtype=dtype, cross=cross)
+        scan_params.append(jax.vmap(init_j)(jnp.stack(layer_keys)))
+    tail_params = []
+    for i in range(n_full * P, len(specs)):
+        mixer, ffn_kind = specs[i]
+        tail_params.append(init_layer(keys[i], cfg, mixer, ffn_kind, dtype,
+                                      cross=cross))
+    return {"scan": scan_params, "tail": tail_params}
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                     n_layers: Optional[int] = None) -> Params:
+    P, n_full, specs = layer_plan(cfg, n_layers)
+
+    def stack_tree(tree, n):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), tree)
+
+    scan_caches = []
+    for j in range(P):
+        if n_full == 0:
+            break
+        mixer, _ = specs[j]
+        c = init_layer_cache(cfg, mixer, batch, max_len, dtype)
+        scan_caches.append(stack_tree(c, n_full) if c is not None else {})
+    tail_caches = []
+    for i in range(n_full * P, len(specs)):
+        mixer, _ = specs[i]
+        tail_caches.append(init_layer_cache(cfg, mixer, batch, max_len, dtype) or {})
+    return {"scan": scan_caches, "tail": tail_caches}
+
+
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+def apply_stack(params: Params, x: jax.Array, *, cfg: ModelConfig,
+                exec_cfg: ExecConfig, positions: jax.Array,
+                caches: Optional[Params], mesh_ctx: Optional[MeshContext],
+                enc_kv_stack: Optional[list] = None,
+                n_layers: Optional[int] = None,
+                use_remat: bool = False) -> tuple[jax.Array, Optional[Params]]:
+    """Run the stack. caches is the pytree from init_stack_cache (or None)."""
+    P, n_full, specs = layer_plan(cfg, n_layers)
+    has_cache = caches is not None
+
+    if n_full > 0:
+        def body(carry, xs):
+            x = carry
+            p_list, c_list = xs
+            new_cs = []
+            for j in range(P):
+                mixer, ffn_kind = specs[j]
+                cache_j = c_list[j] if has_cache else None
+                x, nc = apply_layer(
+                    p_list[j], x, cfg=cfg, exec_cfg=exec_cfg, mixer=mixer,
+                    ffn_kind=ffn_kind, positions=positions,
+                    cache=(cache_j if cache_j else None), mesh_ctx=mesh_ctx,
+                    enc_kv=None)
+                new_cs.append(nc if nc is not None else {})
+            return x, tuple(new_cs)
+
+        body_fn = _remat_wrap(body, cfg) if use_remat else body
+        scan_caches = tuple(caches["scan"]) if has_cache else tuple(
+            {} for _ in range(P))
+        x, new_scan = jax.lax.scan(
+            body_fn, x, (tuple(params["scan"]), scan_caches),
+            unroll=cfg.scan_unroll)
+    else:
+        new_scan = ()
+
+    new_tail = []
+    for t, i in enumerate(range(n_full * P, len(specs))):
+        mixer, ffn_kind = specs[i]
+        cache_t = caches["tail"][t] if has_cache else None
+        x, nc = apply_layer(
+            params["tail"][t], x, cfg=cfg, exec_cfg=exec_cfg, mixer=mixer,
+            ffn_kind=ffn_kind, positions=positions,
+            cache=(cache_t if cache_t else None), mesh_ctx=mesh_ctx,
+            enc_kv=None)
+        new_tail.append(nc if nc is not None else {})
+
+    new_caches = ({"scan": list(new_scan), "tail": new_tail} if has_cache else None)
+    return x, new_caches

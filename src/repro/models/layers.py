@@ -1,0 +1,503 @@
+"""Transformer building blocks: norms, positions, attention, FFN.
+
+Everything is a pure function over explicit parameter pytrees (dicts). Each
+layer supports two execution modes (ExecConfig.mode):
+
+* ``digital`` — the bf16/f32 baseline;
+* ``raceit`` — the paper's analog-faithful inference path: int8 weights on the
+  crossbar DPE lane (exact-ADC integer matmul, equivalence proven against
+  core.crossbar), Compute-ACAM LUT activations, and the ACAM softmax dataflow
+  inside attention.
+
+Attention uses a KV-chunked online-softmax (flash-style) formulation under
+``jax.lax.scan`` so scores are never fully materialized — required to fit
+prefill_32k in HBM and mirrored by the Pallas kernel.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ExecConfig, ModelConfig
+from repro.core import ops as acam_ops
+from repro.core.ops import LOGIT_FMT
+from repro.core.quant import quantize_tensor
+from repro.core.softmax import acam_softmax
+from repro.dist.sharding import constraint
+
+Params = dict
+NEG_INF = -1e9
+_PROBS_DTYPE = [jnp.bfloat16]  # module-level knob set from ModelConfig
+
+
+import dataclasses
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedWeight:
+    """Resident crossbar weight: int8 codes + per-column scale (static shape)."""
+
+    codes: jax.Array   # (K, N) int8  (or stacked (R, K, N))
+    scale: jax.Array   # (1, N) f32   (or (R, 1, N))
+    shape: tuple       # static out-shape after the contraction dim
+
+    def tree_flatten(self):
+        return (self.codes, self.scale), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+
+def set_perf_knobs(cfg) -> None:
+    """Install per-config perf knobs (called by Model)."""
+    if cfg.attn_probs_dtype == "float32" or cfg.compute_dtype == "float32":
+        _PROBS_DTYPE[0] = jnp.float32  # f32 compute: keep paths bit-consistent
+    else:
+        _PROBS_DTYPE[0] = jnp.bfloat16
+    _linear._f32_out = cfg.matmul_out_dtype == "f32"
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+def _dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dtype) -> Params:
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype),
+                "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {}  # np_layernorm: non-parametric (olmo)
+
+
+def apply_norm(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+    if cfg.norm == "layernorm":
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary positions (standard + M-RoPE)
+# --------------------------------------------------------------------------
+
+def _rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """positions (..., S) -> cos/sin (..., S, head_dim/2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, H, hd). positions: (B, S) or (3, B, S) for M-RoPE."""
+    hd = x.shape[-1]
+    if cfg.pos_emb == "mrope":
+        # M-RoPE (qwen2-vl): the half-dim frequency bands are partitioned into
+        # (t, h, w) sections; each section takes its positions from the
+        # corresponding channel. Text-only inputs use identical channels.
+        if positions.ndim == 2:
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        cos, sin = _rope_angles(positions, hd, cfg.rope_theta)  # (3, B, S, hd/2)
+        secs = np.array(cfg.mrope_sections, np.int64)
+        if secs.sum() != hd // 2:  # reduced smoke configs: rescale sections
+            secs = np.maximum(1, secs * (hd // 2) // secs.sum())
+            secs[-1] = hd // 2 - secs[:-1].sum()
+        sections = np.cumsum(secs)[:-1]
+        cos = jnp.concatenate(
+            [c for c in (jnp.split(cos, sections, axis=-1)[i][i] for i in range(3))], -1)
+        sin = jnp.concatenate(
+            [s for s in (jnp.split(sin, sections, axis=-1)[i][i] for i in range(3))], -1)
+    else:
+        cos, sin = _rope_angles(positions, hd, cfg.rope_theta)  # (B, S, hd/2)
+    cos = cos[:, :, None, :]  # (B, S, 1, hd/2)
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# quantized linear (the crossbar DPE lane, exact-ADC fast path)
+# --------------------------------------------------------------------------
+
+def _linear(x: jax.Array, w: jax.Array, exec_cfg: ExecConfig,
+            bias: Optional[jax.Array] = None) -> jax.Array:
+    """x (..., K) @ w (K, ...) with optional RACE-IT int8 semantics.
+
+    `w` may be a pre-quantized resident weight {"codes": int8 (K, N),
+    "scale": (1, N) f32, "shape": out-shape} — the crossbar-native serving
+    form: weights stored as conductance codes, halving HBM weight traffic.
+    """
+    if isinstance(w, QuantizedWeight):
+        k = w.codes.shape[0]
+        xq = quantize_tensor(x.astype(jnp.float32), bits=exec_cfg.act_bits)
+        y32 = jax.lax.dot(xq.codes.reshape(-1, k).astype(jnp.int32),
+                          w.codes.astype(jnp.int32),
+                          preferred_element_type=jnp.int32)
+        y = y32.astype(jnp.float32) * (xq.scale * w.scale)
+        y = y.reshape(*x.shape[:-1], *w.shape).astype(x.dtype)
+        if bias is not None:
+            y = y + bias.reshape(w.shape).astype(y.dtype)
+        return y
+    k = w.shape[0]
+    w2 = w.reshape(k, -1)
+    if exec_cfg.mode == "raceit":
+        xq = quantize_tensor(x.astype(jnp.float32), bits=exec_cfg.act_bits)
+        wq = quantize_tensor(w2.astype(jnp.float32), bits=exec_cfg.weight_bits, axis=1)
+        y32 = jax.lax.dot(xq.codes.reshape(-1, k).astype(jnp.int32),
+                          wq.codes.astype(jnp.int32),
+                          preferred_element_type=jnp.int32)
+        y = y32.astype(jnp.float32) * (xq.scale * wq.scale)
+        y = y.reshape(*x.shape[:-1], *w.shape[1:]).astype(x.dtype)
+    else:
+        # preferred f32 materializes f32 outputs (and f32 TP collectives);
+        # the MXU accumulates in f32 internally either way, so the default
+        # keeps the boundary in compute dtype and halves collective bytes.
+        pref = jnp.float32 if getattr(_linear, "_f32_out", False) else x.dtype
+        y = jax.lax.dot_general(
+            x, w2.astype(x.dtype), (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=pref).astype(x.dtype)
+        y = y.reshape(*x.shape[:-1], *w.shape[1:])
+    if bias is not None:
+        y = y + bias.reshape(w.shape[1:]).astype(y.dtype)
+    return y
+
+
+def _activation(x: jax.Array, cfg: ModelConfig, exec_cfg: ExecConfig) -> jax.Array:
+    if exec_cfg.mode == "raceit":
+        op = acam_ops.get_op(cfg.activation if cfg.activation in ("gelu", "silu") else "gelu")
+        return op(x.astype(jnp.float32)).astype(x.dtype)
+    return (jax.nn.gelu(x) if cfg.activation == "gelu" else jax.nn.silu(x))
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype) -> Params:
+    hd = cfg.resolved_head_dim
+    heff = cfg.head_pad_to or cfg.n_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (cfg.d_model, heff, hd), dtype),
+        "wk": _dense_init(ks[1], (cfg.d_model, cfg.n_kv_heads, hd), dtype),
+        "wv": _dense_init(ks[2], (cfg.d_model, cfg.n_kv_heads, hd), dtype),
+        "wo": _dense_init(ks[3], (heff, hd, cfg.d_model), dtype,
+                          fan_in=cfg.n_heads * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((heff, hd), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, hd), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, hd), dtype)
+    return p
+
+
+def _split_gqa(q, n_kv):
+    """(B, S, H, hd) -> (B, S, KV, H//KV, hd)."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, hd)
+
+
+def _chunked_attention(q, k, v, mask_fn, chunk: int, scale: float,
+                       exec_cfg: ExecConfig):
+    """Online-softmax attention, scanning over KV chunks, flat-head layout.
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd). KV heads are repeated to H inside
+    each chunk step so scores shard cleanly over "heads" for any GQA ratio.
+    mask_fn(q_idx, k_idx) -> bool.
+    """
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    sk_real = k.shape[1]
+    pad = (-sk_real) % chunk  # e.g. whisper's 1500 encoder frames
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sk = k.shape[1]
+    nchunks = sk // chunk
+    q32 = constraint(q.astype(jnp.float32).transpose(0, 2, 1, 3) * scale,
+                     "batch", "heads", None, None)  # (B,H,Sq,hd)
+    qpos = jnp.arange(sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, c0 = xs
+        kr = jnp.repeat(kc.astype(jnp.float32), rep, axis=2)  # (B,C,H,hd)
+        s = jnp.einsum("bhqd,bchd->bhqc", q32, kr)
+        s = constraint(s, "batch", "heads", None, None)
+        kpos = c0 + jnp.arange(chunk)
+        msk = mask_fn(qpos[:, None], kpos[None, :]) & (kpos < sk_real)[None, :]
+        s = jnp.where(msk[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        # storing p in bf16 halves the dominant HBM tensor of the chunk loop;
+        # the accumulator stays f32 (online-softmax stability)
+        pv = p.astype(_PROBS_DTYPE[0])
+        vr = jnp.repeat(vc.astype(pv.dtype), rep, axis=2)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqc,bchd->bhqd", pv, vr, preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((b, h, sq), NEG_INF, jnp.float32),
+        jnp.zeros((b, h, sq), jnp.float32),
+        constraint(jnp.zeros((b, h, sq, hd), jnp.float32),
+                   "batch", "heads", None, None),
+    )
+    ks = k.reshape(b, nchunks, chunk, kv, hd).swapaxes(0, 1)
+    vs = v.reshape(b, nchunks, chunk, kv, hd).swapaxes(0, 1)
+    c0s = jnp.arange(nchunks) * chunk
+    (m, l, acc), _ = jax.lax.scan(body, init, (ks, vs, c0s))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3)  # (B, Sq, H, hd)
+
+
+def _local_block_attention(q, k, v, window: int, scale: float):
+    """Sliding-window attention in q-blocks: each W-token block attends only
+    its own and the previous KV block (2W keys instead of S), cutting local
+    layers' score FLOPs/bytes by S/(2W) vs the masked-full path.
+    q: (B,S,H,hd); k/v: (B,S,KV,hd); requires S % window == 0.
+    """
+    B, S, H, hd = q.shape
+    kv = k.shape[2]
+    rep = H // kv
+    W = window
+    nb = S // W
+    qb = (q.astype(jnp.float32) * scale).reshape(B, nb, W, H, hd)
+    kb = k.reshape(B, nb, W, kv, hd)
+    vb = v.reshape(B, nb, W, kv, hd)
+    kprev = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :nb]
+    vprev = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :nb]
+    kcat = jnp.repeat(jnp.concatenate([kprev, kb], axis=2), rep, axis=3)
+    vcat = jnp.repeat(jnp.concatenate([vprev, vb], axis=2), rep, axis=3)
+    s = jnp.einsum("bnwhd,bnchd->bnhwc", qb, kcat.astype(jnp.float32))
+    s = constraint(s, "batch", None, "heads", None, None)
+    # mask: causal + window + block-0 has no previous block
+    qpos = jnp.arange(W)[:, None]
+    kpos = (jnp.arange(2 * W) - W)[None, :]
+    base = (kpos <= qpos) & (kpos > qpos - W)  # (W, 2W)
+    blk0 = base & (kpos >= 0)
+    mask = jnp.where((jnp.arange(nb) == 0)[:, None, None], blk0[None], base[None])
+    s = jnp.where(mask[None, :, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(_PROBS_DTYPE[0])
+    o = jnp.einsum("bnhwc,bnchd->bnwhd", p, vcat.astype(p.dtype),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, S, H, hd)
+
+
+def _raceit_full_attention(q, k, v, mask, scale, exec_cfg: ExecConfig):
+    """Analog-faithful attention (quantized matmuls + ACAM softmax).
+
+    q: (B, Sq, H, hd) flat heads; k/v: (B, Sk, KV, hd)."""
+    rep = q.shape[2] // k.shape[2]
+    kf = jnp.repeat(k, rep, axis=2)
+    vf = jnp.repeat(v, rep, axis=2)
+    qq = quantize_tensor(q.astype(jnp.float32) * scale, bits=8)
+    kq = quantize_tensor(kf.astype(jnp.float32), bits=8)
+    vq = quantize_tensor(vf.astype(jnp.float32), bits=8)
+    s32 = jnp.einsum("bqhd,bchd->bhqc", qq.codes.astype(jnp.int32),
+                     kq.codes.astype(jnp.int32))
+    logits = s32.astype(jnp.float32) * (qq.scale * kq.scale)
+    logits = jnp.where(mask[:, None], logits, LOGIT_FMT.min_value)
+    probs = acam_softmax(logits, axis=-1, mode=exec_cfg.softmax_mode)
+    pq = quantize_tensor(probs, bits=8)
+    o32 = jnp.einsum("bhqc,bchd->bhqd", pq.codes.astype(jnp.int32),
+                     vq.codes.astype(jnp.int32))
+    out = o32.astype(jnp.float32) * (pq.scale * vq.scale)
+    return out.transpose(0, 2, 1, 3)  # (B, Sq, H, hd)
+
+
+def attention(
+    p: Params,
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    exec_cfg: ExecConfig,
+    positions: jax.Array,
+    local: bool = False,
+    cache: Optional[Params] = None,
+    cross_kv: Optional[tuple] = None,
+    chunk: int = 1024,
+) -> tuple[jax.Array, Optional[Params]]:
+    """Self- (or cross-) attention with optional KV cache.
+
+    cache = {"k": (B, Smax, KV, hd), "v": ..., "idx": int32 scalar}.
+    prefill: x covers [0, S); decode: x is a single new token (Sq=1).
+    """
+    b, sq, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = _linear(x, p["wq"], exec_cfg, p.get("bq"))
+    q = constraint(q, "batch", None, "heads", None)
+    if cross_kv is None:
+        k = _linear(x, p["wk"], exec_cfg, p.get("bk"))
+        v = _linear(x, p["wv"], exec_cfg, p.get("bv"))
+        if cfg.pos_emb in ("rope", "mrope"):
+            q = apply_rope(q, positions, cfg)
+            k = apply_rope(k, positions, cfg)
+    else:
+        k, v = cross_kv  # encoder keys/values, precomputed
+
+    new_cache = None
+    if cache is not None and cross_kv is None:
+        idx = cache["idx"]
+        L = cache["k"].shape[1]
+        if sq >= L:
+            # prefill past the buffer (ring caches of local layers): keep the
+            # last L rotated-in-place entries; RoPE is pre-applied so storage
+            # order is irrelevant under the all-valid mask.
+            ck = k[:, -L:].astype(cache["k"].dtype)
+            cv = v[:, -L:].astype(cache["v"].dtype)
+        else:
+            pos = idx % L if local else idx  # ring write for local layers
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                              (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                              (0, pos, 0, 0))
+        new_cache = {"k": ck, "v": cv, "idx": idx + sq}
+        if sq == 1:  # decode attends through the cache
+            k, v = ck, cv
+
+    scale = 1.0 / math.sqrt(hd)
+    qg = _split_gqa(q, cfg.n_kv_heads)  # (B, Sq, KV, G, hd)
+
+    if sq == 1 and cache is not None:
+        # decode: single query against the cache, masked by validity/window.
+        kpos = jnp.arange(k.shape[1])
+        if local:
+            # ring buffer: every written slot is inside the window by design
+            valid = kpos < jnp.minimum(new_cache["idx"], k.shape[1])
+        else:
+            valid = kpos < new_cache["idx"]
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg.astype(jnp.float32) * scale,
+                       k.astype(jnp.float32))
+        if exec_cfg.mode == "raceit":
+            s = jnp.where(valid[None, None, None, None], s, LOGIT_FMT.min_value)
+            pr = acam_softmax(s, axis=-1, mode=exec_cfg.softmax_mode)
+        else:
+            s = jnp.where(valid[None, None, None, None], s, NEG_INF)
+            pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqc,bckd->bkgqd", pr, v.astype(jnp.float32))
+        o = o.transpose(0, 3, 1, 2, 4)
+    else:
+        q_off = cache["idx"] if cache is not None else 0
+        if cross_kv is not None:
+            mask_fn = lambda qi, ki: jnp.ones((), bool)  # full cross attention
+        elif not cfg.causal:
+            mask_fn = lambda qi, ki: ki < k.shape[1] + 0 * qi  # bidirectional
+        elif local:
+            mask_fn = lambda qi, ki: (ki <= qi + q_off) & (ki > qi + q_off - cfg.window)
+        else:
+            mask_fn = lambda qi, ki: ki <= qi + q_off
+        if exec_cfg.mode == "raceit" and k.shape[1] <= 4096:
+            msk = mask_fn(jnp.arange(sq)[:, None], jnp.arange(k.shape[1])[None, :])
+            o = _raceit_full_attention(q, k, v, jnp.broadcast_to(msk, (b,) + msk.shape),
+                                       scale, exec_cfg)
+        elif (local and cross_kv is None and cfg.causal
+              and sq == k.shape[1] and sq % cfg.window == 0
+              and sq > cfg.window):  # train & single-shot prefill paths
+            # sliding-window layers: q-blocked 2W-key attention instead of
+            # the masked-full path (S/(2W)x fewer score FLOPs/bytes)
+            o = _local_block_attention(q, k, v, cfg.window, scale)
+        else:
+            ch = min(chunk, k.shape[1])
+            o = _chunked_attention(q, k, v, mask_fn, ch, scale, exec_cfg)
+
+    wq = p["wq"]
+    heff = wq.shape[0] if isinstance(wq, QuantizedWeight) else wq.shape[1]
+    o = o.reshape(b, sq, heff, hd).astype(x.dtype)
+    if heff > cfg.n_heads:  # hard-mask padded heads: function == unpadded model
+        o = o * (jnp.arange(heff) < cfg.n_heads)[None, None, :, None].astype(o.dtype)
+    wo = p["wo"]
+    if isinstance(wo, QuantizedWeight):  # codes already (H*hd, D)
+        out = _linear(o.reshape(b, sq, heff * hd), wo, exec_cfg)
+    else:
+        out = jnp.einsum("bshd,hdm->bsm", o, wo.astype(x.dtype))
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# dense FFN
+# --------------------------------------------------------------------------
+
+def init_ffn(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w1": _dense_init(ks[0], (cfg.d_model, cfg.d_ff), dtype),
+         "w2": _dense_init(ks[1], (cfg.d_ff, cfg.d_model), dtype, fan_in=cfg.d_ff)}
+    if cfg.glu:
+        p["w3"] = _dense_init(ks[2], (cfg.d_model, cfg.d_ff), dtype)
+    return p
+
+
+def ffn(p: Params, x: jax.Array, cfg: ModelConfig, exec_cfg: ExecConfig) -> jax.Array:
+    h = _linear(x, p["w1"], exec_cfg)
+    h = _activation(h, cfg, exec_cfg)
+    if cfg.glu:
+        h = h * _linear(x, p["w3"], exec_cfg)
+    h = constraint(h, "batch", None, "mlp")
+    return _linear(h, p["w2"], exec_cfg)
+
+
+# --------------------------------------------------------------------------
+# embeddings / unembedding
+# --------------------------------------------------------------------------
+
+def init_embeddings(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"tok_emb": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                       jnp.float32) * 0.02).astype(dtype)}
+    if cfg.pos_emb == "learned":
+        max_pos = max(cfg.max_seq_len if cfg.family != "encoder" else 8192, 8192)
+        max_pos = min(max_pos, 65_536)
+        p["pos_emb"] = (jax.random.normal(ks[1], (max_pos, cfg.d_model),
+                                          jnp.float32) * 0.02).astype(dtype)
+    if not cfg.tie_embeddings:
+        p["unembed"] = _dense_init(ks[2], (cfg.d_model, cfg.vocab_size), dtype)
+    return p
+
+
+def embed(p: Params, tokens: jax.Array, positions: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = jnp.take(p["tok_emb"], tokens, axis=0)
+    if cfg.pos_emb == "learned":
+        x = x + jnp.take(p["pos_emb"], positions, axis=0)
+    elif cfg.pos_emb == "sinusoidal":
+        hd = cfg.d_model
+        freqs = 1.0 / (10_000 ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+        ang = positions[..., None].astype(jnp.float32) * freqs
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+        x = x + pe.astype(x.dtype)
+    return constraint(x, "batch", None, None)
+
+
+def unembed(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = p["tok_emb"].T if cfg.tie_embeddings else p["unembed"]
+    if isinstance(w, QuantizedWeight):  # resident int8 unembedding
+        logits = _linear(x, w, ExecConfig(mode="raceit")).astype(jnp.float32)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                            w.astype(jnp.float32))
+    return constraint(logits, "batch", None, "vocab")

@@ -1,0 +1,260 @@
+"""Top-level model assembly: decoder LMs, encoder-only (BERT), enc-dec (Whisper).
+
+Public API:
+
+    model = Model(cfg, exec_cfg, mesh_ctx)
+    params = model.init(rng)
+    logits = model.forward(params, batch)                  # train / scoring
+    cache = model.init_cache(batch_size, max_len)
+    logits, cache = model.prefill(params, tokens, cache)
+    logits, cache = model.decode_step(params, token, cache)
+
+`batch` for forward is a dict: {"tokens": (B,S) int32, optional "positions",
+optional "enc_feats": (B, enc_len, d_model) for stub-frontend models}.
+All functions are pure and jit/pjit-friendly.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ExecConfig, ModelConfig
+from repro.dist.sharding import MeshContext, constraint
+
+from . import blocks, layers
+
+Params = dict
+
+# weight leaves that live on crossbars as int8 conductance codes when serving
+_QUANTIZABLE = {"wq", "wk", "wv", "wo", "w1", "w2", "w3", "unembed",
+                "w_z", "w_x", "w_B", "w_C", "w_dt", "out_proj"}
+
+
+def quantize_model_params(params: Params) -> Params:
+    """Convert weight matrices to resident int8 codes + per-column scales
+    (the paper's deployment form: weights ARE the crossbar conductances).
+
+    Stacked scan leaves (R, K, ...) quantize per layer: codes (R, K, N),
+    scale (R, 1, N); the scan slices them to exactly what _linear consumes.
+    """
+    def q2d(leaf, stacked: bool, name: str):
+        arr = jnp.asarray(leaf, jnp.float32)
+        if name == "wo":  # contraction spans (heads, head_dim)
+            if stacked:
+                arr = arr.reshape(arr.shape[0], -1, arr.shape[-1])
+            else:
+                arr = arr.reshape(-1, arr.shape[-1])
+        if stacked:
+            flat = arr.reshape(arr.shape[0], arr.shape[1], -1)  # (R, K, N)
+            amax = jnp.max(jnp.abs(flat), axis=1, keepdims=True)
+            shape = tuple(arr.shape[2:])
+        else:
+            flat = arr.reshape(arr.shape[0], -1)                # (K, N)
+            amax = jnp.max(jnp.abs(flat), axis=0, keepdims=True)
+            shape = tuple(arr.shape[1:])
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        codes = jnp.clip(jnp.round(flat / scale), -128, 127).astype(jnp.int8)
+        return layers.QuantizedWeight(codes, scale.astype(jnp.float32), shape)
+
+    def walk(tree, stacked=False):
+        if isinstance(tree, dict):
+            out = {}
+            for name, leaf in tree.items():
+                if (name in _QUANTIZABLE and hasattr(leaf, "ndim")
+                        and leaf.ndim >= (3 if stacked else 2)):
+                    out[name] = q2d(leaf, stacked, name)
+                elif name == "moe":
+                    out[name] = leaf  # expert einsums keep bf16 (DESIGN §7)
+                elif name == "scan":
+                    out[name] = [walk(x, stacked=True) for x in leaf]
+                else:
+                    out[name] = walk(leaf, stacked)
+            return out
+        if isinstance(tree, list):
+            return [walk(x, stacked) for x in tree]
+        if isinstance(tree, tuple):
+            return tuple(walk(x, stacked) for x in tree)
+        return tree
+
+    return walk(params)
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, exec_cfg: ExecConfig = ExecConfig(),
+                 mesh_ctx: Optional[MeshContext] = None):
+        self.cfg = cfg
+        self.exec_cfg = exec_cfg
+        self.mesh_ctx = mesh_ctx
+        layers.set_perf_knobs(cfg)
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        dtype = _dtype(cfg.param_dtype)
+        ks = jax.random.split(rng, 6)
+        p: Params = {"embed": layers.init_embeddings(ks[0], cfg, dtype),
+                     "final_norm": layers.init_norm(cfg, dtype)}
+        if cfg.is_encoder_decoder:
+            enc_cfg = cfg.replace(causal=False, mixer_pattern=("attn",),
+                                  ffn_pattern=("dense",))
+            p["encoder"] = blocks.init_stack(ks[1], enc_cfg, dtype,
+                                             n_layers=cfg.n_encoder_layers)
+            p["enc_norm"] = layers.init_norm(cfg, dtype)
+            p["decoder"] = blocks.init_stack(ks[2], cfg, dtype, cross=True)
+        else:
+            p["blocks"] = blocks.init_stack(ks[1], cfg, dtype)
+        return p
+
+    # ------------------------------------------------------------- internals
+    def _positions(self, tokens: jax.Array, offset=0) -> jax.Array:
+        b, s = tokens.shape[:2]
+        return jnp.broadcast_to(jnp.arange(s) + offset, (b, s))
+
+    def _encode(self, params: Params, enc_feats: jax.Array) -> jax.Array:
+        """Whisper encoder over stub-frontend frame embeddings."""
+        enc_cfg = self.cfg.replace(causal=False, mixer_pattern=("attn",),
+                                   ffn_pattern=("dense",))
+        pos = self._positions(enc_feats[..., 0])
+        x = enc_feats.astype(_dtype(self.cfg.compute_dtype))
+        x, _ = blocks.apply_stack(params["encoder"], x, cfg=enc_cfg,
+                                  exec_cfg=self.exec_cfg, positions=pos,
+                                  caches=None, mesh_ctx=self.mesh_ctx,
+                                  n_layers=self.cfg.n_encoder_layers)
+        return layers.apply_norm(params["enc_norm"], x, self.cfg)
+
+    def _enc_kv(self, params: Params, enc_out: jax.Array) -> list:
+        """Per-decoder-layer cross K/V from the encoder output."""
+        kvs = []
+        for t in range(self.cfg.n_layers):
+            lp = self._decoder_layer_params(params, t)["cross"]
+            k = layers._linear(enc_out, lp["wk"], self.exec_cfg, lp.get("bk"))
+            v = layers._linear(enc_out, lp["wv"], self.exec_cfg, lp.get("bv"))
+            kvs.append((k, v))
+        return kvs
+
+    def _decoder_layer_params(self, params: Params, t: int) -> Params:
+        P, n_full, _ = blocks.layer_plan(self.cfg)
+        if t < n_full * P:
+            r, j = divmod(t, P)
+            return jax.tree.map(lambda a: a[r], params["decoder"]["scan"][j])
+        return params["decoder"]["tail"][t - n_full * P]
+
+    def _trunk(self, params: Params, tokens, positions, caches, enc_feats,
+               use_remat: bool):
+        cfg = self.cfg
+        x = layers.embed(params["embed"], tokens,
+                         positions if positions.ndim == 2 else positions[0], cfg)
+        x = x.astype(_dtype(cfg.compute_dtype))
+
+        if cfg.is_encoder_decoder:
+            if caches is not None and "enc_kv" in caches:
+                enc_kv = caches["enc_kv"]  # cached cross K/V (prefill/decode)
+            else:
+                enc_out = self._encode(params, enc_feats)
+                enc_kv = self._enc_kv(params, enc_out)
+            # decoder: unrolled (whisper is 4L), cross-attn per layer
+            new_tail = []
+            dec_caches = caches["dec"] if caches is not None else None
+            for t in range(cfg.n_layers):
+                lp = self._decoder_layer_params(params, t)
+                mixer, ffn_kind = cfg.layer_spec(t)
+                cache_t = dec_caches[t] if dec_caches is not None else None
+                x, nc = blocks.apply_layer(
+                    lp, x, cfg=cfg, exec_cfg=self.exec_cfg, mixer=mixer,
+                    ffn_kind=ffn_kind, positions=positions,
+                    cache=cache_t if cache_t else None, mesh_ctx=self.mesh_ctx,
+                    enc_kv=enc_kv[t])
+                new_tail.append(nc if nc is not None else {})
+            new_caches = ({"dec": new_tail, "enc_kv": enc_kv}
+                          if caches is not None else None)
+        else:
+            x, new_caches = blocks.apply_stack(
+                params["blocks"], x, cfg=cfg, exec_cfg=self.exec_cfg,
+                positions=positions, caches=caches, mesh_ctx=self.mesh_ctx,
+                use_remat=use_remat)
+
+        x = layers.apply_norm(params["final_norm"], x, cfg)
+        return x, new_caches
+
+    # ---------------------------------------------------------------- public
+    def forward(self, params: Params, batch: dict, use_remat: bool = True):
+        tokens = batch["tokens"]
+        positions = batch.get("positions")
+        if positions is None:
+            positions = self._positions(tokens)
+        x, _ = self._trunk(params, tokens, positions, None,
+                           batch.get("enc_feats"), use_remat)
+        return layers.unembed(params["embed"], x, self.cfg)
+
+    def init_cache(self, batch: int, max_len: int, dtype=None) -> Params:
+        cfg = self.cfg
+        dtype = dtype or _dtype(cfg.compute_dtype)
+        if cfg.is_encoder_decoder:
+            hd = cfg.resolved_head_dim
+            dec = [blocks.init_layer_cache(cfg, cfg.layer_spec(t)[0], batch,
+                                           max_len, dtype) or {}
+                   for t in range(cfg.n_layers)]
+            enc_kv = [(jnp.zeros((batch, cfg.encoder_len, cfg.n_kv_heads, hd), dtype),
+                       jnp.zeros((batch, cfg.encoder_len, cfg.n_kv_heads, hd), dtype))
+                      for _ in range(cfg.n_layers)]
+            return {"dec": dec, "enc_kv": enc_kv}
+        return blocks.init_stack_cache(cfg, batch, max_len, dtype)
+
+    def prefill(self, params: Params, tokens: jax.Array, cache: Params,
+                enc_feats=None, positions=None):
+        """Process the prompt; returns last-position logits + filled cache."""
+        if positions is None:
+            positions = self._positions(tokens)
+        if self.cfg.is_encoder_decoder and enc_feats is not None:
+            enc_out = self._encode(params, enc_feats)
+            cache = dict(cache, enc_kv=[
+                (k.astype(c[0].dtype), v.astype(c[1].dtype))
+                for (k, v), c in zip(self._enc_kv(params, enc_out), cache["enc_kv"])])
+        x, new_cache = self._trunk(params, tokens, positions, cache, None, False)
+        logits = layers.unembed(params["embed"], x[:, -1:], self.cfg)
+        return logits, new_cache
+
+    def decode_step(self, params: Params, token: jax.Array, cache: Params):
+        """token: (B, 1). Returns (logits (B,1,V), cache)."""
+        idx = self._cache_index(cache)
+        positions = jnp.broadcast_to(idx, token.shape).astype(jnp.int32)
+        x, new_cache = self._trunk(params, token, positions, cache, None, False)
+        logits = layers.unembed(params["embed"], x, self.cfg)
+        return logits, new_cache
+
+    def _cache_index(self, cache: Params):
+        leaves = jax.tree_util.tree_leaves(
+            jax.tree.map(lambda d: d.get("idx", None) if isinstance(d, dict) else None,
+                         cache, is_leaf=lambda d: isinstance(d, dict) and "idx" in d))
+        for leaf in leaves:
+            if leaf is not None:
+                return jnp.max(leaf) if getattr(leaf, "ndim", 0) else leaf
+        return jnp.zeros((), jnp.int32)
+
+    # --------------------------------------------------------------- loss
+    def loss_fn(self, params: Params, batch: dict, use_remat: bool = True):
+        """Next-token cross entropy (mean over non-masked tokens)."""
+        logits = self.forward(params, batch, use_remat=use_remat)
+        tokens = batch["tokens"]
+        if self.cfg.causal:
+            targets = tokens[:, 1:]
+            logits = logits[:, :-1]
+        else:  # encoder-only: masked-token style (predict identity here)
+            targets = tokens
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones_like(targets, jnp.float32)
+        else:
+            mask = mask[:, -targets.shape[1]:].astype(jnp.float32)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,141 @@
+"""Mixture-of-Experts layer with explicit shard_map distribution.
+
+Two distribution modes (DESIGN.md §4):
+
+* **TP-in-expert** (default, works for any expert count): expert weights are
+  sharded on d_ff over the "model" axis; every shard routes/dispatches its
+  local tokens, computes partial expert outputs, combines locally, and a
+  single psum over "model" finishes the row-parallel matmul.
+* **EP** (`expert_parallel=True`, experts % model_size == 0): experts are
+  sharded over "model"; capacity-dispatched token blocks are exchanged with
+  two all_to_alls (dispatch + return) and no psum is needed.
+
+Routing is token-choice top-k with a static capacity
+C = ceil(k * T_local * capacity_factor / E); overflow tokens drop (their
+residual path passes through), underflow slots compute on zeros.
+The router softmax goes through the Compute-ACAM softmax dataflow in raceit
+mode — the paper's reconfigurability claim applied to a post-paper layer type.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ExecConfig, ModelConfig
+from repro.core.softmax import acam_softmax
+from repro.dist.sharding import MeshContext
+from jax.sharding import PartitionSpec as P
+
+from . import layers
+
+Params = dict
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": layers._dense_init(ks[0], (D, E), jnp.float32),
+        "w1": layers._dense_init(ks[1], (E, D, F), dtype),
+        "w2": layers._dense_init(ks[2], (E, F, D), dtype, fan_in=F),
+    }
+    if cfg.glu:
+        p["w3"] = layers._dense_init(ks[3], (E, D, F), dtype)
+    return p
+
+
+def _moe_local(p, x, cfg: ModelConfig, exec_cfg: ExecConfig, axis: Optional[str],
+               tp_size: int):
+    """Per-shard MoE body. x: (B_l, S, D). axis: model axis name (or None)."""
+    Bl, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = Bl * S
+    xf = x.reshape(T, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    if exec_cfg.mode == "raceit":
+        probs = acam_softmax(logits, axis=-1, mode=exec_cfg.softmax_mode)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, K)  # (T, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # --- capacity-based dispatch (static C) ---
+    C = max(1, int(-(-K * T * cfg.capacity_factor // E)))
+    e_flat = expert.reshape(-1)  # (T*K,) token-major
+    # rank of each (token, k) within its expert, via stable sort
+    order = jnp.argsort(e_flat, stable=True)
+    sorted_e = e_flat[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    rank_sorted = jnp.arange(T * K, dtype=jnp.int32) - starts[sorted_e]
+    rank = jnp.zeros((T * K,), jnp.int32).at[order].set(rank_sorted)
+    keep = rank < C
+    slot = jnp.where(keep, e_flat * C + rank, E * C)  # E*C = drop bin
+
+    token_id = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    disp = jnp.zeros((E * C + 1, D), x.dtype).at[slot].set(xf[token_id])
+    disp = disp[:-1].reshape(E, C, D)
+
+    if cfg.expert_parallel and axis is not None and tp_size > 1:
+        # EP: exchange expert-blocks so each shard holds its own experts' tokens.
+        disp = jax.lax.all_to_all(disp, axis, split_axis=0, concat_axis=1, tiled=True)
+    w1, w2 = p["w1"], p["w2"]
+    h = jnp.einsum("ecd,edf->ecf", disp, w1.astype(disp.dtype),
+                   preferred_element_type=jnp.float32).astype(disp.dtype)
+    h = layers._activation(h, cfg, exec_cfg)
+    if "w3" in p:
+        h = h * jnp.einsum("ecd,edf->ecf", disp, p["w3"].astype(disp.dtype),
+                           preferred_element_type=jnp.float32).astype(disp.dtype)
+    y_e = jnp.einsum("ecf,efd->ecd", h, w2.astype(h.dtype),
+                     preferred_element_type=jnp.float32).astype(disp.dtype)
+    if cfg.expert_parallel and axis is not None and tp_size > 1:
+        y_e = jax.lax.all_to_all(y_e, axis, split_axis=1, concat_axis=0, tiled=True)
+
+    # --- combine: gather each (token, k) slot's output, weight, and sum ---
+    y_pad = jnp.concatenate([y_e.reshape(E * C, D),
+                             jnp.zeros((1, D), y_e.dtype)], 0)
+    per_choice = y_pad[slot] * (gate.reshape(-1) * keep)[:, None].astype(y_e.dtype)
+    y = per_choice.reshape(T, K, D).sum(axis=1)
+
+    if (not cfg.expert_parallel) and axis is not None and tp_size > 1:
+        y = jax.lax.psum(y, axis)  # finish the row-parallel (d_ff-sharded) matmul
+    return y.reshape(Bl, S, D)
+
+
+def moe(p: Params, x: jax.Array, cfg: ModelConfig, exec_cfg: ExecConfig,
+        mesh_ctx: Optional[MeshContext]) -> jax.Array:
+    """Dispatching wrapper: shard_map over the mesh, or plain local call."""
+    if mesh_ctx is None or mesh_ctx.mesh is None:
+        return _moe_local(p, x, cfg, exec_cfg, axis=None, tp_size=1)
+
+    mesh = mesh_ctx.mesh
+    model = mesh_ctx.model_axis if mesh_ctx.model_size > 1 else None
+    dp = mesh_ctx.present_dp_axes
+    batch_spec = dp if (dp and x.shape[0] % mesh_ctx.dp_size == 0) else None
+
+    if cfg.expert_parallel and model is not None:
+        # EP: also shard the sequence over "model" so each shard dispatches a
+        # distinct token slice (otherwise the exchanged blocks are replicas and
+        # expert FFNs run model_size-times redundantly — decode S=1 accepts it).
+        seq_spec = model if x.shape[1] % mesh_ctx.model_size == 0 else None
+        x_spec = P(batch_spec, seq_spec, None)
+        w_specs = {"router": P(None, None), "w1": P(model, None, None),
+                   "w2": P(model, None, None)}
+        if "w3" in p:
+            w_specs["w3"] = P(model, None, None)
+    else:
+        x_spec = P(batch_spec, None, None)
+        w_specs = {"router": P(None, None), "w1": P(None, None, model),
+                   "w2": P(None, model, None)}
+        if "w3" in p:
+            w_specs["w3"] = P(None, None, model)
+
+    fn = partial(_moe_local, cfg=cfg, exec_cfg=exec_cfg, axis=model,
+                 tp_size=mesh_ctx.model_size)
+    return jax.shard_map(
+        fn, mesh=mesh, in_specs=(w_specs, x_spec), out_specs=x_spec,
+        check_vma=False,
+    )(p, x)

@@ -1,0 +1,199 @@
+"""Mamba-2 (SSD, state-space duality) mixer — chunked matmul form + O(1) decode.
+
+The SSD recurrence h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t, y_t = C_t h_t is
+evaluated in the chunkwise-parallel matmul form of arXiv:2405.21060 (intra-
+chunk "attention-like" term + inter-chunk state recurrence), which maps onto
+the MXU. Decode uses the constant-memory recurrent update.
+
+Projection weights are stored per-component (w_z/w_x/w_B/w_C/w_dt) so the
+head-major d_inner dimensions shard cleanly over the "model" axis (TP).
+
+RACE-IT applicability (DESIGN.md §5): the in/out projections are crossbar
+MVMs; softplus/exp gating and the data-dependent chunk matmuls are exactly
+Compute-ACAM 1-var / 2-var ops, so `raceit` mode quantizes them the same way.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ExecConfig, ModelConfig
+from repro.dist.sharding import constraint, current_policy
+
+from . import layers
+
+Params = dict
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> Params:
+    D = cfg.d_model
+    d_in, H, N, G = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    ks = jax.random.split(key, 8)
+    dt = jnp.exp(jax.random.uniform(ks[5], (H,), jnp.float32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    return {
+        "w_z": layers._dense_init(ks[0], (D, d_in), dtype),
+        "w_x": layers._dense_init(ks[1], (D, d_in), dtype),
+        "w_B": layers._dense_init(ks[2], (D, G * N), dtype),
+        "w_C": layers._dense_init(ks[3], (D, G * N), dtype),
+        "w_dt": layers._dense_init(ks[4], (D, H), dtype),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),  # inv softplus
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32) % 15 + 1.0),
+        "ssm_D": jnp.ones((H,), jnp.float32),
+        # identity-at-current-tap init so signal passes at step 0
+        "conv_x": jnp.zeros((cfg.conv_width, d_in), dtype).at[-1].set(1.0),
+        "conv_B": jnp.zeros((cfg.conv_width, G * N), dtype).at[-1].set(1.0),
+        "conv_C": jnp.zeros((cfg.conv_width, G * N), dtype).at[-1].set(1.0),
+        "norm_scale": jnp.ones((d_in,), dtype),
+    }
+
+
+def _causal_conv_simple(x, w, state):
+    """Depthwise causal conv via explicit shifted sums (W is tiny)."""
+    W = w.shape[0]
+    if state is None:
+        ctx = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    new_state = ctx[:, -(W - 1):, :] if W > 1 else None
+    S = x.shape[1]
+    y = sum(ctx[:, i : i + S, :] * w[i].astype(x.dtype) for i in range(W))
+    return y, new_state
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunkwise SSD. xh (B,S,H,P); dt (B,S,H); A (H,); Bm/Cm (B,S,G,N).
+
+    Returns y (B,S,H,P) and final state (B,H,P,N).
+    """
+    Bsz, S, H, Pd = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:  # zero-pad: dt=0 makes padded steps identity (no state update)
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S_pad = S + pad
+    nc = S_pad // L
+    rep = H // G
+
+    # TP inside SSD: shard heads over "model" when divisible, otherwise the
+    # independent chunks dim (intra-chunk L^2 tensors are the memory hot spot).
+    pol = current_policy()
+    msz = pol.axes_size(pol.mesh_axes("heads")) if (pol and pol.mesh) else 1
+    use_heads = msz > 1 and H % msz == 0
+    hax = "heads" if use_heads else None
+    cax = None if use_heads else "chunks"
+
+    xc = constraint(xh.reshape(Bsz, nc, L, H, Pd), "batch", cax, None, hax, None)
+    dtc = constraint(dt.reshape(Bsz, nc, L, H), "batch", cax, None, hax
+                     ).astype(jnp.float32)
+    Bc = jnp.repeat(Bm.reshape(Bsz, nc, L, G, N), rep, axis=3)  # (B,nc,L,H,N)
+    Cc = jnp.repeat(Cm.reshape(Bsz, nc, L, G, N), rep, axis=3)
+    Bc = constraint(Bc, "batch", cax, None, hax, None)
+    Cc = constraint(Cc, "batch", cax, None, hax, None)
+
+    dA = dtc * A  # (B,nc,L,H), negative
+    cum = jnp.cumsum(dA, axis=2)
+
+    # --- intra-chunk (attention-like, masked by causal decay) ---
+    CB = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc,
+                    preferred_element_type=jnp.float32)
+    # decay[l,s] = exp(cum_l - cum_s), lower-triangular
+    cl = cum.transpose(0, 1, 3, 2)  # (B,nc,H,L)
+    dmat = jnp.exp(jnp.clip(cl[..., :, None] - cl[..., None, :], -60.0, 0.0))
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    att = CB * jnp.where(mask, dmat, 0.0) * dtc.transpose(0, 1, 3, 2)[..., None, :]
+    y_intra = jnp.einsum("bchls,bcshp->bclhp", att.astype(xh.dtype), xc,
+                         preferred_element_type=jnp.float32)
+
+    # --- per-chunk states and inter-chunk recurrence ---
+    decay_end = jnp.exp(jnp.clip(cum[:, :, -1:, :] - cum, -60.0, 0.0))  # (B,nc,L,H)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", Bc.astype(jnp.float32),
+                        (dtc * decay_end), xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(jnp.clip(cum[:, :, -1, :], -60.0, 0.0))  # (B,nc,H)
+
+    s0 = (jnp.zeros((Bsz, H, Pd, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def scan_fn(s_prev, xs):
+        st_c, cd_c = xs
+        s_new = s_prev * cd_c[..., None, None] + st_c
+        return s_new, s_prev
+
+    (s_final, states_in) = jax.lax.scan(
+        scan_fn, s0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    states_in = states_in.swapaxes(0, 1)  # (B,nc,H,P,N) state entering chunk
+
+    y_inter = jnp.einsum("bclhn,bchpn,bclh->bclhp", Cc.astype(jnp.float32),
+                         states_in, jnp.exp(jnp.clip(cum, -60.0, 0.0)))
+    y = (y_intra + y_inter).reshape(Bsz, S_pad, H, Pd)[:, :S]
+    return y.astype(xh.dtype), s_final
+
+
+def mamba(p: Params, x: jax.Array, *, cfg: ModelConfig, exec_cfg: ExecConfig,
+          cache: Optional[Params] = None) -> tuple[jax.Array, Optional[Params]]:
+    """Mamba-2 mixer. cache = {"state","conv_x","conv_B","conv_C"} for decode."""
+    Bsz, S, _ = x.shape
+    H, Pd, N, G = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_groups
+
+    z = layers._linear(x, p["w_z"], exec_cfg)
+    xs = layers._linear(x, p["w_x"], exec_cfg)
+    Bv = layers._linear(x, p["w_B"], exec_cfg)
+    Cv = layers._linear(x, p["w_C"], exec_cfg)
+    dt_raw = layers._linear(x, p["w_dt"], exec_cfg).astype(jnp.float32)
+
+    xs, cs_x = _causal_conv_simple(xs, p["conv_x"], cache["conv_x"] if cache else None)
+    Bv, cs_B = _causal_conv_simple(Bv, p["conv_B"], cache["conv_B"] if cache else None)
+    Cv, cs_C = _causal_conv_simple(Cv, p["conv_C"], cache["conv_C"] if cache else None)
+    xs, Bv, Cv = (jax.nn.silu(xs), jax.nn.silu(Bv), jax.nn.silu(Cv))
+
+    xh = constraint(xs.reshape(Bsz, S, H, Pd), "batch", None, "heads", "headdim")
+    Bm = Bv.reshape(Bsz, S, G, N)
+    Cm = Cv.reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+
+    if S == 1 and cache is not None:
+        # recurrent decode step
+        s_prev = cache["state"].astype(jnp.float32)  # (B,H,P,N)
+        dt1 = dt[:, 0]  # (B,H)
+        dA1 = jnp.exp(dt1 * A)  # (B,H)
+        B1 = jnp.repeat(Bm[:, 0], H // G, axis=1)  # (B,H,N)
+        C1 = jnp.repeat(Cm[:, 0], H // G, axis=1)
+        x1 = xh[:, 0].astype(jnp.float32)  # (B,H,P)
+        s_new = (s_prev * dA1[..., None, None]
+                 + jnp.einsum("bh,bhn,bhp->bhpn", dt1, B1.astype(jnp.float32), x1))
+        y = jnp.einsum("bhn,bhpn->bhp", C1.astype(jnp.float32), s_new)
+        y = y[:, None].astype(x.dtype)  # (B,1,H,P)
+        state = s_new
+    else:
+        init_state = cache["state"] if cache is not None else None
+        y, state = _ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk, init_state)
+
+    y = y + xh * p["ssm_D"][:, None].astype(x.dtype)
+    y = y.reshape(Bsz, S, cfg.d_inner)
+
+    # gated RMSNorm (mamba2's norm-before-out-proj)
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    g = g * jax.lax.rsqrt(jnp.mean(g * g, -1, keepdims=True) + 1e-6)
+    y = (g * p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+
+    out = layers._linear(y, p["out_proj"], exec_cfg)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": state.astype(cache["state"].dtype),
+                     "conv_x": cs_x, "conv_B": cs_B, "conv_C": cs_C}
+    return out, new_cache
+
+
+def init_mamba_with_out(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = init_mamba(k1, cfg, dtype)
+    p["out_proj"] = layers._dense_init(k2, (cfg.d_inner, cfg.d_model), dtype,
+                                       fan_in=cfg.d_inner)
+    return p

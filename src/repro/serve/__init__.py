@@ -1,0 +1,2 @@
+from .engine import GenerationEngine  # noqa: F401
+from .batching import BatchScheduler, Request  # noqa: F401

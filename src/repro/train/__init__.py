@@ -1,0 +1,2 @@
+from . import optim, trainer  # noqa: F401
+from .loop import TrainLoopConfig, run_training  # noqa: F401

@@ -1,0 +1,59 @@
+"""Training step factory: grad, clip, AdamW, optional microbatch accumulation.
+
+The returned step is a pure function suitable for pjit; gradient reduction
+across ("pod","data") and FSDP all-gather/reduce-scatter are inserted by XLA
+SPMD from the parameter shardings (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from . import optim
+
+
+def make_train_step(model: Model, opt_cfg: optim.AdamWConfig,
+                    microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch, use_remat=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            # gradient accumulation over the leading batch dim via scan
+            def micro(b):
+                return jax.tree.map(
+                    lambda a: a.reshape((microbatches, -1) + a.shape[1:]), b)
+
+            def acc_body(carry, mb):
+                loss_sum, grads = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                grads = jax.tree.map(jnp.add, grads, g)
+                return (loss_sum + l, grads), None
+
+            zero_grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros(()), zero_grads), micro(batch))
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        updates, opt_state, om = optim.adamw_update(grads, opt_state, params, opt_cfg)
+        params = optim.apply_updates(params, updates)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        return model.loss_fn(params, batch, use_remat=False)
+    return eval_step

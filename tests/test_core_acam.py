@@ -1,0 +1,128 @@
+"""Core Compute-ACAM properties: compiler exactness, Gray coding, formats."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FixedPointFormat, PoTFormat, compile_1var,
+                        compile_2var, eval_range_program, eval_rect_program,
+                        gray_decode, gray_encode, mult8_codes, ops)
+from repro.core.compiler import ACAM_ARRAY_COLS
+from repro.core.gray import gray_decode_bits
+
+
+# ---------------------------------------------------------------- gray code
+@given(st.integers(0, 2**16 - 1))
+def test_gray_roundtrip(n):
+    assert gray_decode(gray_encode(n), 16) == n
+
+
+@given(st.integers(0, 2**12 - 2))
+def test_gray_adjacent_single_bit(n):
+    diff = gray_encode(n) ^ gray_encode(n + 1)
+    assert bin(diff).count("1") == 1
+
+
+def test_gray_decode_bits_matches_scalar():
+    vals = np.arange(256, dtype=np.uint32)
+    g = gray_encode(vals)
+    bits = np.stack([(g >> b) & 1 for b in range(7, -1, -1)], -1)
+    dec_bits = gray_decode_bits(bits, axis=-1)
+    dec = sum(dec_bits[:, i].astype(np.uint32) << (7 - i) for i in range(8))
+    assert (dec == vals).all()
+
+
+# ---------------------------------------------------------------- compiler
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.sampled_from([4, 6, 8]),
+       st.booleans())
+def test_random_lut_range_program_exact(seed, bits, encode):
+    """THE invariant: any truth table compiles to an equivalent range program."""
+    rng = np.random.default_rng(seed)
+    table = rng.integers(0, 1 << bits, 1 << bits).astype(np.uint32)
+    prog = compile_1var(table, bits, encode=encode)
+    got = eval_range_program(prog, np.arange(1 << bits))
+    assert (got == table).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.booleans())
+def test_random_2var_rect_program_exact(seed, encode):
+    rng = np.random.default_rng(seed)
+    table = rng.integers(0, 256, (16, 16)).astype(np.uint32)
+    prog = compile_2var(table, 8, encode=encode)
+    xi, yi = np.meshgrid(np.arange(16), np.arange(16), indexing="ij")
+    assert (eval_rect_program(prog, xi, yi) == table).all()
+
+
+def test_encoding_reduces_cells_paper_fig9():
+    """Gray encoding ~halves LSB run counts (paper §V-A)."""
+    op_plain = ops.get_op("gelu", encode=False)
+    op_enc = ops.get_op("gelu", encode=True)
+    assert op_enc.program.num_cells < op_plain.program.num_cells
+    # paper reports 22-35% operator-level reduction; ours is in-family
+    red = 1 - op_enc.program.rows_needed() / op_plain.program.rows_needed()
+    assert 0.15 < red < 0.6
+
+
+def test_fig7_multiplication_cell_counts():
+    """Rect cover matches the paper's Fig. 7 counts (8/21/36/58) closely."""
+    m = ops.mult4_paper(encode=False)
+    ours = m.program.cells_per_bit
+    paper = [8, 21, 36, 58]
+    for o, p in zip(ours, paper):
+        assert abs(o - p) <= 2, (ours, paper)
+
+
+def test_all_ops_hw_equals_lut():
+    for name in ops.OPS:
+        op = ops.get_op(name)
+        lo = getattr(op.in_fmt, "code_min", 0)
+        codes = jnp.arange(op.in_fmt.num_codes) + lo
+        a = op.apply_codes(codes, hw=False)
+        b = op.apply_codes(codes, hw=True)
+        assert (np.asarray(a) == np.asarray(b)).all(), name
+
+
+# ---------------------------------------------------------------- formats
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 3), st.integers(0, 6),
+       st.floats(-100, 100, allow_nan=False))
+def test_fixed_point_quantize_bounds(i, f, x):
+    fmt = FixedPointFormat(int_bits=i, frac_bits=f)
+    q = float(fmt.quantize_value(np.asarray([x]))[0])
+    assert fmt.min_value <= q <= fmt.max_value
+    if fmt.min_value <= x <= fmt.max_value:
+        assert abs(q - x) <= fmt.scale / 2 + 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(1e-6, 1e6))
+def test_pot_relative_error_bound(x):
+    fmt = PoTFormat(e_min=-24)
+    q = float(fmt.quantize_value(np.asarray([x], np.float64))[0])
+    assert q > 0
+    assert 2 ** -0.5 - 1e-6 <= q / x <= 2 ** 0.5 + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(1e-6, 1e6))
+def test_pot_fine_tighter_than_pot(x):
+    fine = PoTFormat(e_min=-24, octave_step=0.25)
+    q = float(fine.quantize_value(np.asarray([x], np.float64))[0])
+    assert 2 ** -0.125 - 1e-6 <= q / x <= 2 ** 0.125 + 1e-6
+
+
+# ---------------------------------------------------------------- mult8
+def test_mult8_exhaustive():
+    x = jnp.arange(-128, 128, dtype=jnp.int32)
+    X, Y = jnp.meshgrid(x, x, indexing="ij")
+    assert (np.asarray(mult8_codes(X, Y)) == np.asarray(X) * np.asarray(Y)).all()
+
+
+def test_array_sizing_budget():
+    """454 4-bit multipliers + 16 exp units fit the 1280-array GCE (§VI)."""
+    from repro.hw.area import gce_unit_arrays
+    u = gce_unit_arrays()
+    total = 454 * u["mult4_arrays_frac"] + 16 * u["exp8"] + u["log8"] + u["act8"]
+    assert total <= 1280 * 1.02

@@ -1,0 +1,95 @@
+"""Crossbar bit-slicing and the ACAM softmax dataflow."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CrossbarConfig, acam_softmax, bit_sliced_matmul,
+                        crossbar_linear, quantize_tensor, softmax_reference)
+from repro.core.attention import raceit_attention
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(1, 12), st.integers(1, 300),
+       st.integers(1, 12))
+def test_bit_sliced_matmul_exact(seed, m, k, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int32)
+    w = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int32)
+    got = bit_sliced_matmul(x, w)
+    assert (np.asarray(got) == np.asarray(x) @ np.asarray(w)).all()
+
+
+def test_adc_resolution_error_curve(rng):
+    """More ADC bits -> less error; sufficient bits (385 levels) -> exact."""
+    x = jnp.asarray(rng.integers(-128, 128, (8, 256)), jnp.int32)
+    w = jnp.asarray(rng.integers(-128, 128, (256, 16)), jnp.int32)
+    want = (np.asarray(x) @ np.asarray(w)).astype(np.float64)
+
+    def rel(bits):
+        cfg = CrossbarConfig(adc_mode="quantize", adc_bits=bits)
+        got = np.asarray(bit_sliced_matmul(x, w, cfg)).astype(np.float64)
+        return np.abs(got - want).max() / max(np.abs(want).max(), 1)
+
+    r5, r7, r9 = rel(5), rel(7), rel(9)
+    assert r5 > r7 > r9
+    assert r7 < 0.15
+    assert r9 == 0.0  # 2^9-1 = 511 >= 385 partial-sum levels
+
+
+def test_crossbar_linear_close_to_float(rng):
+    x = jnp.asarray(rng.normal(0, 1, (4, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.1, (64, 32)), jnp.float32)
+    wq = quantize_tensor(w, bits=8, axis=1)
+    y = crossbar_linear(x, wq)
+    ref = x @ w
+    rel = float(jnp.abs(y - ref).max() / jnp.abs(ref).max())
+    assert rel < 0.05, rel
+
+
+@pytest.mark.parametrize("mode,tol_mean", [("pot", 0.02), ("pot_fine", 0.01)])
+def test_acam_softmax_accuracy(rng, mode, tol_mean):
+    x = jnp.asarray(rng.normal(0, 3, (8, 128)), jnp.float32)
+    p = acam_softmax(x, mode=mode)
+    ref = softmax_reference(x)
+    assert float(jnp.abs(p - ref).mean()) < tol_mean
+    assert 0.6 < float(p.sum(-1).mean()) < 1.5  # approximately normalized
+
+
+def test_acam_softmax_uniform_collapses(rng):
+    """The paper's Fig. 14 ablation: uniform exp quantization breaks softmax."""
+    x = jnp.asarray(rng.normal(0, 3, (8, 128)), jnp.float32)
+    ref = softmax_reference(x)
+    uni = acam_softmax(x, mode="uniform")
+    pot = acam_softmax(x, mode="pot")
+    assert float(jnp.abs(uni - ref).mean()) > 10 * float(jnp.abs(pot - ref).mean())
+
+
+def test_softmax_handles_masked_rows():
+    x = jnp.full((2, 16), -16.0)  # all at LOGIT min (fully masked row)
+    p = acam_softmax(x, mode="pot")
+    assert np.isfinite(np.asarray(p)).all()
+
+
+def test_raceit_attention_acam_fidelity_equals_int(rng):
+    q = jnp.asarray(rng.normal(0, 1, (1, 1, 4, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 1, 4, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (1, 1, 4, 8)), jnp.float32)
+    a = raceit_attention(q, k, v, fidelity="int")
+    b = raceit_attention(q, k, v, fidelity="acam")
+    assert np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_raceit_attention_close_to_float(rng):
+    q = jnp.asarray(rng.normal(0, 1, (2, 2, 8, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (2, 2, 8, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (2, 2, 8, 16)), jnp.float32)
+    ref = jnp.einsum("bhqc,bhcd->bhqd",
+                     softmax_reference(jnp.einsum("bhqd,bhcd->bhqc", q, k) / 4.0),
+                     v)
+    out = raceit_attention(q, k, v)
+    rel = float(jnp.abs(out - ref).max() / jnp.abs(ref).max())
+    assert rel < 0.6, rel  # PoT row-sum wobble is up to +-2^0.5 (paper mode)
+    fine = raceit_attention(q, k, v, softmax_mode="pot_fine")
+    rel_fine = float(jnp.abs(fine - ref).max() / jnp.abs(ref).max())
+    assert rel_fine < rel + 1e-6  # beyond-paper fractional PoT is tighter

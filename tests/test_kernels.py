@@ -1,0 +1,77 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.crossbar import CrossbarConfig
+from repro.core.ops import LOGIT_FMT
+from repro.kernels import ops as kops
+from repro.kernels import ref
+
+
+@pytest.mark.parametrize("shape", [(1, 1), (7, 130), (256, 128), (3, 5, 64),
+                                   (33, 257)])
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.int32])
+def test_acam_lut_shapes_dtypes(rng, shape, dtype):
+    x = jnp.asarray(rng.integers(-128, 128, shape), dtype)
+    lut = jnp.asarray(rng.integers(-128, 128, 256), jnp.int32)
+    got = kops.acam_lut(x, lut)
+    want = ref.lut_ref(x, lut)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(1, 70), st.integers(1, 300),
+       st.integers(1, 140))
+def test_acam_mvm_property(seed, m, k, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+    got = kops.acam_mvm(x, w, bm=32, bn=128, bk=64)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.mvm_exact_ref(x, w)))
+
+
+@pytest.mark.parametrize("mkn", [(4, 100, 8), (16, 128, 128), (33, 300, 65),
+                                 (128, 512, 256)])
+def test_acam_mvm_exact_shapes(rng, mkn):
+    m, k, n = mkn
+    x = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+    np.testing.assert_array_equal(np.asarray(kops.acam_mvm(x, w)),
+                                  np.asarray(ref.mvm_exact_ref(x, w)))
+
+
+def test_acam_mvm_quantized_adc_matches_oracle(rng):
+    cfg = CrossbarConfig(adc_mode="quantize", adc_bits=6)
+    x = jnp.asarray(rng.integers(-128, 128, (8, 256)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (256, 32)), jnp.int8)
+    np.testing.assert_array_equal(np.asarray(kops.acam_mvm(x, w, cfg)),
+                                  np.asarray(ref.mvm_ref(x, w, cfg)))
+
+
+@pytest.mark.parametrize("shape", [(4, 64), (3, 130), (8, 1024), (1, 16)])
+@pytest.mark.parametrize("mode", ["pot", "pot_fine"])
+def test_acam_softmax_kernel_vs_core(rng, shape, mode):
+    x = jnp.asarray(rng.normal(0, 3, shape), jnp.float32)
+    codes = LOGIT_FMT.encode(x)
+    got = kops.acam_softmax_codes(codes, mode=mode)
+    want = ref.softmax_codes_ref(codes, mode=mode)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_raceit_linear_kernel(rng):
+    x = jnp.asarray(rng.normal(0, 1, (4, 96)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.1, (96, 48)), jnp.float32)
+    y = kops.raceit_linear(x, w)
+    rel = float(jnp.abs(y - x @ w).max() / jnp.abs(x @ w).max())
+    assert rel < 0.05
+
+
+def test_acam_activation_kernel(rng):
+    import jax
+    x = jnp.asarray(rng.normal(0, 1, (16, 64)), jnp.float32)
+    y = kops.acam_activation(x, "gelu")
+    ref_y = jax.nn.gelu(x)
+    assert float(jnp.abs(y - ref_y).max()) < 0.15  # 8-bit table resolution
