@@ -1,17 +1,62 @@
 """Kernel micro-benchmarks (interpret mode on CPU — correctness/latency probe;
-the roofline for the real TPU path comes from the dry-run §Roofline)."""
+the roofline for the real TPU path comes from the dry-run §Roofline).
+
+Timings are interleaved min-of-N (the standard noise-robust estimator on a
+shared container). `python benchmarks/kernels_bench.py` also writes the
+machine-readable ``BENCH_kernels.json`` artifact (name -> us/call) so the
+perf trajectory is comparable across PRs; `benchmarks/run.py` does the same
+as part of the full harness. Methodology + current numbers: EXPERIMENTS.md
+§Perf.
+"""
 from __future__ import annotations
 
+import json
+import sys
 import time
+from pathlib import Path
+
+ARTIFACT = Path(__file__).resolve().parent.parent / "BENCH_kernels.json"
 
 
 def _time(fn, *args, n=3):
     import jax
     fn(*args)  # compile
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(n):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / n * 1e6
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _attention_rows(rng, reps=8):
+    """Fused streaming kernel vs the staged Fig.-12 oracle, interleaved."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.attention import raceit_attention
+    from repro.kernels.ops import raceit_attention_fused
+
+    B, H, S, D = 1, 8, 512, 64  # the tracked hot-path shape (B*H=8)
+    q, k, v = (jnp.asarray(rng.normal(0, 1, (B, H, S, D)), jnp.float32)
+               for _ in range(3))
+    staged = lambda: raceit_attention(q, k, v)
+    fused = lambda: raceit_attention_fused(q, k, v, block_q=512, block_k=512)
+    staged(), fused()  # compile both before interleaved timing
+    t_staged = t_fused = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(staged())
+        t_staged = min(t_staged, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fused())
+        t_fused = min(t_fused, time.perf_counter() - t0)
+    shape = f"{B * H}x{S}x{S}x{D}"
+    return [
+        (f"kernel/attention_staged_{shape}", t_staged * 1e6, "fig12_staged"),
+        (f"kernel/attention_fused_{shape}", t_fused * 1e6,
+         f"fig12_fused_{t_staged / t_fused:.2f}x"),
+    ]
 
 
 def run() -> list[tuple]:
@@ -38,6 +83,22 @@ def run() -> list[tuple]:
     us = _time(lambda c: kops.acam_softmax_codes(c), logits)
     rows.append(("kernel/acam_softmax_64x1024", us, "fused_fig8"))
 
+    rows.extend(_attention_rows(rng))
+
     for name, us, derived in rows:
         print(f"  {name}: {us:.0f} us/call ({derived})")
     return rows
+
+
+def write_artifact(rows, path: Path = ARTIFACT) -> None:
+    """name -> us/call for every kernel row (machine-readable across PRs)."""
+    payload = {name: round(us, 1) for name, us, _ in rows
+               if name.startswith("kernel/")}
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    print(f"  wrote {path.name}: {len(payload)} kernels")
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    write_artifact(run())

@@ -21,7 +21,10 @@ def main() -> None:
                       ("roofline", roofline)):
         print(f"\n=== {name} " + "=" * (60 - len(name)))
         try:
-            all_rows.extend(mod.run())
+            rows = mod.run()
+            all_rows.extend(rows)
+            if name == "kernels":  # machine-readable perf trajectory artifact
+                kernels_bench.write_artifact(rows)
         except Exception as e:  # noqa: BLE001
             print(f"  FAILED: {e}")
             all_rows.append((f"{name}/FAILED", 0.0, str(e)[:60]))

@@ -117,6 +117,10 @@ class ExecConfig:
     crossbar_adc: str = "exact"            # "exact"|"quantize"
     act_bits: int = 8
     weight_bits: int = 8
+    # route raceit attention through the fused streaming Pallas kernel
+    # (repro.kernels.acam_attention) instead of the staged XLA pipeline;
+    # requires softmax_mode in ("pot", "pot_fine").
+    fused_attention: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

@@ -44,7 +44,7 @@ def dd_matmul_codes(a_codes: jax.Array, b_codes: jax.Array, fidelity: str = "int
     )
 
 
-@partial(jax.jit, static_argnames=("fidelity", "softmax_mode", "hw"))
+@partial(jax.jit, static_argnames=("fidelity", "softmax_mode", "hw", "fused"))
 def raceit_attention(
     q: jax.Array,  # (B, H, Sq, D) float
     k: jax.Array,  # (B, H, Sk, D) float
@@ -53,9 +53,24 @@ def raceit_attention(
     fidelity: str = "int",
     softmax_mode: str = "pot",
     hw: bool = False,
+    fused: bool = False,
 ) -> jax.Array:
-    """Bit-accurate RACE-IT attention (float in/out, int8 internal)."""
+    """Bit-accurate RACE-IT attention (float in/out, int8 internal).
+
+    ``fused=True`` dispatches to the streaming Pallas kernel
+    (`repro.kernels.acam_attention`), which executes the whole pipeline per
+    VMEM tile without ever materializing the (Sq, Sk) logit/probability
+    matrices; this staged path stays as the bit-accurate oracle it is
+    validated against (tests/test_attention_fused.py).
+    """
     d = q.shape[-1]
+    if fused:
+        if hw or fidelity == "acam":
+            raise ValueError("fused attention supports fidelity='int', hw=False"
+                             " (both are proven bit-equal to the slow paths)")
+        from repro.kernels.ops import raceit_attention_fused  # lazy: no cycle
+        return raceit_attention_fused(q, k, v, mask=mask,
+                                      softmax_mode=softmax_mode)
     qq = quantize_tensor(q, bits=8)
     kq = quantize_tensor(k, bits=8)
     vq = quantize_tensor(v, bits=8)

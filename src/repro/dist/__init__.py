@@ -1,0 +1,4 @@
+from .sharding import (  # noqa: F401
+    MeshContext, ShardingPolicy, constraint, current_policy,
+    named_sharding_tree, param_specs, use_policy,
+)

@@ -1,0 +1,247 @@
+"""Logical-axis sharding policy + mesh context (GSPMD distribution layer).
+
+Model code annotates tensors with *logical* axis names ("batch", "heads",
+"mlp", ...) via `constraint`; a `ShardingPolicy` maps those names onto the
+physical mesh axes ("pod", "data", "model"), dropping any assignment that
+does not divide the dimension or would reuse a mesh axis twice. With no
+active policy every annotation is a no-op, so single-host tests and the
+serving stack run unchanged.
+
+Also hosts the small jax-version compatibility shims (`shard_map`,
+`compat_make_mesh`) so model code and tests run on both the 0.4.x toolchain
+baked into this container and newer jax releases.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "MeshContext", "ShardingPolicy", "constraint", "current_policy",
+    "named_sharding_tree", "param_specs", "use_policy", "shard_map",
+    "compat_make_mesh",
+]
+
+_DP_AXES = ("pod", "data")
+
+
+# --------------------------------------------------------------------------
+# jax version compatibility
+# --------------------------------------------------------------------------
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """`jax.shard_map` on new jax; experimental shard_map (check_rep) on old."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check_vma)
+        except TypeError:  # pre-check_vma signature
+            pass
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def compat_make_mesh(shape, axis_names):
+    """jax.make_mesh with Auto axis types where the installed jax has them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axis_names,
+                                 axis_types=(axis_type.Auto,) * len(shape))
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axis_names)
+
+
+# --------------------------------------------------------------------------
+# mesh context
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MeshContext:
+    """Physical mesh + the conventional axis roles used by the model stack."""
+
+    mesh: object = None
+
+    @property
+    def axis_names(self) -> tuple:
+        return tuple(self.mesh.axis_names) if self.mesh is not None else ()
+
+    def _size(self, name: str) -> int:
+        return int(self.mesh.shape[name]) if name in self.axis_names else 1
+
+    @property
+    def model_axis(self) -> Optional[str]:
+        return "model" if "model" in self.axis_names else None
+
+    @property
+    def model_size(self) -> int:
+        return self._size("model")
+
+    @property
+    def present_dp_axes(self) -> tuple:
+        return tuple(a for a in _DP_AXES if a in self.axis_names)
+
+    @property
+    def dp_size(self) -> int:
+        return int(np.prod([self._size(a) for a in self.present_dp_axes],
+                           dtype=np.int64))
+
+
+# --------------------------------------------------------------------------
+# policy
+# --------------------------------------------------------------------------
+
+def _default_axis_map(mesh) -> dict:
+    names = tuple(mesh.axis_names) if mesh is not None else ()
+    dp = tuple(a for a in _DP_AXES if a in names)
+    model = ("model",) if "model" in names else ()
+    return {
+        "batch": dp,
+        "seq": (),            # caches replicate over seq unless make_policy remaps
+        "sp_seq": model,      # Megatron-SP residual stream
+        "heads": model,
+        "mlp": model,
+        "vocab": model,
+        "model": model,
+        "chunks": model,      # SSD chunk dim fallback when heads don't divide
+        "headdim": (),
+    }
+
+
+class ShardingPolicy:
+    """Maps logical axis names onto mesh axes with divisibility checks."""
+
+    def __init__(self, mesh, axis_map: Optional[dict] = None):
+        self.mesh = mesh
+        self.axis_map = dict(axis_map) if axis_map is not None \
+            else _default_axis_map(mesh)
+
+    def mesh_axes(self, name: Optional[str]) -> tuple:
+        if name is None:
+            return ()
+        return tuple(self.axis_map.get(name, ()))
+
+    def axes_size(self, axes) -> int:
+        if isinstance(axes, str):
+            axes = (axes,)
+        return int(np.prod([int(self.mesh.shape[a]) for a in axes],
+                           dtype=np.int64)) if axes else 1
+
+    def spec_for(self, shape: tuple, names: tuple) -> P:
+        """PartitionSpec for `shape`, one logical name (or None) per dim.
+
+        A mesh axis is used at most once; an assignment that does not divide
+        the dimension is dropped (replicated) rather than erroring.
+        """
+        used: set = set()
+        entries = []
+        for dim, name in zip(shape, names):
+            picked = []
+            for ax in self.mesh_axes(name):
+                size = int(self.mesh.shape[ax])
+                if ax in used or size <= 0:
+                    continue
+                if dim % (self.axes_size(tuple(picked)) * size) != 0:
+                    continue
+                picked.append(ax)
+            used.update(picked)
+            if not picked:
+                entries.append(None)
+            elif len(picked) == 1:
+                entries.append(picked[0])
+            else:
+                entries.append(tuple(picked))
+        return P(*entries)
+
+
+# --------------------------------------------------------------------------
+# active-policy context (thread of execution, not thread-safe by design)
+# --------------------------------------------------------------------------
+
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def use_policy(policy: ShardingPolicy, mesh_ctx: Optional[MeshContext] = None):
+    _ACTIVE.append((policy, mesh_ctx))
+    try:
+        yield policy
+    finally:
+        _ACTIVE.pop()
+
+
+def current_policy() -> Optional[ShardingPolicy]:
+    return _ACTIVE[-1][0] if _ACTIVE else None
+
+
+def constraint(x, *names):
+    """Annotate `x` with logical axis names; no-op without an active policy."""
+    pol = current_policy()
+    if pol is None or pol.mesh is None:
+        return x
+    spec = pol.spec_for(x.shape, names)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(pol.mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# parameter sharding rules
+# --------------------------------------------------------------------------
+
+# logical axes per weight leaf, aligned to the *trailing* dims of the leaf
+# (leading scan/expert dims replicate). See DESIGN notes in models/layers.py.
+_PARAM_RULES = {
+    "wq": (None, "heads", None),
+    "wk": (None, "heads", None),
+    "wv": (None, "heads", None),
+    "bq": ("heads", None),
+    "bk": ("heads", None),
+    "bv": ("heads", None),
+    "wo": ("heads", None, None),
+    "w1": (None, "mlp"),
+    "w3": (None, "mlp"),
+    "w2": ("mlp", None),
+    "tok_emb": ("vocab", None),
+    "unembed": (None, "vocab"),
+    "w_z": (None, "heads"),
+    "w_x": (None, "heads"),
+    "w_B": (None, "heads"),
+    "w_C": (None, "heads"),
+    "w_dt": (None, "heads"),
+    "out_proj": ("heads", None),
+}
+
+
+def _leaf_axes(path: str, shape: tuple) -> tuple:
+    name = path.split("/")[-1]
+    rule = _PARAM_RULES.get(name)
+    if rule is None or len(rule) > len(shape):
+        return tuple(None for _ in shape)
+    return tuple(None for _ in range(len(shape) - len(rule))) + tuple(rule)
+
+
+def _path_str(keypath) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in keypath)
+
+
+def param_specs(params_shapes, cfg, policy: ShardingPolicy):
+    """PartitionSpec pytree for a parameter (shape) pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = []
+    for keypath, leaf in flat:
+        shape = tuple(getattr(leaf, "shape", ()))
+        axes = _leaf_axes(_path_str(keypath), shape)
+        specs.append(policy.spec_for(shape, axes))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named_sharding_tree(specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

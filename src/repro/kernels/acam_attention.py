@@ -1,0 +1,404 @@
+"""Pallas TPU kernel: the fused streaming RACE-IT attention pipeline (Fig. 12).
+
+The staged reference (`repro.core.attention.raceit_attention`) runs the five
+Fig.-12 stages as separate XLA ops, materializing the full (Sq, Sk) logit and
+probability matrices in HBM and re-quantizing between every stage. This
+kernel executes the whole pipeline per (head-block x row-block x key-block)
+tile in VMEM, flash-attention style, so the (Sq, Sk) intermediates never
+exist:
+
+  matmul-1   int8 q . K^T, batched over the head block, on the MXU
+  div-add    scale by s_q s_k / sqrt(d), additive mask -> LOGIT codes
+  softmax    the Fig. 8 exp/log LUT dataflow, evaluated *online*: the PoT
+             row-sum streams over key blocks, and LOG(S) is applied lazily
+  matmul-2   PROB codes . V accumulated in an int32 VMEM scratch
+
+The ACAM softmax has no running-max rescale (d_i = x_i - LOG(S) needs only
+the final row sum), but the oracle's PROB re-quantization uses the *global*
+probability max. The kernel therefore makes two passes over the key stream
+(grid dim 0 is the pass):
+
+  pass A  per row: accumulate S = sum EXP(x) and the row logit max; at the
+          last key block fold them into LOG(S) and the row's max PROB code,
+          reducing a global cmax in SMEM (the tensor-wide quantizer scale).
+  pass B  recompute the tile's logit codes, finish d = x - LOG(S)<<1 ->
+          PROB codes, re-quantize with the global cmax exactly like
+          `quantize_tensor`, and accumulate codes . V on the MXU.
+
+Pass A/B recompute matmul-1 twice — the same flops-for-memory trade as
+flash attention's backward — except when the whole problem fits one tile,
+where the kernel collapses to a single grid step with the logit codes live
+in registers. Heads ride inside the block (bg of them per tile) because grid
+steps, not flops, dominate interpret-mode latency; on a real TPU the same
+knob bounds VMEM instead. Every arithmetic step replicates the oracle's
+f32 op sequence, so outputs are bit-identical to the staged path up to
+float summation order of the PoT row sum (asserted to <= 1 PROB ulp in
+tests, and observed exact on every shape exercised there).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import ops as acam_ops
+from repro.core.ops import LOGIT_FMT, PROB_FMT
+
+from .runtime import resolve_interpret
+
+__all__ = ["acam_attention_codes", "softmax_tables", "DEFAULT_BLOCK_Q",
+           "DEFAULT_BLOCK_K", "DEFAULT_BLOCK_G"]
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_K = 512
+DEFAULT_BLOCK_G = 8
+_LANES = 128
+
+
+def softmax_tables(mode: str):
+    """(exp_lut, log_lut, prob_lut, e_min, octave_step, frac_shift) for a mode."""
+    if mode not in ("pot", "pot_fine"):
+        raise ValueError(f"fused attention supports pot/pot_fine, got {mode!r}")
+    exp_op = acam_ops.get_op("exp_pot" if mode == "pot" else "exp_pot_fine")
+    log_op = acam_ops.get_op("log" if mode == "pot" else "log_fine")
+    prob_op = acam_ops.get_op("exp_prob")
+    pot = exp_op.out_fmt
+    frac_shift = LOGIT_FMT.frac_bits - log_op.out_fmt.frac_bits
+    return (exp_op._lut, log_op._lut, prob_op._lut,
+            float(pot.e_min), float(pot.octave_step), frac_shift)
+
+
+def _pot_encode_sum(S, e_min: float, octave_step: float):
+    """PoT-encode the row sum exactly as `PoTFormat.encode` (f32 op order)."""
+    safe = jnp.maximum(S, 2.0 ** (e_min - 1))
+    e = jnp.clip(jnp.round((jnp.log2(safe) - e_min) / octave_step), 0, 254)
+    codes = (e + 1).astype(jnp.int32)
+    return jnp.where(S < 2.0 ** (e_min - octave_step / 2), 0, codes)
+
+
+def requant_scale(cmax):
+    """`quantize_tensor(probs, bits=8).scale` from the max PROB code.
+
+    Probs live on the exact 2^-8 grid, so their tensor max is cmax * 2^-8
+    with no rounding; this f32 op sequence is the bit-exactness contract
+    with the oracle — it exists only here (kernels and wrappers share it).
+    """
+    amax = cmax.astype(jnp.float32) * PROB_FMT.scale
+    return jnp.maximum(amax, 1e-12) / 127
+
+
+def _requant_code_table(cmax, prob_lut_vals):
+    """PROB-code -> re-quantized int8 code, composed per code (256 entries).
+
+    Elementwise application of a value-wise function commutes with the
+    table, so gathering this is bit-identical to quantizing the
+    materialized probabilities with `quantize_tensor`.
+    """
+    p_tab = prob_lut_vals.astype(jnp.float32) * PROB_FMT.scale
+    return jnp.clip(jnp.round(p_tab / requant_scale(cmax)),
+                    -128, 127).astype(jnp.int32)
+
+
+def _attn_kernel(s1_ref, qoff_ref, q_ref, k_ref, v_ref, *rest,
+                 nq: int, nk: int, bg: int, bq: int, bk: int,
+                 g_real: int, sq_real: int, sk_real: int,
+                 sqrt_d: Optional[float],
+                 e_min: float, octave_step: float, frac_shift: int,
+                 causal: bool, has_mask: bool):
+    if has_mask:
+        mask_ref, exp_val_ref, log_lut_ref, prob_lut_ref = rest[:4]
+        rest = rest[4:]
+    else:
+        mask_ref = None
+        exp_val_ref, log_lut_ref, prob_lut_ref = rest[:3]
+        rest = rest[3:]
+    o_ref, cmax_out_ref, sum_ref, xmax_ref, acc_ref, cmax_ref = rest
+
+    ph = pl.program_id(0)
+    g = pl.program_id(1)
+    i = pl.program_id(2)
+    k = pl.program_id(3)
+    rows = pl.dslice((g * nq + i) * bg * bq, bg * bq)  # per-row scratch slots
+    has_pad_k = sk_real % bk != 0
+
+    def key_valid():
+        return (k * bk + jax.lax.broadcasted_iota(jnp.int32, (bg, bq, bk), 2)
+                ) < sk_real  # padded key columns carry no weight at all
+
+    def tile_logit_codes():
+        """matmul-1 + div-add: (bg, bq, bk) LOGIT codes."""
+        r = jax.lax.dot_general(
+            q_ref[...].astype(jnp.int32), k_ref[...].astype(jnp.int32),
+            (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.int32)
+        logits = r.astype(jnp.float32) * s1_ref[0, 0]
+        if sqrt_d is not None:
+            logits = logits / sqrt_d
+        xc = jnp.clip(jnp.round(logits / LOGIT_FMT.scale),
+                      LOGIT_FMT.code_min, LOGIT_FMT.code_max).astype(jnp.int32)
+        if has_mask:
+            msk = mask_ref[...] != 0
+        elif causal:
+            qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bg, bq, bk), 1)
+            kpos = k * bk + jax.lax.broadcasted_iota(jnp.int32, (bg, bq, bk), 2)
+            msk = kpos <= qpos + qoff_ref[0, 0]
+        else:
+            msk = None
+        if msk is not None:  # masked keys sit at the LOGIT minimum (div-add)
+            xc = jnp.where(msk, xc, LOGIT_FMT.code_min)
+        return xc
+
+    def load_row_sums():
+        return sum_ref[rows, :].reshape(bg, bq, 1)
+
+    # ---------------- pass A: streaming PoT row sum + global PROB max ------
+    @pl.when(ph == 0)
+    def _pass_a():
+        @pl.when((g == 0) & (i == 0) & (k == 0))
+        def _init_global():
+            cmax_ref[0, 0] = 0
+
+        @pl.when(k == 0)
+        def _init_rows():
+            sum_ref[rows, :] = jnp.zeros((bg * bq, 1), jnp.float32)
+            xmax_ref[...] = jnp.full((bg, bq, 1), LOGIT_FMT.code_min, jnp.int32)
+
+        xc = tile_logit_codes()
+        # exp_val_ref folds the exp LUT with its PoT decode: one f32 gather
+        e_vals = exp_val_ref[xc + 128]
+        xmax_tile = xc
+        if has_pad_k:
+            valid = key_valid()
+            e_vals = jnp.where(valid, e_vals, 0.0)
+            xmax_tile = jnp.where(valid, xc, LOGIT_FMT.code_min)
+        sum_ref[rows, :] += jnp.sum(e_vals, axis=-1, keepdims=True
+                                    ).reshape(bg * bq, 1)
+        xmax_ref[...] = jnp.maximum(
+            xmax_ref[...], jnp.max(xmax_tile, axis=-1, keepdims=True))
+
+        @pl.when(k == nk - 1)
+        def _row_finish():
+            L = log_lut_ref[_pot_encode_sum(load_row_sums(), e_min,
+                                            octave_step)]
+            dmax = jnp.clip(xmax_ref[...] - (L << frac_shift),
+                            LOGIT_FMT.code_min, LOGIT_FMT.code_max)
+            c_row = prob_lut_ref[dmax + 128]
+            rpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bg, bq, 1), 1)
+            gpos = g * bg + jax.lax.broadcasted_iota(jnp.int32, (bg, bq, 1), 0)
+            c_row = jnp.where((rpos < sq_real) & (gpos < g_real), c_row, 0)
+            cmax_ref[0, 0] = jnp.maximum(cmax_ref[0, 0], jnp.max(c_row))
+
+    # ---------------- pass B: PROB codes . V with the exact oracle scale ---
+    @pl.when(ph == 1)
+    def _pass_b():
+        @pl.when(k == 0)
+        def _init_acc():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        xc = tile_logit_codes()
+        L = log_lut_ref[_pot_encode_sum(load_row_sums(), e_min, octave_step)]
+        d = jnp.clip(xc - (L << frac_shift),
+                     LOGIT_FMT.code_min, LOGIT_FMT.code_max)
+        pc = _requant_code_table(cmax_ref[0, 0], prob_lut_ref[...])[d + 128]
+        if has_pad_k:  # padded keys: PROB code 0 -> requantized code 0
+            pc = jnp.where(key_valid(), pc, 0)
+        acc_ref[...] += jax.lax.dot_general(
+            pc, v_ref[...].astype(jnp.int32),
+            (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.int32)
+
+        @pl.when(k == nk - 1)
+        def _write():
+            o_ref[...] = acc_ref[...]
+            cmax_out_ref[0, 0] = cmax_ref[0, 0]
+
+
+def _attn_kernel_single(s1_ref, qoff_ref, q_ref, k_ref, v_ref, *rest,
+                        bg: int, bq: int, bk: int,
+                        g_real: int, sq_real: int, sk_real: int,
+                        sqrt_d: Optional[float],
+                        e_min: float, octave_step: float, frac_shift: int,
+                        causal: bool, has_mask: bool):
+    """One-tile fast path: the whole pipeline in a single grid step.
+
+    When (heads, Sq, Sk) fit one VMEM tile the two-pass structure degenerates
+    — the logit codes stay live in registers between the row-sum and the
+    PROB matmul, so there is no second key sweep and no scratch traffic.
+    Numerics are identical to the streaming kernel.
+    """
+    if has_mask:
+        mask_ref, exp_val_ref, log_lut_ref, prob_lut_ref, o_ref, cmax_out_ref \
+            = rest
+    else:
+        mask_ref = None
+        exp_val_ref, log_lut_ref, prob_lut_ref, o_ref, cmax_out_ref = rest
+    has_pad_k = sk_real % bk != 0
+
+    r = jax.lax.dot_general(
+        q_ref[...].astype(jnp.int32), k_ref[...].astype(jnp.int32),
+        (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.int32)
+    logits = r.astype(jnp.float32) * s1_ref[0, 0]
+    if sqrt_d is not None:
+        logits = logits / sqrt_d
+    xc = jnp.clip(jnp.round(logits / LOGIT_FMT.scale),
+                  LOGIT_FMT.code_min, LOGIT_FMT.code_max).astype(jnp.int32)
+    if has_mask:
+        xc = jnp.where(mask_ref[...] != 0, xc, LOGIT_FMT.code_min)
+    elif causal:
+        qpos = jax.lax.broadcasted_iota(jnp.int32, (bg, bq, bk), 1)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (bg, bq, bk), 2)
+        xc = jnp.where(kpos <= qpos + qoff_ref[0, 0], xc, LOGIT_FMT.code_min)
+
+    e_vals = exp_val_ref[xc + 128]
+    xmax_tile = xc
+    if has_pad_k:
+        valid = jax.lax.broadcasted_iota(jnp.int32, (bg, bq, bk), 2) < sk_real
+        e_vals = jnp.where(valid, e_vals, 0.0)
+        xmax_tile = jnp.where(valid, xc, LOGIT_FMT.code_min)
+    S = jnp.sum(e_vals, axis=-1, keepdims=True)
+    L = log_lut_ref[_pot_encode_sum(S, e_min, octave_step)]
+
+    dmax = jnp.clip(jnp.max(xmax_tile, axis=-1, keepdims=True)
+                    - (L << frac_shift),
+                    LOGIT_FMT.code_min, LOGIT_FMT.code_max)
+    c_row = prob_lut_ref[dmax + 128]
+    rpos = jax.lax.broadcasted_iota(jnp.int32, (bg, bq, 1), 1)
+    gpos = jax.lax.broadcasted_iota(jnp.int32, (bg, bq, 1), 0)
+    c_row = jnp.where((rpos < sq_real) & (gpos < g_real), c_row, 0)
+    cmax = jnp.max(c_row)
+
+    d = jnp.clip(xc - (L << frac_shift),
+                 LOGIT_FMT.code_min, LOGIT_FMT.code_max)
+    pc = _requant_code_table(cmax, prob_lut_ref[...])[d + 128]
+    if has_pad_k:
+        pc = jnp.where(valid, pc, 0)
+    o_ref[...] = jax.lax.dot_general(
+        pc, v_ref[...].astype(jnp.int32),
+        (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.int32)
+    cmax_out_ref[0, 0] = cmax
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "scale_by_sqrt_d", "causal",
+                              "block_q", "block_k", "block_g", "interpret"))
+def acam_attention_codes(
+    q_codes: jax.Array,   # (G, Sq, D) int8 — G folds batch x heads
+    k_codes: jax.Array,   # (G, Sk, D) int8
+    v_codes: jax.Array,   # (G, Sk, D) int8
+    logit_scale: jax.Array,          # () f32: s_q * s_k (div-add numerator)
+    mask: Optional[jax.Array] = None,  # (G, Sq, Sk) bool; None => causal/full
+    q_offset: jax.Array | int = 0,     # causal decode offset (cache index)
+    mode: str = "pot",
+    scale_by_sqrt_d: Optional[int] = None,  # d to fold 1/sqrt(d); None = folded
+    causal: bool = False,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    block_g: int = DEFAULT_BLOCK_G,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused Fig.-12 attention on int8 codes.
+
+    Returns (out, cmax): out (G, Sq, D) int32 — the matmul-2 accumulator over
+    re-quantized PROB codes — and cmax () int32, the tensor-wide max PROB
+    code, from which the caller rebuilds the oracle's probability scale
+    ``max(cmax/256, 1e-12)/127``. Never materializes an (Sq, Sk) array.
+    """
+    interpret = resolve_interpret(interpret)
+    exp_lut, log_lut, prob_lut, e_min, octave_step, frac_shift = \
+        softmax_tables(mode)
+
+    G, Sq, D = q_codes.shape
+    Sk = k_codes.shape[1]
+    bg = min(block_g, G)
+    bq = min(block_q, max(8, Sq))
+    bk = min(block_k, max(_LANES, Sk))
+    pad_g, pad_q, pad_k = (-G) % bg, (-Sq) % bq, (-Sk) % bk
+    # lane-align the head dim only when compiling for real hardware; in
+    # interpret mode the padding would just double the MXU work
+    pad_d = 0 if interpret else (-D) % _LANES
+    pad3 = lambda a: jnp.pad(a, ((0, pad_g), (0, 0), (0, 0)))
+    qp = pad3(jnp.pad(q_codes, ((0, 0), (0, pad_q), (0, pad_d))))
+    kp = pad3(jnp.pad(k_codes, ((0, 0), (0, pad_k), (0, pad_d))))
+    vp = pad3(jnp.pad(v_codes, ((0, 0), (0, pad_k), (0, pad_d))))
+    Gp, Sqp, Skp, Dp = G + pad_g, Sq + pad_q, Sk + pad_k, D + pad_d
+    ng, nq, nk = Gp // bg, Sqp // bq, Skp // bk
+    one_tile = ng == nq == nk == 1  # whole problem fits a single VMEM tile
+
+    sqrt_d = float(np.sqrt(np.float32(scale_by_sqrt_d), dtype=np.float32)) \
+        if scale_by_sqrt_d is not None else None
+    logit_scale = jnp.asarray(logit_scale, jnp.float32)
+    if sqrt_d is not None and (float(np.log2(sqrt_d)) % 1.0 == 0.0):
+        # power-of-two scaling commutes with f32 rounding, so folding the
+        # exact /sqrt(d) into the scalar is bit-identical to the oracle's
+        # multiply-then-divide and saves a full-tile division per pass
+        logit_scale = logit_scale / sqrt_d
+        sqrt_d = None
+
+    spec_scalar = pl.BlockSpec((1, 1), lambda p, g, i, k: (0, 0))
+    spec_lut = pl.BlockSpec((256,), lambda p, g, i, k: (0,))
+    in_specs = [
+        spec_scalar,                                              # logit scale
+        spec_scalar,                                              # q offset
+        pl.BlockSpec((bg, bq, Dp), lambda p, g, i, k: (g, i, 0)),  # q
+        pl.BlockSpec((bg, bk, Dp), lambda p, g, i, k: (g, k, 0)),  # k
+        pl.BlockSpec((bg, bk, Dp), lambda p, g, i, k: (g, k, 0)),  # v
+    ]
+    operands = [
+        logit_scale.reshape(1, 1),
+        jnp.asarray(q_offset, jnp.int32).reshape(1, 1),
+        qp, kp, vp,
+    ]
+    if mask is not None:
+        mp = pad3(jnp.pad(mask.astype(jnp.int8),
+                          ((0, 0), (0, pad_q), (0, pad_k))))
+        in_specs.append(pl.BlockSpec((bg, bq, bk),
+                                     lambda p, g, i, k: (g, i, k)))
+        operands.append(mp)
+    # fold the exp LUT with its PoT decode into one f32 table, built with the
+    # *same jnp ops* as PoTFormat.decode so table entries are bit-identical
+    ec = jnp.asarray(exp_lut, jnp.int32)
+    exp_val = jnp.where(
+        ec == 0, 0.0,
+        jnp.exp2(jnp.minimum((ec - 1).astype(jnp.float32) * octave_step
+                             + e_min, 126.0)))
+    in_specs += [spec_lut, spec_lut, spec_lut]
+    operands += [exp_val, jnp.asarray(log_lut, jnp.int32),
+                 jnp.asarray(prob_lut, jnp.int32)]
+
+    if one_tile:  # single grid step, no scratch, no second key sweep
+        kernel = functools.partial(
+            _attn_kernel_single, bg=bg, bq=bq, bk=bk,
+            g_real=G, sq_real=Sq, sk_real=Sk,
+            sqrt_d=sqrt_d, e_min=e_min, octave_step=octave_step,
+            frac_shift=frac_shift, causal=causal, has_mask=mask is not None)
+        scratch = []
+        grid = (1, 1, 1, 1)
+    else:
+        kernel = functools.partial(
+            _attn_kernel, nq=nq, nk=nk, bg=bg, bq=bq, bk=bk,
+            g_real=G, sq_real=Sq, sk_real=Sk,
+            sqrt_d=sqrt_d, e_min=e_min, octave_step=octave_step,
+            frac_shift=frac_shift, causal=causal, has_mask=mask is not None)
+        scratch = [
+            pltpu.VMEM((Gp * Sqp, 1), jnp.float32),  # streaming PoT row sums
+            pltpu.VMEM((bg, bq, 1), jnp.int32),      # row logit max (pass A)
+            pltpu.VMEM((bg, bq, Dp), jnp.int32),     # matmul-2 accumulator
+            pltpu.SMEM((1, 1), jnp.int32),           # global PROB code max
+        ]
+        grid = (2, ng, nq, nk)
+
+    out, cmax = pl.pallas_call(
+        kernel,
+        out_shape=(jax.ShapeDtypeStruct((Gp, Sqp, Dp), jnp.int32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)),
+        in_specs=in_specs,
+        out_specs=(pl.BlockSpec((bg, bq, Dp), lambda p, g, i, k: (g, i, 0)),
+                   spec_scalar),
+        scratch_shapes=scratch,
+        grid=grid,
+        interpret=interpret,
+    )(*operands)
+    return out[:G, :Sq, :D], cmax[0, 0]

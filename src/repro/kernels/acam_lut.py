@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .runtime import resolve_interpret
+
 DEFAULT_BLOCK_ROWS = 256
 LANES = 128
 
@@ -28,12 +30,13 @@ def _lut_kernel(x_ref, lut_ref, o_ref, *, bias: int):
 @functools.partial(jax.jit, static_argnames=("bias", "block_rows", "interpret"))
 def acam_lut_2d(x: jax.Array, lut: jax.Array, bias: int = 128,
                 block_rows: int = DEFAULT_BLOCK_ROWS,
-                interpret: bool = True) -> jax.Array:
+                interpret: bool | None = None) -> jax.Array:
     """Apply an ACAM LUT to a 2-D int tensor of shape (R, C).
 
     x: int8/int32 codes in [-2^(n-1), 2^(n-1)); lut: (2^n,) output codes.
     Rows/cols are padded to tile boundaries and cropped after.
     """
+    interpret = resolve_interpret(interpret)
     R, C = x.shape
     br = min(block_rows, max(8, R))
     pad_r = (-R) % br
@@ -56,7 +59,7 @@ def acam_lut_2d(x: jax.Array, lut: jax.Array, bias: int = 128,
 
 
 def acam_lut(x: jax.Array, lut: jax.Array, bias: int = 128,
-             interpret: bool = True) -> jax.Array:
+             interpret: bool | None = None) -> jax.Array:
     """N-D wrapper: flatten leading dims to rows."""
     shape = x.shape
     flat = x.reshape(-1, shape[-1]) if x.ndim >= 2 else x.reshape(1, -1)

@@ -26,6 +26,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.crossbar import CrossbarConfig
 
+from .runtime import resolve_interpret
+
 
 def _mvm_kernel(x_ref, w_ref, o_ref, acc_ref, *, cfg: CrossbarConfig,
                 nsteps: int, k_real: int, bk: int):
@@ -79,9 +81,10 @@ def _mvm_kernel(x_ref, w_ref, o_ref, acc_ref, *, cfg: CrossbarConfig,
 @functools.partial(jax.jit, static_argnames=("cfg", "bm", "bn", "bk", "interpret"))
 def acam_mvm(x: jax.Array, w: jax.Array, cfg: CrossbarConfig = CrossbarConfig(),
              bm: int = 256, bn: int = 256, bk: int | None = None,
-             interpret: bool = True) -> jax.Array:
+             interpret: bool | None = None) -> jax.Array:
     """Bit-sliced crossbar matmul: x (M, K) int8 codes, w (K, N) int8 codes
     -> (M, N) int32, equal to x @ w under an ideal ADC."""
+    interpret = resolve_interpret(interpret)
     M, K = x.shape
     K2, N = w.shape
     assert K == K2

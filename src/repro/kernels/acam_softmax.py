@@ -19,6 +19,8 @@ from jax.experimental import pallas as pl
 from repro.core import ops as acam_ops
 from repro.core.ops import LOGIT_FMT
 
+from .runtime import resolve_interpret
+
 LANES = 128
 
 
@@ -52,12 +54,14 @@ def _softmax_kernel(x_ref, exp_lut_ref, log_lut_ref, prob_lut_ref, o_ref, *,
 
 @functools.partial(jax.jit, static_argnames=("mode", "block_rows", "interpret"))
 def acam_softmax_codes(x_codes: jax.Array, mode: str = "pot",
-                       block_rows: int = 128, interpret: bool = True) -> jax.Array:
+                       block_rows: int = 128,
+                       interpret: bool | None = None) -> jax.Array:
     """x_codes: (R, L) int LOGIT_FMT codes -> (R, L) PROB_FMT codes (int32).
 
     Masked positions must already be LOGIT_FMT.code_min (the div-add stage
     writes the mask before softmax, paper Fig. 12).
     """
+    interpret = resolve_interpret(interpret)
     exp_op = acam_ops.get_op("exp_pot" if mode == "pot" else "exp_pot_fine")
     log_op = acam_ops.get_op("log" if mode == "pot" else "log_fine")
     prob_op = acam_ops.get_op("exp_prob")
@@ -92,7 +96,7 @@ def acam_softmax_codes(x_codes: jax.Array, mode: str = "pot",
 
 
 def acam_softmax_kernel(x: jax.Array, mode: str = "pot",
-                        interpret: bool = True) -> jax.Array:
+                        interpret: bool | None = None) -> jax.Array:
     """Float logits -> float probs through the fused kernel (N-D wrapper)."""
     prob_op = acam_ops.get_op("exp_prob")
     shape = x.shape

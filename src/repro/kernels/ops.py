@@ -1,12 +1,14 @@
 """jit'd public wrappers over the Pallas kernels.
 
-These are the entry points the serving stack uses on TPU; `interpret=True`
-(the default in this CPU container) executes the kernel bodies in Python for
-bit-exact validation against ref.py.
+These are the entry points the serving stack uses on TPU; ``interpret=None``
+resolves via `runtime.default_interpret` — kernel bodies execute as traced
+jax ops on CPU containers (bit-exact validation against ref.py) and compile
+to Mosaic on real TPU backends with no code change.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,13 +17,15 @@ from repro.core import ops as acam_ops
 from repro.core.crossbar import CrossbarConfig
 from repro.core.quant import quantize_tensor
 
+from .acam_attention import acam_attention_codes  # noqa: F401
 from .acam_lut import acam_lut, acam_lut_2d  # noqa: F401
 from .acam_mvm import acam_mvm  # noqa: F401
 from .acam_softmax import acam_softmax_codes, acam_softmax_kernel  # noqa: F401
+from .runtime import default_interpret  # noqa: F401
 
 
 def acam_activation(x: jax.Array, name: str = "gelu",
-                    interpret: bool = True) -> jax.Array:
+                    interpret: Optional[bool] = None) -> jax.Array:
     """Float tensor through a named Compute-ACAM activation (kernelized)."""
     op = acam_ops.get_op(name)
     codes = op.in_fmt.encode(x)
@@ -32,7 +36,7 @@ def acam_activation(x: jax.Array, name: str = "gelu",
 
 def raceit_linear(x: jax.Array, w: jax.Array,
                   cfg: CrossbarConfig = CrossbarConfig(),
-                  interpret: bool = True) -> jax.Array:
+                  interpret: Optional[bool] = None) -> jax.Array:
     """Float linear layer on the kernelized crossbar DPE lane."""
     xq = quantize_tensor(x.astype(jnp.float32), bits=cfg.input_bits)
     wq = quantize_tensor(w.astype(jnp.float32), bits=cfg.weight_bits, axis=1)
@@ -40,3 +44,52 @@ def raceit_linear(x: jax.Array, w: jax.Array,
     y = acam_mvm(xq.codes.reshape(-1, x.shape[-1]), wq.codes, cfg,
                  interpret=interpret)
     return (y.astype(jnp.float32) * (xq.scale * wq.scale)).reshape(*lead, -1)
+
+
+def prob_requant_scale(cmax: jax.Array) -> jax.Array:
+    """The oracle's PROB re-quantization scale (see acam_attention.requant_scale)."""
+    from .acam_attention import requant_scale
+    return requant_scale(cmax).astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("softmax_mode", "fold_scale", "causal",
+                                   "block_q", "block_k", "interpret"))
+def raceit_attention_fused(
+    q: jax.Array,  # (B, H, Sq, D) float
+    k: jax.Array,  # (B, H, Sk, D) float
+    v: jax.Array,  # (B, H, Sk, D) float
+    mask: Optional[jax.Array] = None,  # broadcastable to (B, H, Sq, Sk), bool
+    softmax_mode: str = "pot",
+    q_offset: jax.Array | int = 0,
+    fold_scale: bool = False,  # True: 1/sqrt(d) already folded into q
+    causal: bool = False,      # in-kernel causal mask (no mask array at all)
+    block_q: int | None = None,
+    block_k: int | None = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused Fig.-12 attention, float in/out — drop-in for `raceit_attention`.
+
+    Streams over key blocks in one Pallas kernel; the (Sq, Sk) logit and
+    probability matrices never exist (pass an in-kernel ``causal`` mask, or
+    no mask, to avoid materializing a mask array too). Matches the staged
+    `repro.core.attention.raceit_attention` oracle to <=1 PROB_FMT ulp
+    (bit-exact on every shape in tests/test_attention_fused.py).
+    """
+    from .acam_attention import DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    qq = quantize_tensor(q, bits=8)
+    kq = quantize_tensor(k, bits=8)
+    vq = quantize_tensor(v, bits=8)
+    if mask is not None:
+        mask = jnp.broadcast_to(mask, (B, H, Sq, Sk)).reshape(B * H, Sq, Sk)
+    out32, cmax = acam_attention_codes(
+        qq.codes.reshape(B * H, Sq, D), kq.codes.reshape(B * H, Sk, D),
+        vq.codes.reshape(B * H, Sk, D), qq.scale * kq.scale, mask,
+        q_offset=q_offset, mode=softmax_mode,
+        scale_by_sqrt_d=None if fold_scale else D, causal=causal,
+        block_q=block_q or DEFAULT_BLOCK_Q, block_k=block_k or DEFAULT_BLOCK_K,
+        interpret=interpret)
+    p_scale = prob_requant_scale(cmax)
+    return (out32.astype(jnp.float32) * (p_scale * vq.scale)
+            ).reshape(B, H, Sq, D)

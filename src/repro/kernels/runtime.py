@@ -1,0 +1,21 @@
+"""Kernel runtime policy helpers shared by all Pallas wrappers."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["default_interpret", "resolve_interpret"]
+
+
+def default_interpret() -> bool:
+    """Interpret Pallas kernels everywhere except on real TPU backends.
+
+    Interpret mode executes kernel bodies as traced jax ops — bit-exact and
+    debuggable on CPU/GPU containers; on TPU the same wrappers compile to
+    Mosaic so the serving stack runs the real kernels with no code change.
+    """
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret) -> bool:
+    """None -> backend default; bool passes through (explicit override)."""
+    return default_interpret() if interpret is None else bool(interpret)

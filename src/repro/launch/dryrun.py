@@ -99,6 +99,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str = "digital",
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax<=0.4.x returns [dict]
+        ca = ca[0] if ca else {}
     hlo = hlo_analysis.analyze_hlo(compiled.as_text())
 
     mf = inputs.model_flops(cfg, spec["params"], shape)

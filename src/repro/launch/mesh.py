@@ -6,22 +6,21 @@ XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* importing jax.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.dist.sharding import compat_make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """TPU v5e target: one pod = 16x16 = 256 chips; multi-pod = 2 pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1, pod: int | None = None):
     """Small mesh over whatever devices exist (tests / examples)."""
     shape = ((pod, data, model) if pod else (data, model))
     axes = (("pod", "data", "model") if pod else ("data", "model"))
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 # Hardware constants for the roofline (TPU v5e, per chip).

@@ -310,16 +310,42 @@ def _local_block_attention(q, k, v, window: int, scale: float):
     return o.reshape(B, S, H, hd)
 
 
-def _raceit_full_attention(q, k, v, mask, scale, exec_cfg: ExecConfig):
+def _raceit_full_attention(q, k, v, mask, scale, exec_cfg: ExecConfig,
+                           causal_offset=None):
     """Analog-faithful attention (quantized matmuls + ACAM softmax).
 
-    q: (B, Sq, H, hd) flat heads; k/v: (B, Sk, KV, hd)."""
+    q: (B, Sq, H, hd) flat heads; k/v: (B, Sk, KV, hd). With
+    ``exec_cfg.fused_attention`` the whole pipeline runs in the streaming
+    Pallas kernel (one VMEM pass per tile, no (Sq, Sk) intermediates);
+    otherwise the staged XLA pipeline below is the bit-accurate oracle.
+    ``causal_offset`` (fused only) replaces the mask array with the kernel's
+    in-kernel causal mask, so not even a mask of score shape is ever built.
+    """
     rep = q.shape[2] // k.shape[2]
     kf = jnp.repeat(k, rep, axis=2)
     vf = jnp.repeat(v, rep, axis=2)
     qq = quantize_tensor(q.astype(jnp.float32) * scale, bits=8)
     kq = quantize_tensor(kf.astype(jnp.float32), bits=8)
     vq = quantize_tensor(vf.astype(jnp.float32), bits=8)
+    if exec_cfg.fused_attention:
+        from repro.kernels.ops import acam_attention_codes, prob_requant_scale
+        b, sq, h, hd = q.shape
+        sk = k.shape[1]
+        if causal_offset is None:
+            mb = jnp.broadcast_to(mask[:, None],
+                                  (b, h, sq, sk)).reshape(b * h, sq, sk)
+        else:
+            mb = None
+        out32, cmax = acam_attention_codes(
+            qq.codes.transpose(0, 2, 1, 3).reshape(b * h, sq, hd),
+            kq.codes.transpose(0, 2, 1, 3).reshape(b * h, sk, hd),
+            vq.codes.transpose(0, 2, 1, 3).reshape(b * h, sk, hd),
+            qq.scale * kq.scale, mb,
+            q_offset=causal_offset if causal_offset is not None else 0,
+            causal=causal_offset is not None,
+            mode=exec_cfg.softmax_mode)
+        out = out32.astype(jnp.float32) * (prob_requant_scale(cmax) * vq.scale)
+        return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
     s32 = jnp.einsum("bqhd,bchd->bhqc", qq.codes.astype(jnp.int32),
                      kq.codes.astype(jnp.int32))
     logits = s32.astype(jnp.float32) * (qq.scale * kq.scale)
@@ -414,9 +440,18 @@ def attention(
         else:
             mask_fn = lambda qi, ki: ki <= qi + q_off
         if exec_cfg.mode == "raceit" and k.shape[1] <= 4096:
-            msk = mask_fn(jnp.arange(sq)[:, None], jnp.arange(k.shape[1])[None, :])
-            o = _raceit_full_attention(q, k, v, jnp.broadcast_to(msk, (b,) + msk.shape),
-                                       scale, exec_cfg)
+            if (exec_cfg.fused_attention and cross_kv is None and cfg.causal
+                    and not local):
+                # plain causal: the fused kernel masks from block indices, so
+                # no score-shaped mask array is materialized either
+                o = _raceit_full_attention(q, k, v, None, scale, exec_cfg,
+                                           causal_offset=q_off)
+            else:
+                msk = mask_fn(jnp.arange(sq)[:, None],
+                              jnp.arange(k.shape[1])[None, :])
+                o = _raceit_full_attention(
+                    q, k, v, jnp.broadcast_to(msk, (b,) + msk.shape),
+                    scale, exec_cfg)
         elif (local and cross_kv is None and cfg.causal
               and sq == k.shape[1] and sq % cfg.window == 0
               and sq > cfg.window):  # train & single-shot prefill paths

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ExecConfig, ModelConfig
 from repro.core.softmax import acam_softmax
-from repro.dist.sharding import MeshContext
+from repro.dist.sharding import MeshContext, shard_map
 from jax.sharding import PartitionSpec as P
 
 from . import layers
@@ -135,7 +135,7 @@ def moe(p: Params, x: jax.Array, cfg: ModelConfig, exec_cfg: ExecConfig,
 
     fn = partial(_moe_local, cfg=cfg, exec_cfg=exec_cfg, axis=model,
                  tp_size=mesh_ctx.model_size)
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh, in_specs=(w_specs, x_spec), out_specs=x_spec,
         check_vma=False,
     )(p, x)

@@ -3,7 +3,10 @@
 `GenerationEngine` serves one batch bucket end-to-end (prefill then greedy /
 temperature sampling decode); `serve/batching.py` schedules request queues
 onto buckets. Supports both execution modes — `raceit` runs the paper's
-quantized path (int8 crossbar matmuls, ACAM softmax with PoT).
+quantized path (int8 crossbar matmuls, ACAM softmax with PoT); pass
+``ExecConfig(mode="raceit", fused_attention=True)`` to route prefill
+attention through the fused streaming Pallas kernel (one VMEM pass over the
+Fig.-12 pipeline, no (Sq, Sk) intermediates in HBM).
 """
 from __future__ import annotations
 
@@ -32,6 +35,9 @@ class GenerationEngine:
 
     def __post_init__(self):
         self.model = Model(self.cfg, self.exec_cfg, self.mesh_ctx)
+        # one jitted prefill serves both paths: encoder-decoder models pass
+        # enc_feats as an extra traced arg (re-jitting per generate() call
+        # recompiled the whole prefill graph every request).
         self._prefill = jax.jit(self.model.prefill)
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
 
@@ -43,8 +49,8 @@ class GenerationEngine:
         assert P + n_new <= self.max_len
         cache = self.model.init_cache(B, self.max_len)
         if self.cfg.is_encoder_decoder:
-            logits, cache = jax.jit(self.model.prefill)(
-                self.params, prompts, cache, enc_feats=enc_feats)
+            logits, cache = self._prefill(self.params, prompts, cache,
+                                          enc_feats=enc_feats)
         else:
             logits, cache = self._prefill(self.params, prompts, cache)
         out = []

@@ -1,0 +1,66 @@
+"""Use real `hypothesis` when installed; otherwise a deterministic fallback.
+
+The container this repo ships in does not always have hypothesis, and the
+tier-1 suite must not depend on installing anything. The fallback keeps the
+property tests running as fixed-seed sweeps: `given(...)` calls the test with
+`max_examples` pseudo-random samples drawn from a per-test deterministic
+stream, so failures reproduce exactly. Only the strategy subset used by this
+suite is implemented (integers, floats, booleans, sampled_from).
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: int(r.integers(min_value,
+                                                      max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False, **_):
+            lo, hi = float(min_value), float(max_value)
+            return _Strategy(lambda r: float(lo + (hi - lo) * r.random()))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda r: opts[int(r.integers(0, len(opts)))])
+
+    def given(*strats):
+        def deco(fn):
+            # no functools.wraps: pytest must see the zero-arg signature,
+            # not the wrapped function's parameters (they'd look like fixtures)
+            def runner():
+                n = getattr(runner, "_max_examples", 10)
+                rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+                for _ in range(n):
+                    fn(*(s.draw(rng) for s in strats))
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner._max_examples = 10
+            return runner
+        return deco
+
+    def settings(max_examples=10, **_):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

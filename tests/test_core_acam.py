@@ -2,7 +2,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (FixedPointFormat, PoTFormat, compile_1var,
                         compile_2var, eval_range_program, eval_rect_program,

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (CrossbarConfig, acam_softmax, bit_sliced_matmul,
                         crossbar_linear, quantize_tensor, softmax_reference)

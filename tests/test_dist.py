@@ -21,8 +21,8 @@ ROOT = Path(__file__).resolve().parent.parent
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.dist.sharding import compat_make_mesh
+    return compat_make_mesh((1, 1), ("data", "model"))
 
 
 def test_param_specs_rules(key):
