@@ -59,6 +59,73 @@ def _attention_rows(rng, reps=8):
     ]
 
 
+def _decode_attention_rows(rng, reps=8):
+    """Decode step: Sq=1 against a KV cache, three candidates interleaved.
+
+    - ``staged``   — the quantized Fig.-12 oracle (`raceit_attention`) on the
+      valid cache slice: the fused kernel's bit-exactness partner, i.e. what
+      a paper-faithful non-fused decode step costs;
+    - ``floatref`` — the float-score + ACAM-softmax shortcut that was the
+      raceit serving decode path *before* the fused default flip (different,
+      less paper-faithful numerics: k/v and probs never quantized);
+    - ``fused``    — `raceit_attention_decode_fused` at the exact serving
+      configuration (default block sizes, traced ``kv_len`` over the
+      fixed-shape buffer; at Sk=2048 this is the multi-tile streaming
+      kernel, same as `layers._raceit_fused_decode`).
+
+    Min-of-N with candidates interleaved, like the prefill pair. See
+    EXPERIMENTS.md §Decode for methodology and the serving-numerics note.
+    """
+    import math
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.attention import raceit_attention
+    from repro.core.softmax import acam_softmax
+    from repro.kernels.ops import raceit_attention_decode_fused
+
+    B, H, D = 1, 8, 64  # B*H = 8, matching the tracked prefill shape
+    scale = 1.0 / math.sqrt(D)
+
+    @jax.jit
+    def float_decode(q, k, v):  # the pre-fused-default serving decode path
+        s = jnp.einsum("bhqd,bhcd->bhqc", q * scale, k)
+        pr = acam_softmax(s, axis=-1, mode="pot")
+        return jnp.einsum("bhqc,bhcd->bhqd", pr, v)
+
+    rows = []
+    for Sk in (512, 2048):
+        q = jnp.asarray(rng.normal(0, 1, (B, H, 1, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(0, 1, (B, H, Sk, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(0, 1, (B, H, Sk, D)), jnp.float32)
+        kv_len = jnp.int32(Sk)  # steady-state: cache fully filled
+        cands = {
+            "staged": lambda: raceit_attention(q, k, v),
+            "floatref": lambda: float_decode(q, k, v),
+            "fused": lambda: raceit_attention_decode_fused(q, k, v, kv_len),
+        }
+        best = {}
+        for fn in cands.values():
+            fn()  # compile all before interleaved timing
+        for _ in range(reps):
+            for name, fn in cands.items():
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                best[name] = min(best.get(name, float("inf")),
+                                 time.perf_counter() - t0)
+        shape = f"{B * H}x1x{Sk}x{D}"
+        rows += [
+            (f"kernel/attention_decode_staged_{shape}",
+             best["staged"] * 1e6, "fig12_staged_slice"),
+            (f"kernel/attention_decode_floatref_{shape}",
+             best["floatref"] * 1e6, "pre_pr2_serving_decode"),
+            (f"kernel/attention_decode_fused_{shape}", best["fused"] * 1e6,
+             f"fig12_fused_decode_{best['staged'] / best['fused']:.2f}x"),
+        ]
+    return rows
+
+
 def run() -> list[tuple]:
     import jax.numpy as jnp
     import numpy as np
@@ -84,6 +151,7 @@ def run() -> list[tuple]:
     rows.append(("kernel/acam_softmax_64x1024", us, "fused_fig8"))
 
     rows.extend(_attention_rows(rng))
+    rows.extend(_decode_attention_rows(rng))
 
     for name, us, derived in rows:
         print(f"  {name}: {us:.0f} us/call ({derived})")

@@ -54,8 +54,10 @@ def main():
     prompts = [rng.integers(0, 128, rng.integers(4, 9)).astype(np.int32)
                for _ in range(args.requests)]
     outs = {}
+    # ExecConfig.serving: the serving default runs the fused streaming
+    # attention kernel on both prefill and the per-token decode steps
     for mode, ec in (("digital", ExecConfig()),
-                     ("raceit", ExecConfig(mode="raceit", softmax_mode="pot"))):
+                     ("raceit", ExecConfig.serving(softmax_mode="pot"))):
         eng = GenerationEngine(cfg, params, exec_cfg=ec, max_len=64)
         sched = BatchScheduler(eng, bucket_size=4)
         for rid, p in enumerate(prompts):

@@ -117,10 +117,35 @@ class ExecConfig:
     crossbar_adc: str = "exact"            # "exact"|"quantize"
     act_bits: int = 8
     weight_bits: int = 8
-    # route raceit attention through the fused streaming Pallas kernel
-    # (repro.kernels.acam_attention) instead of the staged XLA pipeline;
-    # requires softmax_mode in ("pot", "pot_fine").
+    # route raceit attention (prefill AND the Sq=1 KV-cache decode step)
+    # through the fused streaming Pallas kernel (repro.kernels.acam_attention)
+    # instead of the staged XLA pipeline. Covers every softmax_mode; configs
+    # the kernel can't serve (matmul_fidelity="acam") degrade to the staged
+    # path with a one-time warning. Serving entry points default this to True
+    # via ExecConfig.serving(); the plain constructor default stays False so
+    # tests/benchmarks compare against an honest staged baseline.
     fused_attention: bool = False
+
+    @classmethod
+    def serving(cls, mode: str = "raceit", **kw) -> "ExecConfig":
+        """The serving default: fused streaming attention on.
+
+        Serving latency is decode-dominated, and the decode path is exactly
+        where the fused kernel removes the last staged-pipeline fallback —
+        so launchers (`repro.launch.serve`, `examples/raceit_serve.py`)
+        build their ExecConfig here, where ``fused_attention`` defaults to
+        True (override with ``fused_attention=False`` to A/B the staged
+        path).
+
+        Note the flip changes raceit decode *numerics*, not just speed: the
+        previous serving decode ran a float-score + ACAM-softmax shortcut
+        (k/v and probabilities never quantized); the fused decode runs the
+        full quantized Fig.-12 pipeline — bit-exact vs the staged
+        `raceit_attention` oracle on the cache slice, i.e. *more*
+        paper-faithful, and consistent with the fused prefill numerics.
+        """
+        kw.setdefault("fused_attention", True)
+        return cls(mode=mode, **kw)
 
 
 @dataclasses.dataclass(frozen=True)

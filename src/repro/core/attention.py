@@ -23,7 +23,44 @@ from .ops import LOGIT_FMT, mult8_codes
 from .quant import quantize_tensor
 from .softmax import acam_softmax
 
-__all__ = ["raceit_attention", "dd_matmul_codes"]
+__all__ = ["raceit_attention", "dd_matmul_codes", "fused_attention_supported"]
+
+# softmax configs the fused Pallas kernels cover (every mode the staged
+# acam_softmax accepts); kept in sync with kernels.acam_attention's
+# FUSED_SOFTMAX_MODES by tests/test_attention_decode_fused.py (duplicated
+# here so this module never imports repro.kernels at load time)
+_FUSED_SOFTMAX_MODES = ("pot", "pot_fine", "uniform")
+
+
+def fused_attention_supported(fidelity: str = "int", softmax_mode: str = "pot",
+                              hw: bool = False) -> str | None:
+    """None if the fused kernel covers this config, else a reason string.
+
+    The single dispatchability predicate for ``fused=True`` /
+    ``ExecConfig.fused_attention``. Callers choose their policy on a non-None
+    reason: `raceit_attention` raises (explicit ``fused=True`` is a hard
+    request), while `models.layers` / the serving engine degrade to the
+    staged path with a one-time warning (``fused_attention=True`` there is a
+    performance preference, not a numerics contract).
+
+    Supported: ``fidelity="int"``, ``hw=False``, ``softmax_mode`` in
+    ``("pot", "pot_fine", "uniform")`` — both proven bit-equal to the slow
+    paths (tests/test_core_acam.py), so the kernel loses nothing. Unsupported
+    and the reasons why:
+
+    * ``hw=True`` — per-cell ACAM match-line emulation has no kernel path;
+    * ``fidelity="acam"`` — the 4-bit nibble-table matmul is a test-only
+      fidelity mode (bit-identical to the integer matmul the kernel uses).
+    """
+    if hw:
+        return "hw=True (per-cell ACAM emulation has no kernel path)"
+    if fidelity != "int":
+        return (f"fidelity={fidelity!r} (the kernel uses the bit-equal "
+                f"integer matmul; only fidelity='int' is supported)")
+    if softmax_mode not in _FUSED_SOFTMAX_MODES:
+        return (f"softmax_mode={softmax_mode!r} not in "
+                f"{_FUSED_SOFTMAX_MODES}")
+    return None
 
 
 def dd_matmul_codes(a_codes: jax.Array, b_codes: jax.Array, fidelity: str = "int") -> jax.Array:
@@ -62,12 +99,21 @@ def raceit_attention(
     VMEM tile without ever materializing the (Sq, Sk) logit/probability
     matrices; this staged path stays as the bit-accurate oracle it is
     validated against (tests/test_attention_fused.py).
+
+    Dispatch rules for ``fused=True`` (see `fused_attention_supported`):
+    every ``softmax_mode`` ("pot", "pot_fine", "uniform") and any mask are
+    supported; ``hw=True`` or ``fidelity="acam"`` raise ValueError — an
+    explicit ``fused=True`` here is a hard request, so an impossible combo is
+    an error rather than a silent fallback (the model layers make the
+    opposite choice and degrade with a warning). For the Sq=1 KV-cache
+    serving step use `repro.kernels.ops.raceit_attention_decode_fused`,
+    which is bit-exact vs this oracle evaluated on the cache slice.
     """
     d = q.shape[-1]
     if fused:
-        if hw or fidelity == "acam":
-            raise ValueError("fused attention supports fidelity='int', hw=False"
-                             " (both are proven bit-equal to the slow paths)")
+        reason = fused_attention_supported(fidelity, softmax_mode, hw)
+        if reason:
+            raise ValueError(f"fused attention unsupported: {reason}")
         from repro.kernels.ops import raceit_attention_fused  # lazy: no cycle
         return raceit_attention_fused(q, k, v, mask=mask,
                                       softmax_mode=softmax_mode)

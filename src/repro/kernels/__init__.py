@@ -1,6 +1,8 @@
 from .runtime import default_interpret, resolve_interpret  # noqa: F401
 from .ops import (  # noqa: F401
-    acam_attention_codes, acam_lut, acam_lut_2d, acam_mvm,
+    FUSED_SOFTMAX_MODES, acam_attention_codes, acam_attention_decode_codes,
+    acam_lut, acam_lut_2d, acam_mvm,
     acam_softmax_codes, acam_softmax_kernel, acam_activation,
-    prob_requant_scale, raceit_attention_fused, raceit_linear,
+    masked_prefix_quantize, prob_requant_scale,
+    raceit_attention_decode_fused, raceit_attention_fused, raceit_linear,
 )

@@ -34,6 +34,20 @@ knob bounds VMEM instead. Every arithmetic step replicates the oracle's
 f32 op sequence, so outputs are bit-identical to the staged path up to
 float summation order of the PoT row sum (asserted to <= 1 PROB ulp in
 tests, and observed exact on every shape exercised there).
+
+Two entry points share the kernel bodies:
+
+* `acam_attention_codes`   — prefill/forward: (G, Sq, D) queries, optional
+  mask / in-kernel causal offset;
+* `acam_attention_decode_codes` — serving decode: Sq=1 queries against a
+  fixed-shape KV cache whose valid prefix length ``kv_len`` is a *traced*
+  scalar (streamed into SMEM-style scalar state, masking key blocks past
+  the fill level instead of slicing the buffer).
+
+Both accept every softmax configuration of the staged path: "pot",
+"pot_fine", and the Fig.-14 "uniform" exp-quantization ablation — the LOG
+stage always consumes a PoT-encoded row sum, so only the exp gather table
+differs per mode (see `softmax_tables`).
 """
 from __future__ import annotations
 
@@ -48,10 +62,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import ops as acam_ops
 from repro.core.ops import LOGIT_FMT, PROB_FMT
+from repro.core.quant import PoTFormat
 
 from .runtime import resolve_interpret
 
-__all__ = ["acam_attention_codes", "softmax_tables", "DEFAULT_BLOCK_Q",
+__all__ = ["acam_attention_codes", "acam_attention_decode_codes",
+           "softmax_tables", "FUSED_SOFTMAX_MODES", "DEFAULT_BLOCK_Q",
            "DEFAULT_BLOCK_K", "DEFAULT_BLOCK_G"]
 
 DEFAULT_BLOCK_Q = 256
@@ -59,18 +75,48 @@ DEFAULT_BLOCK_K = 512
 DEFAULT_BLOCK_G = 8
 _LANES = 128
 
+# every softmax configuration the staged acam_softmax accepts; the fused
+# kernels cover all of them (core.attention.fused_attention_supported is the
+# single dispatchability predicate built on this)
+FUSED_SOFTMAX_MODES = ("pot", "pot_fine", "uniform")
+
+_EXP_OPS = {"pot": "exp_pot", "pot_fine": "exp_pot_fine",
+            "uniform": "exp_uniform"}
+_LOG_OPS = {"pot": "log", "pot_fine": "log_fine", "uniform": "log"}
+
 
 def softmax_tables(mode: str):
-    """(exp_lut, log_lut, prob_lut, e_min, octave_step, frac_shift) for a mode."""
-    if mode not in ("pot", "pot_fine"):
-        raise ValueError(f"fused attention supports pot/pot_fine, got {mode!r}")
-    exp_op = acam_ops.get_op("exp_pot" if mode == "pot" else "exp_pot_fine")
-    log_op = acam_ops.get_op("log" if mode == "pot" else "log_fine")
+    """(exp_val, log_lut, prob_lut, e_min, octave_step, frac_shift) for a mode.
+
+    ``exp_val`` is the exp LUT pre-composed with its output-format decode into
+    one f32 gather table (256 entries), built with the *same jnp ops* as the
+    format's ``decode`` so table entries are bit-identical to the staged
+    ``acam_softmax``'s step-1 values. ``e_min``/``octave_step`` describe the
+    log op's PoT *input* format (the row-sum re-quantization grid) — for
+    "pot"/"pot_fine" that coincides with the exp output format; for "uniform"
+    the exp output is a uniform `ScaledFormat` but the LOG stage still takes a
+    PoT-encoded sum, exactly as in `core.softmax.acam_softmax`.
+    """
+    if mode not in FUSED_SOFTMAX_MODES:
+        raise ValueError(
+            f"fused attention softmax_mode must be one of {FUSED_SOFTMAX_MODES},"
+            f" got {mode!r}")
+    exp_op = acam_ops.get_op(_EXP_OPS[mode])
+    log_op = acam_ops.get_op(_LOG_OPS[mode])
     prob_op = acam_ops.get_op("exp_prob")
-    pot = exp_op.out_fmt
+    ec = jnp.asarray(exp_op._lut, jnp.int32)
+    if isinstance(exp_op.out_fmt, PoTFormat):
+        step, e0 = exp_op.out_fmt.octave_step, exp_op.out_fmt.e_min
+        exp_val = jnp.where(
+            ec == 0, 0.0,
+            jnp.exp2(jnp.minimum((ec - 1).astype(jnp.float32) * step + e0,
+                                 126.0)))
+    else:  # uniform ScaledFormat: decode is a plain scale multiply
+        exp_val = ec.astype(jnp.float32) * exp_op.out_fmt.scale
+    pot_in = log_op.in_fmt
     frac_shift = LOGIT_FMT.frac_bits - log_op.out_fmt.frac_bits
-    return (exp_op._lut, log_op._lut, prob_op._lut,
-            float(pot.e_min), float(pot.octave_step), frac_shift)
+    return (exp_val, log_op._lut, prob_op._lut,
+            float(pot_in.e_min), float(pot_in.octave_step), frac_shift)
 
 
 def _pot_encode_sum(S, e_min: float, octave_step: float):
@@ -104,12 +150,12 @@ def _requant_code_table(cmax, prob_lut_vals):
                     -128, 127).astype(jnp.int32)
 
 
-def _attn_kernel(s1_ref, qoff_ref, q_ref, k_ref, v_ref, *rest,
+def _attn_kernel(s1_ref, qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, *rest,
                  nq: int, nk: int, bg: int, bq: int, bk: int,
                  g_real: int, sq_real: int, sk_real: int,
                  sqrt_d: Optional[float],
                  e_min: float, octave_step: float, frac_shift: int,
-                 causal: bool, has_mask: bool):
+                 causal: bool, has_mask: bool, dyn_len: bool):
     if has_mask:
         mask_ref, exp_val_ref, log_lut_ref, prob_lut_ref = rest[:4]
         rest = rest[4:]
@@ -124,11 +170,14 @@ def _attn_kernel(s1_ref, qoff_ref, q_ref, k_ref, v_ref, *rest,
     i = pl.program_id(2)
     k = pl.program_id(3)
     rows = pl.dslice((g * nq + i) * bg * bq, bg * bq)  # per-row scratch slots
-    has_pad_k = sk_real % bk != 0
+    # keys past the real/valid length carry no weight at all (they do not
+    # exist in the oracle's input): static block padding, or — decode path —
+    # the dynamic KV-cache fill level streamed in as a scalar
+    mask_keys = (sk_real % bk != 0) or dyn_len
 
     def key_valid():
         return (k * bk + jax.lax.broadcasted_iota(jnp.int32, (bg, bq, bk), 2)
-                ) < sk_real  # padded key columns carry no weight at all
+                ) < kvlen_ref[0, 0]
 
     def tile_logit_codes():
         """matmul-1 + div-add: (bg, bq, bk) LOGIT codes."""
@@ -168,10 +217,10 @@ def _attn_kernel(s1_ref, qoff_ref, q_ref, k_ref, v_ref, *rest,
             xmax_ref[...] = jnp.full((bg, bq, 1), LOGIT_FMT.code_min, jnp.int32)
 
         xc = tile_logit_codes()
-        # exp_val_ref folds the exp LUT with its PoT decode: one f32 gather
+        # exp_val_ref folds the exp LUT with its output decode: one f32 gather
         e_vals = exp_val_ref[xc + 128]
         xmax_tile = xc
-        if has_pad_k:
+        if mask_keys:
             valid = key_valid()
             e_vals = jnp.where(valid, e_vals, 0.0)
             xmax_tile = jnp.where(valid, xc, LOGIT_FMT.code_min)
@@ -204,7 +253,7 @@ def _attn_kernel(s1_ref, qoff_ref, q_ref, k_ref, v_ref, *rest,
         d = jnp.clip(xc - (L << frac_shift),
                      LOGIT_FMT.code_min, LOGIT_FMT.code_max)
         pc = _requant_code_table(cmax_ref[0, 0], prob_lut_ref[...])[d + 128]
-        if has_pad_k:  # padded keys: PROB code 0 -> requantized code 0
+        if mask_keys:  # padded/invalid keys: PROB code 0 -> requantized code 0
             pc = jnp.where(key_valid(), pc, 0)
         acc_ref[...] += jax.lax.dot_general(
             pc, v_ref[...].astype(jnp.int32),
@@ -216,12 +265,12 @@ def _attn_kernel(s1_ref, qoff_ref, q_ref, k_ref, v_ref, *rest,
             cmax_out_ref[0, 0] = cmax_ref[0, 0]
 
 
-def _attn_kernel_single(s1_ref, qoff_ref, q_ref, k_ref, v_ref, *rest,
-                        bg: int, bq: int, bk: int,
+def _attn_kernel_single(s1_ref, qoff_ref, kvlen_ref, q_ref, k_ref, v_ref,
+                        *rest, bg: int, bq: int, bk: int,
                         g_real: int, sq_real: int, sk_real: int,
                         sqrt_d: Optional[float],
                         e_min: float, octave_step: float, frac_shift: int,
-                        causal: bool, has_mask: bool):
+                        causal: bool, has_mask: bool, dyn_len: bool):
     """One-tile fast path: the whole pipeline in a single grid step.
 
     When (heads, Sq, Sk) fit one VMEM tile the two-pass structure degenerates
@@ -235,7 +284,7 @@ def _attn_kernel_single(s1_ref, qoff_ref, q_ref, k_ref, v_ref, *rest,
     else:
         mask_ref = None
         exp_val_ref, log_lut_ref, prob_lut_ref, o_ref, cmax_out_ref = rest
-    has_pad_k = sk_real % bk != 0
+    mask_keys = (sk_real % bk != 0) or dyn_len
 
     r = jax.lax.dot_general(
         q_ref[...].astype(jnp.int32), k_ref[...].astype(jnp.int32),
@@ -254,8 +303,9 @@ def _attn_kernel_single(s1_ref, qoff_ref, q_ref, k_ref, v_ref, *rest,
 
     e_vals = exp_val_ref[xc + 128]
     xmax_tile = xc
-    if has_pad_k:
-        valid = jax.lax.broadcasted_iota(jnp.int32, (bg, bq, bk), 2) < sk_real
+    if mask_keys:
+        valid = (jax.lax.broadcasted_iota(jnp.int32, (bg, bq, bk), 2)
+                 < kvlen_ref[0, 0])
         e_vals = jnp.where(valid, e_vals, 0.0)
         xmax_tile = jnp.where(valid, xc, LOGIT_FMT.code_min)
     S = jnp.sum(e_vals, axis=-1, keepdims=True)
@@ -273,7 +323,7 @@ def _attn_kernel_single(s1_ref, qoff_ref, q_ref, k_ref, v_ref, *rest,
     d = jnp.clip(xc - (L << frac_shift),
                  LOGIT_FMT.code_min, LOGIT_FMT.code_max)
     pc = _requant_code_table(cmax, prob_lut_ref[...])[d + 128]
-    if has_pad_k:
+    if mask_keys:
         pc = jnp.where(valid, pc, 0)
     o_ref[...] = jax.lax.dot_general(
         pc, v_ref[...].astype(jnp.int32),
@@ -291,6 +341,7 @@ def acam_attention_codes(
     logit_scale: jax.Array,          # () f32: s_q * s_k (div-add numerator)
     mask: Optional[jax.Array] = None,  # (G, Sq, Sk) bool; None => causal/full
     q_offset: jax.Array | int = 0,     # causal decode offset (cache index)
+    kv_len: Optional[jax.Array] = None,  # dynamic valid key prefix (decode)
     mode: str = "pot",
     scale_by_sqrt_d: Optional[int] = None,  # d to fold 1/sqrt(d); None = folded
     causal: bool = False,
@@ -305,9 +356,16 @@ def acam_attention_codes(
     re-quantized PROB codes — and cmax () int32, the tensor-wide max PROB
     code, from which the caller rebuilds the oracle's probability scale
     ``max(cmax/256, 1e-12)/127``. Never materializes an (Sq, Sk) array.
+
+    ``kv_len`` (traced int32 scalar) marks only the first ``kv_len`` keys as
+    existing — keys past it contribute nothing to the row sum, the global
+    PROB max, or matmul-2, exactly as if k/v had been sliced to that length
+    (the KV-cache decode path: a fixed-shape cache buffer, dynamic fill).
+    ``mode`` accepts every staged softmax config: "pot", "pot_fine",
+    "uniform" (the Fig.-14 ablation's uniform exp quantization).
     """
     interpret = resolve_interpret(interpret)
-    exp_lut, log_lut, prob_lut, e_min, octave_step, frac_shift = \
+    exp_val, log_lut, prob_lut, e_min, octave_step, frac_shift = \
         softmax_tables(mode)
 
     G, Sq, D = q_codes.shape
@@ -337,11 +395,16 @@ def acam_attention_codes(
         logit_scale = logit_scale / sqrt_d
         sqrt_d = None
 
+    dyn_len = kv_len is not None
+    kv_len_val = (jnp.minimum(jnp.asarray(kv_len, jnp.int32), Sk)
+                  if dyn_len else jnp.asarray(Sk, jnp.int32))
+
     spec_scalar = pl.BlockSpec((1, 1), lambda p, g, i, k: (0, 0))
     spec_lut = pl.BlockSpec((256,), lambda p, g, i, k: (0,))
     in_specs = [
         spec_scalar,                                              # logit scale
         spec_scalar,                                              # q offset
+        spec_scalar,                                              # kv length
         pl.BlockSpec((bg, bq, Dp), lambda p, g, i, k: (g, i, 0)),  # q
         pl.BlockSpec((bg, bk, Dp), lambda p, g, i, k: (g, k, 0)),  # k
         pl.BlockSpec((bg, bk, Dp), lambda p, g, i, k: (g, k, 0)),  # v
@@ -349,6 +412,7 @@ def acam_attention_codes(
     operands = [
         logit_scale.reshape(1, 1),
         jnp.asarray(q_offset, jnp.int32).reshape(1, 1),
+        kv_len_val.reshape(1, 1),
         qp, kp, vp,
     ]
     if mask is not None:
@@ -357,13 +421,6 @@ def acam_attention_codes(
         in_specs.append(pl.BlockSpec((bg, bq, bk),
                                      lambda p, g, i, k: (g, i, k)))
         operands.append(mp)
-    # fold the exp LUT with its PoT decode into one f32 table, built with the
-    # *same jnp ops* as PoTFormat.decode so table entries are bit-identical
-    ec = jnp.asarray(exp_lut, jnp.int32)
-    exp_val = jnp.where(
-        ec == 0, 0.0,
-        jnp.exp2(jnp.minimum((ec - 1).astype(jnp.float32) * octave_step
-                             + e_min, 126.0)))
     in_specs += [spec_lut, spec_lut, spec_lut]
     operands += [exp_val, jnp.asarray(log_lut, jnp.int32),
                  jnp.asarray(prob_lut, jnp.int32)]
@@ -373,7 +430,8 @@ def acam_attention_codes(
             _attn_kernel_single, bg=bg, bq=bq, bk=bk,
             g_real=G, sq_real=Sq, sk_real=Sk,
             sqrt_d=sqrt_d, e_min=e_min, octave_step=octave_step,
-            frac_shift=frac_shift, causal=causal, has_mask=mask is not None)
+            frac_shift=frac_shift, causal=causal, has_mask=mask is not None,
+            dyn_len=dyn_len)
         scratch = []
         grid = (1, 1, 1, 1)
     else:
@@ -381,7 +439,8 @@ def acam_attention_codes(
             _attn_kernel, nq=nq, nk=nk, bg=bg, bq=bq, bk=bk,
             g_real=G, sq_real=Sq, sk_real=Sk,
             sqrt_d=sqrt_d, e_min=e_min, octave_step=octave_step,
-            frac_shift=frac_shift, causal=causal, has_mask=mask is not None)
+            frac_shift=frac_shift, causal=causal, has_mask=mask is not None,
+            dyn_len=dyn_len)
         scratch = [
             pltpu.VMEM((Gp * Sqp, 1), jnp.float32),  # streaming PoT row sums
             pltpu.VMEM((bg, bq, 1), jnp.int32),      # row logit max (pass A)
@@ -402,3 +461,37 @@ def acam_attention_codes(
         interpret=interpret,
     )(*operands)
     return out[:G, :Sq, :D], cmax[0, 0]
+
+
+def acam_attention_decode_codes(
+    q_codes: jax.Array,   # (G, 1, D) int8 — one new token per folded B x H
+    k_codes: jax.Array,   # (G, Smax, D) int8 — fixed-shape KV cache buffer
+    v_codes: jax.Array,   # (G, Smax, D) int8
+    logit_scale: jax.Array,          # () f32: s_q * s_k
+    kv_len: jax.Array,               # () int32: valid cache prefix, >= 1
+    mode: str = "pot",
+    scale_by_sqrt_d: Optional[int] = None,
+    block_k: int = DEFAULT_BLOCK_K,
+    block_g: int = DEFAULT_BLOCK_G,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Decode-mode fused attention: Sq=1 queries against a KV cache.
+
+    The same streaming pipeline as `acam_attention_codes`, specialized to the
+    serving decode step: a single new query per (batch x head) group attends
+    the first ``kv_len`` entries of a fixed-shape cache buffer. Keys past
+    ``kv_len`` do not exist for the kernel — no exp weight, no PROB max
+    contribution, no matmul-2 term — so (out, cmax) are exactly what
+    `acam_attention_codes` returns on the sliced cache ``k[:, :kv_len]``,
+    with no dynamic shapes anywhere (the grid still sweeps the whole buffer;
+    invalid blocks are masked, not skipped).
+
+    No mask array or causal offset is needed: decode causality is precisely
+    "attend the valid prefix", which ``kv_len`` already encodes.
+    """
+    if q_codes.shape[1] != 1:
+        raise ValueError(f"decode path expects Sq=1, got {q_codes.shape[1]}")
+    return acam_attention_codes(
+        q_codes, k_codes, v_codes, logit_scale, None, kv_len=kv_len,
+        mode=mode, scale_by_sqrt_d=scale_by_sqrt_d,
+        block_k=block_k, block_g=block_g, interpret=interpret)

@@ -17,7 +17,8 @@ from repro.core import ops as acam_ops
 from repro.core.crossbar import CrossbarConfig
 from repro.core.quant import quantize_tensor
 
-from .acam_attention import acam_attention_codes  # noqa: F401
+from .acam_attention import (  # noqa: F401
+    FUSED_SOFTMAX_MODES, acam_attention_codes, acam_attention_decode_codes)
 from .acam_lut import acam_lut, acam_lut_2d  # noqa: F401
 from .acam_mvm import acam_mvm  # noqa: F401
 from .acam_softmax import acam_softmax_codes, acam_softmax_kernel  # noqa: F401
@@ -71,9 +72,12 @@ def raceit_attention_fused(
 
     Streams over key blocks in one Pallas kernel; the (Sq, Sk) logit and
     probability matrices never exist (pass an in-kernel ``causal`` mask, or
-    no mask, to avoid materializing a mask array too). Matches the staged
-    `repro.core.attention.raceit_attention` oracle to <=1 PROB_FMT ulp
-    (bit-exact on every shape in tests/test_attention_fused.py).
+    no mask, to avoid materializing a mask array too). ``softmax_mode``
+    accepts "pot", "pot_fine", and "uniform" — every mode the staged path
+    takes. Matches the staged `repro.core.attention.raceit_attention` oracle
+    to <=1 PROB_FMT ulp (bit-exact on every shape in
+    tests/test_attention_fused.py). For the Sq=1 KV-cache serving step use
+    `raceit_attention_decode_fused`.
     """
     from .acam_attention import DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q
     B, H, Sq, D = q.shape
@@ -92,4 +96,67 @@ def raceit_attention_fused(
         interpret=interpret)
     p_scale = prob_requant_scale(cmax)
     return (out32.astype(jnp.float32) * (p_scale * vq.scale)
+            ).reshape(B, H, Sq, D)
+
+
+def masked_prefix_quantize(x: jax.Array, kv_len: jax.Array, axis: int = 2):
+    """`quantize_tensor(x_sliced_to_kv_len, bits=8)` without slicing.
+
+    Replicates quantize_tensor's exact f32 op sequence on the valid prefix:
+    |x| >= 0, so the max over {valid entries} U {zeros} equals the max over
+    the slice, and round(x/scale) is elementwise — codes on valid entries are
+    bit-identical to quantizing the dynamic slice, while invalid entries are
+    zeroed (the kernel masks them out anyway; zeroing keeps the buffer
+    contents irrelevant). Returns (codes int8, scale f32) with static shapes.
+    """
+    idx = jnp.arange(x.shape[axis])
+    valid = jnp.reshape(idx < kv_len,
+                        tuple(x.shape[axis] if d == axis else 1
+                              for d in range(x.ndim)))
+    amax = jnp.max(jnp.where(valid, jnp.abs(x), 0.0))
+    scale = (jnp.maximum(amax, 1e-12) / 127).astype(jnp.float32)
+    codes = jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+    return jnp.where(valid, codes, 0), scale
+
+
+@partial(jax.jit, static_argnames=("softmax_mode", "fold_scale",
+                                   "block_k", "block_g", "interpret"))
+def raceit_attention_decode_fused(
+    q: jax.Array,   # (B, H, 1, D) float — the new token's query
+    k: jax.Array,   # (B, H, Smax, D) float — KV cache buffer (fixed shape)
+    v: jax.Array,   # (B, H, Smax, D) float
+    kv_len: jax.Array,              # () int32: valid cache prefix, >= 1
+    softmax_mode: str = "pot",
+    fold_scale: bool = False,       # True: 1/sqrt(d) already folded into q
+    block_k: int | None = None,
+    block_g: int | None = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused decode-step attention over a KV cache, float in/out.
+
+    Bit-exact (to the same <=1 PROB ulp contract as the prefill path) vs the
+    staged oracle evaluated on the cache *slice*::
+
+        raceit_attention(q, k[:, :, :kv_len], v[:, :, :kv_len])
+
+    k/v are quantized with `masked_prefix_quantize`, so the tensor scale is
+    computed over the valid prefix only — entries past ``kv_len`` (stale or
+    zero-initialized cache rows) cannot perturb the quantizer, and the kernel
+    masks them out of the softmax and matmul-2 entirely.
+    """
+    from .acam_attention import DEFAULT_BLOCK_G, DEFAULT_BLOCK_K
+    B, H, Sq, D = q.shape
+    Smax = k.shape[2]
+    qq = quantize_tensor(q, bits=8)
+    k_codes, k_scale = masked_prefix_quantize(k, kv_len)
+    v_codes, v_scale = masked_prefix_quantize(v, kv_len)
+    out32, cmax = acam_attention_decode_codes(
+        qq.codes.reshape(B * H, Sq, D), k_codes.reshape(B * H, Smax, D),
+        v_codes.reshape(B * H, Smax, D), qq.scale * k_scale,
+        jnp.asarray(kv_len, jnp.int32), mode=softmax_mode,
+        scale_by_sqrt_d=None if fold_scale else D,
+        block_k=block_k or DEFAULT_BLOCK_K, block_g=block_g or DEFAULT_BLOCK_G,
+        interpret=interpret)
+    p_scale = prob_requant_scale(cmax)
+    return (out32.astype(jnp.float32) * (p_scale * v_scale)
             ).reshape(B, H, Sq, D)

@@ -19,6 +19,9 @@ def main():
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--n-new", type=int, default=8)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--staged-attention", action="store_true",
+                    help="opt out of the fused-attention serving default "
+                         "(A/B the staged XLA pipeline)")
     ap.add_argument("--set", nargs="*", default=[])
     args = ap.parse_args()
 
@@ -46,8 +49,11 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     if args.ckpt:
         (params, _), _ = CheckpointManager(args.ckpt).restore((params, None))
-    exec_cfg = ExecConfig(mode="raceit" if args.mode.startswith("raceit")
-                          else "digital")
+    # serving defaults to the fused streaming attention kernel on both the
+    # prefill and decode paths (ExecConfig.serving)
+    exec_cfg = ExecConfig.serving(
+        mode="raceit" if args.mode.startswith("raceit") else "digital",
+        fused_attention=not args.staged_attention)
     if args.mode == "raceit_q8":
         params = quantize_model_params(params)
         print("[serve] weights quantized to resident int8 crossbar codes")

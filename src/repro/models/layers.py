@@ -16,6 +16,7 @@ prefill_32k in HBM and mirrored by the Pallas kernel.
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -23,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ExecConfig, ModelConfig
+from repro.core.attention import fused_attention_supported
 from repro.core import ops as acam_ops
 from repro.core.ops import LOGIT_FMT
 from repro.core.quant import quantize_tensor
@@ -310,6 +312,67 @@ def _local_block_attention(q, k, v, window: int, scale: float):
     return o.reshape(B, S, H, hd)
 
 
+_FUSED_FALLBACK_WARNED: set = set()
+
+
+def _resolve_fused(exec_cfg: ExecConfig) -> ExecConfig:
+    """Degrade ``fused_attention=True`` to the staged path when the fused
+    kernel can't serve this config (e.g. ``matmul_fidelity="acam"``),
+    warning once per distinct reason instead of crashing mid-generation —
+    the layer-level flag is a performance preference, unlike the hard
+    ``fused=True`` request on `core.attention.raceit_attention`.
+    """
+    if exec_cfg.mode != "raceit" or not exec_cfg.fused_attention:
+        return exec_cfg
+    reason = fused_attention_supported(fidelity=exec_cfg.matmul_fidelity,
+                                       softmax_mode=exec_cfg.softmax_mode)
+    if reason is None:
+        return exec_cfg
+    if reason not in _FUSED_FALLBACK_WARNED:
+        _FUSED_FALLBACK_WARNED.add(reason)
+        warnings.warn(f"fused_attention=True requested but unsupported: "
+                      f"{reason}; falling back to the staged attention path",
+                      RuntimeWarning, stacklevel=2)
+    return dataclasses.replace(exec_cfg, fused_attention=False)
+
+
+def _raceit_fused_decode(q, k, v, kv_len, scale, exec_cfg: ExecConfig):
+    """Decode-step (Sq=1) attention on the fused streaming kernel.
+
+    q: (B, 1, H, hd) flat heads; k/v: (B, Smax, KV, hd) — the fixed-shape
+    cache buffers, of which only the first ``kv_len`` rows are valid. The
+    kernel masks the invalid tail out of the softmax, the global PROB max,
+    and matmul-2, and the k/v quantizer scales are reduced over the valid
+    prefix only, so the result is bit-exact vs the staged oracle on the
+    cache slice. Returns (B, 1, H, hd).
+
+    GQA heads are repeated to H *after* quantization, as int8 codes: the
+    repeated tensor has the same max-abs as the original, so the scales are
+    bit-identical to quantizing the repeated floats, at a quarter of the
+    bytes and 1/rep of the quantizer scan in the serving hot loop. (A
+    GQA-native kernel that skips the repeat entirely is a ROADMAP item.)
+    """
+    from repro.kernels.ops import (acam_attention_decode_codes,
+                                   masked_prefix_quantize, prob_requant_scale)
+    b, sq, h, hd = q.shape
+    smax, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    qq = quantize_tensor(q.astype(jnp.float32) * scale, bits=8)
+    k_codes, k_scale = masked_prefix_quantize(k.astype(jnp.float32), kv_len,
+                                              axis=1)
+    v_codes, v_scale = masked_prefix_quantize(v.astype(jnp.float32), kv_len,
+                                              axis=1)
+    fold = lambda c: jnp.repeat(c, rep, axis=2).transpose(0, 2, 1, 3
+                                                          ).reshape(b * h,
+                                                                    smax, hd)
+    out32, cmax = acam_attention_decode_codes(
+        qq.codes.transpose(0, 2, 1, 3).reshape(b * h, sq, hd),
+        fold(k_codes), fold(v_codes), qq.scale * k_scale,
+        jnp.asarray(kv_len, jnp.int32), mode=exec_cfg.softmax_mode)
+    out = out32.astype(jnp.float32) * (prob_requant_scale(cmax) * v_scale)
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+
+
 def _raceit_full_attention(q, k, v, mask, scale, exec_cfg: ExecConfig,
                            causal_offset=None):
     """Analog-faithful attention (quantized matmuls + ACAM softmax).
@@ -374,7 +437,15 @@ def attention(
 
     cache = {"k": (B, Smax, KV, hd), "v": ..., "idx": int32 scalar}.
     prefill: x covers [0, S); decode: x is a single new token (Sq=1).
+
+    With ``exec_cfg.mode == "raceit"`` and ``exec_cfg.fused_attention``, both
+    the prefill path and the Sq=1 decode path run the streaming Pallas kernel
+    (`repro.kernels.acam_attention`) — decode attends the cache's valid
+    prefix via a traced ``kv_len`` scalar, with no mask array and no staged
+    fallback left in the serving hot loop. Configs the kernel can't serve
+    degrade to the staged path with a one-time warning (`_resolve_fused`).
     """
+    exec_cfg = _resolve_fused(exec_cfg)
     b, sq, _ = x.shape
     hd = cfg.resolved_head_dim
     q = _linear(x, p["wq"], exec_cfg, p.get("bq"))
@@ -413,22 +484,26 @@ def attention(
 
     if sq == 1 and cache is not None:
         # decode: single query against the cache, masked by validity/window.
-        kpos = jnp.arange(k.shape[1])
-        if local:
-            # ring buffer: every written slot is inside the window by design
-            valid = kpos < jnp.minimum(new_cache["idx"], k.shape[1])
+        # (ring buffers: every written slot is inside the window by design,
+        # so validity is always a prefix of length min(idx, buffer_len))
+        kv_len = jnp.minimum(new_cache["idx"], k.shape[1])
+        if exec_cfg.mode == "raceit" and exec_cfg.fused_attention:
+            # fused decode: the kernel streams the cache's valid prefix —
+            # full quantized Fig.-12 numerics, same as the fused prefill path
+            o = _raceit_fused_decode(q, k, v, kv_len, scale, exec_cfg)
         else:
-            valid = kpos < new_cache["idx"]
-        s = jnp.einsum("bqkgd,bckd->bkgqc", qg.astype(jnp.float32) * scale,
-                       k.astype(jnp.float32))
-        if exec_cfg.mode == "raceit":
-            s = jnp.where(valid[None, None, None, None], s, LOGIT_FMT.min_value)
-            pr = acam_softmax(s, axis=-1, mode=exec_cfg.softmax_mode)
-        else:
-            s = jnp.where(valid[None, None, None, None], s, NEG_INF)
-            pr = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("bkgqc,bckd->bkgqd", pr, v.astype(jnp.float32))
-        o = o.transpose(0, 3, 1, 2, 4)
+            valid = jnp.arange(k.shape[1]) < kv_len
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qg.astype(jnp.float32) * scale,
+                           k.astype(jnp.float32))
+            if exec_cfg.mode == "raceit":
+                s = jnp.where(valid[None, None, None, None], s,
+                              LOGIT_FMT.min_value)
+                pr = acam_softmax(s, axis=-1, mode=exec_cfg.softmax_mode)
+            else:
+                s = jnp.where(valid[None, None, None, None], s, NEG_INF)
+                pr = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bkgqc,bckd->bkgqd", pr, v.astype(jnp.float32))
+            o = o.transpose(0, 3, 1, 2, 4)
     else:
         q_off = cache["idx"] if cache is not None else 0
         if cross_kv is not None:

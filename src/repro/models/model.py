@@ -222,7 +222,13 @@ class Model:
         return logits, new_cache
 
     def decode_step(self, params: Params, token: jax.Array, cache: Params):
-        """token: (B, 1). Returns (logits (B,1,V), cache)."""
+        """token: (B, 1). Returns (logits (B,1,V), cache).
+
+        With ``ExecConfig(mode="raceit", fused_attention=True)`` every
+        attention layer's decode step runs the fused streaming kernel over
+        the cache's valid prefix (`layers._raceit_fused_decode`) — the
+        serving hot loop has no staged-pipeline fallback left.
+        """
         idx = self._cache_index(cache)
         positions = jnp.broadcast_to(idx, token.shape).astype(jnp.int32)
         x, new_cache = self._trunk(params, token, positions, cache, None, False)

@@ -3,10 +3,19 @@
 `GenerationEngine` serves one batch bucket end-to-end (prefill then greedy /
 temperature sampling decode); `serve/batching.py` schedules request queues
 onto buckets. Supports both execution modes — `raceit` runs the paper's
-quantized path (int8 crossbar matmuls, ACAM softmax with PoT); pass
-``ExecConfig(mode="raceit", fused_attention=True)`` to route prefill
-attention through the fused streaming Pallas kernel (one VMEM pass over the
-Fig.-12 pipeline, no (Sq, Sk) intermediates in HBM).
+quantized path (int8 crossbar matmuls, ACAM softmax with PoT).
+
+Fused attention dispatch (``ExecConfig.fused_attention``, the serving
+default via ``ExecConfig.serving()``): *both* the jitted prefill and the
+jitted per-token ``_decode`` step route raceit attention through the fused
+streaming Pallas kernel (one VMEM pass over the Fig.-12 pipeline, no
+(Sq, Sk) intermediates in HBM). The decode step attends the KV cache's
+valid prefix via a traced ``kv_len`` scalar — fixed buffer shapes, so the
+decode executable compiles once and is reused for every token. Every
+``softmax_mode`` ("pot", "pot_fine", "uniform") is covered; configs the
+kernel can't serve (``matmul_fidelity="acam"``) fall back to the staged
+XLA pipeline with a one-time RuntimeWarning instead of raising — see
+`repro.core.attention.fused_attention_supported` for the exact rules.
 """
 from __future__ import annotations
 

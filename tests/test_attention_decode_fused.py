@@ -1,0 +1,206 @@
+"""Fused decode-path (Sq=1, KV-cache) attention vs the staged oracle.
+
+The contract: `raceit_attention_decode_fused(q, k_buf, v_buf, kv_len)` is
+bit-exact vs the staged `raceit_attention` oracle evaluated on the cache
+*slice* ``k_buf[:, :, :kv_len]`` — for every softmax mode the staged path
+accepts and any cache fill level, regardless of what the buffer holds past
+the fill (stale rows from longer past sequences, zeros, anything).
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ExecConfig, ModelConfig
+from repro.core.attention import fused_attention_supported, raceit_attention
+from repro.core.ops import PROB_FMT
+from repro.core.quant import quantize_tensor
+from repro.kernels.ops import (masked_prefix_quantize,
+                               raceit_attention_decode_fused)
+from repro.models import layers
+
+
+def _assert_parity(got, want, v):
+    """Bit-exact, with the <=1 PROB ulp acceptance bound as the hard floor."""
+    got, want = np.asarray(got), np.asarray(want)
+    if np.array_equal(got, want):
+        return
+    ulp = PROB_FMT.scale * float(jnp.max(jnp.abs(v)))
+    np.testing.assert_allclose(got, want, atol=ulp, rtol=0)
+
+
+def _decode_case(rng, B, H, Smax, D, fill, std=1.5):
+    """(q, k_buf, v_buf): buffers valid to `fill`, zeros past it."""
+    mk = lambda s: jnp.asarray(rng.normal(0, std, s), jnp.float32)
+    q = mk((B, H, 1, D))
+    k = jnp.zeros((B, H, Smax, D), jnp.float32).at[:, :, :fill].set(
+        mk((B, H, fill, D)))
+    v = jnp.zeros((B, H, Smax, D), jnp.float32).at[:, :, :fill].set(
+        mk((B, H, fill, D)))
+    return q, k, v
+
+
+@pytest.mark.parametrize("fill", [1, 7, 33, 96])
+@pytest.mark.parametrize("mode", ["pot", "uniform", "pot_fine"])
+def test_decode_matches_oracle_on_cache_slice(rng, mode, fill):
+    B, H, Smax, D = 2, 3, 96, 16
+    q, k, v = _decode_case(rng, B, H, Smax, D, fill)
+    want = raceit_attention(q, k[:, :, :fill], v[:, :, :fill],
+                            softmax_mode=mode)
+    got = raceit_attention_decode_fused(q, k, v, jnp.int32(fill),
+                                        softmax_mode=mode, block_k=32)
+    _assert_parity(got, want, v[:, :, :fill])
+
+
+def test_decode_ignores_stale_cache_tail(rng):
+    """Garbage past kv_len (stale rows, huge magnitudes) must not leak into
+    the quantizer scales, the row sum, the global PROB max, or matmul-2."""
+    B, H, Smax, D, fill = 1, 2, 64, 8, 20
+    q, k, v = _decode_case(rng, B, H, Smax, D, fill)
+    k = k.at[:, :, fill:].set(99.0)
+    v = v.at[:, :, fill:].set(-99.0)
+    want = raceit_attention(q, k[:, :, :fill], v[:, :, :fill])
+    got = raceit_attention_decode_fused(q, k, v, jnp.int32(fill), block_k=32)
+    _assert_parity(got, want, v[:, :, :fill])
+
+
+def test_decode_kv_len_is_traced_one_compile(rng):
+    """One executable serves every fill level (kv_len is traced, not static)."""
+    B, H, Smax, D = 1, 2, 64, 8
+    q, k, v = _decode_case(rng, B, H, Smax, D, 64)
+    fn = lambda L: raceit_attention_decode_fused(q, k, v, L, block_k=32)
+    with jax.log_compiles(False):
+        outs = [fn(jnp.int32(L)) for L in (3, 17, 64)]
+    for L, got in zip((3, 17, 64), outs):
+        want = raceit_attention(q, k[:, :, :L], v[:, :, :L])
+        _assert_parity(got, want, v[:, :, :L])
+
+
+def test_decode_rejects_multi_query(rng):
+    q, k, v = _decode_case(rng, 1, 1, 16, 8, 16)
+    q2 = jnp.concatenate([q, q], axis=2)  # Sq=2
+    with pytest.raises(ValueError):
+        raceit_attention_decode_fused(q2, k, v, jnp.int32(16))
+
+
+def test_masked_prefix_quantize_matches_slice_quantize(rng):
+    x = jnp.asarray(rng.normal(0, 2, (2, 3, 40, 8)), jnp.float32)
+    for L in (1, 11, 40):
+        codes, scale = masked_prefix_quantize(x, jnp.int32(L))
+        ref = quantize_tensor(x[:, :, :L], bits=8)
+        np.testing.assert_array_equal(np.asarray(codes[:, :, :L]),
+                                      np.asarray(ref.codes))
+        assert float(scale) == float(ref.scale)
+        assert not np.asarray(codes[:, :, L:]).any()
+
+
+# ---------------------------------------------------------------------------
+# model-layer and config wiring
+# ---------------------------------------------------------------------------
+
+def _layer_cfg():
+    return ModelConfig(name="t", n_layers=1, d_model=32, n_heads=4,
+                       n_kv_heads=2, d_ff=64, vocab_size=64,
+                       param_dtype="float32", compute_dtype="float32")
+
+
+def _run_prefill_then_decode(p, cfg, exec_cfg, rng_seed=7, n_decode=3):
+    rng = np.random.default_rng(rng_seed)
+    B, L, hd = 2, 16, cfg.resolved_head_dim
+    cache = {"k": jnp.zeros((B, L, cfg.n_kv_heads, hd), jnp.float32),
+             "v": jnp.zeros((B, L, cfg.n_kv_heads, hd), jnp.float32),
+             "idx": jnp.int32(0)}
+    x = jnp.asarray(rng.normal(0, 1, (B, 6, cfg.d_model)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(6), (B, 6))
+    out, cache = layers.attention(p, x, cfg=cfg, positions=pos,
+                                  exec_cfg=exec_cfg, cache=cache)
+    outs = [out]
+    for t in range(6, 6 + n_decode):
+        xt = jnp.asarray(rng.normal(0, 1, (B, 1, cfg.d_model)), jnp.float32)
+        o, cache = layers.attention(p, xt, cfg=cfg,
+                                    positions=jnp.full((B, 1), t),
+                                    exec_cfg=exec_cfg, cache=cache)
+        outs.append(o)
+    return outs
+
+
+def test_layers_fused_decode_close_to_staged(key):
+    """Fused decode (full quantized Fig.-12 pipeline) vs the staged layer
+    decode (float scores + ACAM softmax): different numerics by design, but
+    they must agree to quantization noise and stay finite."""
+    cfg = _layer_cfg()
+    layers.set_perf_knobs(cfg)
+    p = layers.init_attention(key, cfg, jnp.float32)
+    staged = _run_prefill_then_decode(p, cfg, ExecConfig(mode="raceit"))
+    fused = _run_prefill_then_decode(
+        p, cfg, ExecConfig(mode="raceit", fused_attention=True))
+    # prefill outputs are bit-exact (same fused-vs-staged contract as PR 1)
+    np.testing.assert_array_equal(np.asarray(staged[0]), np.asarray(fused[0]))
+    for s, f in zip(staged[1:], fused[1:]):
+        f = np.asarray(f)
+        assert np.isfinite(f).all()
+        scale = max(float(np.abs(np.asarray(s)).max()), 1e-6)
+        assert float(np.abs(f - np.asarray(s)).max()) / scale < 0.25
+
+
+def test_layers_fused_fallback_warns_once_and_matches_staged(key):
+    """Unsupported combo (matmul_fidelity='acam') degrades to the staged
+    path with one RuntimeWarning instead of crashing — and the degraded
+    outputs are exactly the staged outputs."""
+    cfg = _layer_cfg()
+    layers.set_perf_knobs(cfg)
+    p = layers.init_attention(key, cfg, jnp.float32)
+    layers._FUSED_FALLBACK_WARNED.clear()
+    bad = ExecConfig(mode="raceit", fused_attention=True,
+                     matmul_fidelity="acam")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        got = _run_prefill_then_decode(p, cfg, bad)
+        got2 = _run_prefill_then_decode(p, cfg, bad)
+    msgs = [x for x in w if issubclass(x.category, RuntimeWarning)
+            and "fused_attention" in str(x.message)]
+    assert len(msgs) == 1, [str(x.message) for x in w]
+    want = _run_prefill_then_decode(
+        p, cfg, ExecConfig(mode="raceit", matmul_fidelity="acam"))
+    for a, b, c in zip(got, got2, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(c))
+
+
+def test_fused_softmax_modes_in_sync():
+    """core.attention duplicates the kernel's mode tuple (to avoid a
+    load-time kernels import); they must never drift apart."""
+    from repro.core.attention import _FUSED_SOFTMAX_MODES
+    from repro.kernels.acam_attention import (FUSED_SOFTMAX_MODES,
+                                              softmax_tables)
+    assert _FUSED_SOFTMAX_MODES == FUSED_SOFTMAX_MODES
+    for mode in FUSED_SOFTMAX_MODES:
+        softmax_tables(mode)  # every advertised mode must actually build
+
+
+def test_fused_supported_predicate():
+    assert fused_attention_supported() is None
+    assert fused_attention_supported(softmax_mode="uniform") is None
+    assert fused_attention_supported(softmax_mode="pot_fine") is None
+    assert fused_attention_supported(hw=True)
+    assert fused_attention_supported(fidelity="acam")
+    assert fused_attention_supported(softmax_mode="nonsense")
+
+
+def test_execconfig_serving_defaults_fused():
+    ec = ExecConfig.serving()
+    assert ec.mode == "raceit" and ec.fused_attention
+    assert ExecConfig.serving(mode="digital").fused_attention
+    assert not ExecConfig.serving(fused_attention=False).fused_attention
+    assert not ExecConfig().fused_attention  # plain default stays staged
+
+
+def test_core_raceit_attention_accepts_uniform_fused(rng):
+    q = jnp.asarray(rng.normal(0, 1.5, (1, 2, 24, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1.5, (1, 2, 24, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1.5, (1, 2, 24, 8)), jnp.float32)
+    want = raceit_attention(q, k, v, softmax_mode="uniform")
+    got = raceit_attention(q, k, v, softmax_mode="uniform", fused=True)
+    _assert_parity(got, want, v)

@@ -34,7 +34,7 @@ def _assert_parity(got, want, v):
 
 @pytest.mark.parametrize("shape", [(1, 1, 16, 16, 8), (1, 2, 64, 64, 16),
                                    (2, 4, 128, 128, 64)])
-@pytest.mark.parametrize("mode", ["pot", "pot_fine"])
+@pytest.mark.parametrize("mode", ["pot", "pot_fine", "uniform"])
 def test_fused_matches_oracle_unmasked(rng, shape, mode):
     q, k, v = _qkv(rng, *shape)
     want = raceit_attention(q, k, v, softmax_mode=mode)
@@ -53,7 +53,7 @@ def test_fused_non_multiple_of_block_shapes(rng, shape):
     _assert_parity(got, want, v)
 
 
-@pytest.mark.parametrize("mode", ["pot", "pot_fine"])
+@pytest.mark.parametrize("mode", ["pot", "pot_fine", "uniform"])
 def test_fused_masked_parity(rng, mode):
     B, H, Sq, Sk, D = 2, 2, 48, 72, 16
     q, k, v = _qkv(rng, B, H, Sq, Sk, D)
