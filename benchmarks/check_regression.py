@@ -1,0 +1,113 @@
+"""Kernel-latency trend gate: fail CI when a tracked kernel regresses.
+
+Compares a freshly written ``BENCH_kernels.json`` against a baseline row
+set and exits non-zero when any kernel present in *both* files regressed
+by more than ``--threshold`` (default 1.2 = +20%) **after drift
+correction**: per-kernel ratios are divided by the median ratio across all
+tracked kernels, so uniform load drift on the runner shifts the whole
+board without tripping the gate, while a *structural* regression — one
+kernel suddenly doing an extra pass over the key stream, a lost fast
+path — shows up as an outlier against its neighbours and fails. Two
+asymmetries keep the normalization honest: the divisor is clamped to
+``>= 1`` so a board-wide genuine *speedup* (median < 1) never inflates
+unchanged kernels into failures, and a median above ``--drift-limit``
+(default 1.5) fails outright — a "uniformly 1.5x slower" board on a
+same-machine baseline is a shared-code regression wearing a drift
+costume, not noise. New kernels (no baseline row) and removed kernels
+are reported but never gate.
+
+The baseline must be **measured on the same machine**: CI (see
+.github/workflows/ci.yml) checks out the base ref into a worktree, runs
+the bench there first, and gates the PR's fresh numbers against that —
+never against the committed artifact, which a kernel-touching PR
+regenerates itself (self-compare would always pass) and which was
+produced on the author's machine (cross-machine microarchitecture noise
+would fail innocent PRs)::
+
+    git worktree add /tmp/bench_base "$(git merge-base origin/main HEAD)"
+    (cd /tmp/bench_base && python benchmarks/kernels_bench.py)
+    python benchmarks/kernels_bench.py           # the PR's rows
+    python benchmarks/check_regression.py --prev /tmp/bench_base/BENCH_kernels.json
+
+The bench itself uses interleaved min-of-N to suppress scheduler noise,
+and the 20% normalized gate is deliberately loose. Excuse a knowing trade
+on single rows with ``--allow name ...`` (say so in the PR description),
+or tighten/loosen with ``--threshold``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+from pathlib import Path
+
+DEFAULT_CURRENT = Path(__file__).resolve().parent.parent / "BENCH_kernels.json"
+
+
+def compare(prev: dict, cur: dict, threshold: float,
+            allow: set[str], drift_limit: float = 1.5) -> list[str]:
+    """Print the drift-corrected comparison; return gating failures."""
+    common = sorted(set(prev) & set(cur))
+    ratios = {n: (cur[n] / prev[n] if prev[n] > 0 else float("inf"))
+              for n in common}
+    drift = statistics.median(ratios.values()) if ratios else 1.0
+    # clamp: only slowdown-drift is corrected (>=1); speedup-drift must not
+    # inflate unchanged kernels into failures
+    divisor = min(max(drift, 1.0), drift_limit)
+    print(f"[bench-gate] board drift (median ratio): {drift:.2f}x; "
+          f"normalizing slowdowns by {divisor:.2f}x")
+    failures = []
+    if drift > drift_limit:
+        failures.append(f"board-wide slowdown: median ratio {drift:.2f}x "
+                        f"exceeds --drift-limit {drift_limit:.2f}x (a "
+                        f"uniform regression, not runner drift)")
+    for name in common:
+        norm = ratios[name] / divisor
+        marker = "OK"
+        if norm > threshold:
+            marker = "ALLOWED" if name in allow else "REGRESSION"
+        print(f"  {name}: {prev[name]:.1f} -> {cur[name]:.1f} us "
+              f"({ratios[name]:.2f}x raw, {norm:.2f}x normalized) {marker}")
+        if marker == "REGRESSION":
+            failures.append(f"{name} regressed {norm:.2f}x drift-normalized "
+                            f"(>{threshold:.2f}x vs previous PR)")
+    for name in sorted(set(cur) - set(prev)):
+        print(f"  {name}: NEW ({cur[name]:.1f} us, no previous row)")
+    for name in sorted(set(prev) - set(cur)):
+        print(f"  {name}: REMOVED (was {prev[name]:.1f} us)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--prev", required=True,
+                    help="previous PR's BENCH_kernels.json")
+    ap.add_argument("--current", default=str(DEFAULT_CURRENT))
+    ap.add_argument("--threshold", type=float, default=1.2,
+                    help="fail when the drift-normalized current/previous "
+                         "ratio exceeds this (1.2 = +20%%)")
+    ap.add_argument("--allow", nargs="*", default=[],
+                    help="kernel names excused from the gate this run")
+    ap.add_argument("--drift-limit", type=float, default=1.5,
+                    help="fail outright when the median ratio exceeds this "
+                         "(board-wide slowdowns are not drift)")
+    args = ap.parse_args()
+
+    prev = json.loads(Path(args.prev).read_text())
+    cur = json.loads(Path(args.current).read_text())
+    print(f"[bench-gate] threshold {args.threshold:.2f}x normalized, "
+          f"{len(set(prev) & set(cur))} tracked kernels")
+    failures = compare(prev, cur, args.threshold, set(args.allow),
+                       drift_limit=args.drift_limit)
+    if failures:
+        print("[bench-gate] FAIL:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("[bench-gate] PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

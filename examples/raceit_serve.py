@@ -18,6 +18,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.base import ExecConfig
 from repro.data import SyntheticLM
+from repro.launch.serve import parse_exec_plan
 from repro.models import Model
 from repro.serve import BatchScheduler, GenerationEngine, Request
 from repro.train import optim, trainer
@@ -27,7 +28,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--exec-plan", nargs="*", default=[], metavar="SLOT=BACKEND",
+                    help="pin raceit op slots to named backends, e.g. "
+                         "--exec-plan attention_decode=raceit_staged "
+                         "(see repro.exec.registry.OP_SLOTS)")
     args = ap.parse_args()
+    overrides = parse_exec_plan(args.exec_plan)
 
     cfg = get_config("gpt2-large").replace(
         name="serve-demo", n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
@@ -54,11 +60,16 @@ def main():
     prompts = [rng.integers(0, 128, rng.integers(4, 9)).astype(np.int32)
                for _ in range(args.requests)]
     outs = {}
-    # ExecConfig.serving: the serving default runs the fused streaming
-    # attention kernel on both prefill and the per-token decode steps
+    # ExecConfig.serving: the serving default resolves the attention slots
+    # to the fused streaming kernel on both prefill and the per-token
+    # decode steps; --exec-plan pins slots to other named backends
     for mode, ec in (("digital", ExecConfig()),
-                     ("raceit", ExecConfig.serving(softmax_mode="pot"))):
+                     ("raceit", ExecConfig.serving(softmax_mode="pot",
+                                                   op_overrides=overrides))):
         eng = GenerationEngine(cfg, params, exec_cfg=ec, max_len=64)
+        print(f"      {mode} plan: " + "; ".join(
+            f"{op.slot}={op.backend}" for op in eng.plan.ops
+            if op.slot.startswith("attention") or op.slot == "lm_head"))
         sched = BatchScheduler(eng, bucket_size=4)
         for rid, p in enumerate(prompts):
             sched.submit(Request(rid, p, n_new=8))

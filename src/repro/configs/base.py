@@ -109,7 +109,17 @@ class ModelConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ExecConfig:
-    """Execution mode: digital baseline vs RACE-IT analog-faithful inference."""
+    """Execution mode: digital baseline vs RACE-IT analog-faithful inference.
+
+    This is the *declarative* half of execution dispatch: it names what the
+    run wants (mode, softmax flavor, matmul fidelity, bit widths, per-op
+    backend overrides). `repro.exec.resolve_plan(model_cfg, exec_cfg)` turns
+    it into the *resolved* half — an `ExecPlan` with exactly one named
+    backend per operator slot, structured degrade reasons, and
+    ``plan.explain()``. ``fused_attention`` and `serving()` are thin sugar
+    over the plan's attention-slot preference; ``op_overrides`` pins any
+    slot to any registered backend by name.
+    """
 
     mode: str = "digital"                  # "digital" | "raceit"
     softmax_mode: str = "pot"              # "pot"|"pot_fine"|"uniform" (raceit)
@@ -117,14 +127,31 @@ class ExecConfig:
     crossbar_adc: str = "exact"            # "exact"|"quantize"
     act_bits: int = 8
     weight_bits: int = 8
-    # route raceit attention (prefill AND the Sq=1 KV-cache decode step)
-    # through the fused streaming Pallas kernel (repro.kernels.acam_attention)
-    # instead of the staged XLA pipeline. Covers every softmax_mode; configs
-    # the kernel can't serve (matmul_fidelity="acam") degrade to the staged
-    # path with a one-time warning. Serving entry points default this to True
-    # via ExecConfig.serving(); the plain constructor default stays False so
-    # tests/benchmarks compare against an honest staged baseline.
+    # prefer the fused streaming Pallas kernel (repro.kernels.acam_attention)
+    # for raceit attention — both prefill and the Sq=1 KV-cache decode step.
+    # Sugar for putting "raceit_fused" at the head of the attention slots'
+    # preference chains; configs the kernel can't serve (e.g.
+    # matmul_fidelity="acam") degrade to "raceit_staged" with the reason
+    # recorded on the plan and a one-time warning. Serving entry points
+    # default this to True via ExecConfig.serving(); the plain constructor
+    # default stays False so tests/benchmarks compare against an honest
+    # staged baseline.
     fused_attention: bool = False
+    # per-op backend pins applied by repro.exec.resolve_plan before the
+    # mode's default preference chain: (("attention_decode", "raceit_staged"),
+    # ("lm_head", "raceit_q8"), ...). Unsupported or unknown names degrade
+    # (never raise) and show up in plan.explain(). Use .with_ops() sugar.
+    op_overrides: tuple = ()
+
+    def with_ops(self, **slot_backends: str) -> "ExecConfig":
+        """Pin op slots to named backends: ``ec.with_ops(lm_head="raceit_q8")``.
+
+        Later pins win over earlier ones for the same slot.
+        """
+        merged = dict(self.op_overrides)
+        merged.update(slot_backends)
+        return dataclasses.replace(self,
+                                   op_overrides=tuple(sorted(merged.items())))
 
     @classmethod
     def serving(cls, mode: str = "raceit", **kw) -> "ExecConfig":
@@ -134,8 +161,8 @@ class ExecConfig:
         where the fused kernel removes the last staged-pipeline fallback —
         so launchers (`repro.launch.serve`, `examples/raceit_serve.py`)
         build their ExecConfig here, where ``fused_attention`` defaults to
-        True (override with ``fused_attention=False`` to A/B the staged
-        path).
+        True (override with ``fused_attention=False``, or pin the slots
+        with ``op_overrides``/`with_ops`, to A/B the staged path).
 
         Note the flip changes raceit decode *numerics*, not just speed: the
         previous serving decode ran a float-score + ACAM-softmax shortcut

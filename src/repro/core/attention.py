@@ -36,12 +36,15 @@ def fused_attention_supported(fidelity: str = "int", softmax_mode: str = "pot",
                               hw: bool = False) -> str | None:
     """None if the fused kernel covers this config, else a reason string.
 
-    The single dispatchability predicate for ``fused=True`` /
-    ``ExecConfig.fused_attention``. Callers choose their policy on a non-None
-    reason: `raceit_attention` raises (explicit ``fused=True`` is a hard
-    request), while `models.layers` / the serving engine degrade to the
-    staged path with a one-time warning (``fused_attention=True`` there is a
-    performance preference, not a numerics contract).
+    The kernel-side dispatchability predicate for ``fused=True`` /
+    ``ExecConfig.fused_attention``. Callers choose their policy on a
+    non-None reason: `raceit_attention` raises (explicit ``fused=True`` is
+    a hard request), while the ``raceit_fused`` attention backends plug
+    this predicate into the RaceOp registry (`repro.exec.backends`), where
+    `repro.exec.resolve_plan` degrades to ``raceit_staged`` with the
+    reason recorded on the plan and a one-time warning
+    (``fused_attention=True`` there is a performance preference, not a
+    numerics contract).
 
     Supported: ``fidelity="int"``, ``hw=False``, ``softmax_mode`` in
     ``("pot", "pot_fine", "uniform")`` — both proven bit-equal to the slow
@@ -103,11 +106,12 @@ def raceit_attention(
     Dispatch rules for ``fused=True`` (see `fused_attention_supported`):
     every ``softmax_mode`` ("pot", "pot_fine", "uniform") and any mask are
     supported; ``hw=True`` or ``fidelity="acam"`` raise ValueError — an
-    explicit ``fused=True`` here is a hard request, so an impossible combo is
-    an error rather than a silent fallback (the model layers make the
-    opposite choice and degrade with a warning). For the Sq=1 KV-cache
-    serving step use `repro.kernels.ops.raceit_attention_decode_fused`,
-    which is bit-exact vs this oracle evaluated on the cache slice.
+    explicit ``fused=True`` here is a hard request, so an impossible combo
+    is an error rather than a silent fallback (the resolved ExecPlan makes
+    the opposite choice and degrades with a recorded reason). For the Sq=1
+    KV-cache serving step use
+    `repro.kernels.ops.raceit_attention_decode_fused`, which is bit-exact
+    vs this oracle evaluated on the cache slice.
     """
     d = q.shape[-1]
     if fused:

@@ -1,0 +1,15 @@
+"""repro.exec — RaceOp registry + resolved ExecPlan.
+
+The single dispatch API for every RACE-IT operator: backends register
+against op slots (`repro.exec.registry`), `resolve_plan` picks one
+implementation per slot for a (ModelConfig, ExecConfig) pair, and the
+model/serving stack calls ``plan.<slot>(...)`` instead of branching on
+``exec_cfg.mode``. See `docs/architecture.md` §Dispatch.
+"""
+from .plan import (ExecPlan, ResolvedOp, Degrade, as_plan, resolve_plan,
+                   reset_plan_cache)
+from .registry import OP_SLOTS, BackendSpec, get_backend, list_backends, register
+
+__all__ = ["ExecPlan", "ResolvedOp", "Degrade", "as_plan", "resolve_plan",
+           "reset_plan_cache", "OP_SLOTS", "BackendSpec", "get_backend",
+           "list_backends", "register"]

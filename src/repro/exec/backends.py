@@ -1,0 +1,303 @@
+"""Built-in backend registrations for every RaceOp slot.
+
+Each backend is a thin adapter: the math lives with its owner
+(`repro.models.layers` for the attention formulations and quantized
+matmuls, `repro.core` for the staged numerics, `repro.kernels` for the
+fused Pallas paths); this module binds those implementations to named
+registry entries with capability predicates, so `resolve_plan` can pick
+between them and `plan.explain()` can name what is running and why.
+
+Naming convention: ``digital`` is the bf16/f32 baseline; ``raceit_*``
+backends are the paper's analog-faithful paths (``raceit_staged`` = the
+stage-by-stage XLA pipeline, ``raceit_fused`` = the streaming Pallas
+kernel, ``raceit_int`` = exact-ADC int8 crossbar matmul, ``raceit_lut`` =
+Compute-ACAM LUT activations, ``raceit_acam`` = the Fig. 8 softmax
+dataflow). The resident-`QuantizedWeight` form is handled inside the
+matmul/lm_head backends (it is a property of the *weight*, not the
+config), always with the plan's ``act_bits`` — never a reconstructed
+default ExecConfig.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops as acam_ops
+from repro.core.attention import dd_matmul_codes, fused_attention_supported
+from repro.core.ops import LOGIT_FMT
+from repro.core.quant import quantize_tensor
+from repro.core.softmax import acam_softmax
+from repro.models import layers
+from repro.models.layers import NEG_INF, QuantizedWeight
+
+from .registry import register
+
+# the staged/fused raceit attention formulations materialize (or stream)
+# O(Sq*Sk) work per head; past this key length the model stack has always
+# degraded to the chunked float path (a runtime shape rule, so it lives in
+# the backend impls, not the config-level capability predicate)
+RACEIT_ATTENTION_MAX_KEYS = 4096
+_SEQ_NOTE = (f"falls back to the digital path beyond "
+             f"Sk={RACEIT_ATTENTION_MAX_KEYS}")
+
+
+def _fused_supported(model_cfg, exec_cfg):
+    return fused_attention_supported(fidelity=exec_cfg.matmul_fidelity,
+                                     softmax_mode=exec_cfg.softmax_mode)
+
+
+# ---------------------------------------------------------------------------
+# matmul (weight matmuls: QKV / FFN / SSM projections — the crossbar DPE lane)
+# ---------------------------------------------------------------------------
+
+def _resident_matmul(plan, x, w: QuantizedWeight, bias):
+    """Resident int8 crossbar weight: codes + per-column scale.
+
+    Activation quantization uses the *plan's* ``act_bits`` — this is the
+    path that previously rebuilt a bare ``ExecConfig(mode="raceit")`` in
+    the lm head and silently dropped the caller's bit-width knobs.
+    """
+    k = w.codes.shape[0]
+    xq = quantize_tensor(x.astype(jnp.float32), bits=plan.exec_cfg.act_bits)
+    y32 = jax.lax.dot(xq.codes.reshape(-1, k).astype(jnp.int32),
+                      w.codes.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+    y = y32.astype(jnp.float32) * (xq.scale * w.scale)
+    y = y.reshape(*x.shape[:-1], *w.shape).astype(x.dtype)
+    if bias is not None:
+        y = y + bias.reshape(w.shape).astype(y.dtype)
+    return y
+
+
+@register("matmul", "digital")
+def _matmul_digital(plan, x, w, bias):
+    if isinstance(w, QuantizedWeight):
+        return _resident_matmul(plan, x, w, bias)
+    k = w.shape[0]
+    w2 = w.reshape(k, -1)
+    # preferred f32 materializes f32 outputs (and f32 TP collectives); the
+    # MXU accumulates in f32 internally either way, so the default keeps
+    # the boundary in compute dtype and halves collective bytes.
+    pref = (jnp.float32 if plan.model_cfg.matmul_out_dtype == "f32"
+            else x.dtype)
+    y = jax.lax.dot_general(
+        x, w2.astype(x.dtype), (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=pref).astype(x.dtype)
+    y = y.reshape(*x.shape[:-1], *w.shape[1:])
+    if bias is not None:
+        y = y + bias.reshape(w.shape[1:]).astype(y.dtype)
+    return y
+
+
+@register("matmul", "raceit_int")
+def _matmul_raceit_int(plan, x, w, bias):
+    """Exact-ADC int8 crossbar matmul (equivalence proven vs core.crossbar)."""
+    if isinstance(w, QuantizedWeight):
+        return _resident_matmul(plan, x, w, bias)
+    ec = plan.exec_cfg
+    k = w.shape[0]
+    w2 = w.reshape(k, -1)
+    xq = quantize_tensor(x.astype(jnp.float32), bits=ec.act_bits)
+    wq = quantize_tensor(w2.astype(jnp.float32), bits=ec.weight_bits, axis=1)
+    y32 = jax.lax.dot(xq.codes.reshape(-1, k).astype(jnp.int32),
+                      wq.codes.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+    y = y32.astype(jnp.float32) * (xq.scale * wq.scale)
+    y = y.reshape(*x.shape[:-1], *w.shape[1:]).astype(x.dtype)
+    if bias is not None:
+        y = y + bias.reshape(w.shape[1:]).astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# activation (FFN nonlinearity)
+# ---------------------------------------------------------------------------
+
+@register("activation", "digital")
+def _activation_digital(plan, x, name=None):
+    name = name or plan.model_cfg.activation
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)
+
+
+@register("activation", "raceit_lut")
+def _activation_raceit_lut(plan, x, name=None):
+    """Compute-ACAM LUT activation (unlisted activations map to gelu)."""
+    name = name or plan.model_cfg.activation
+    op = acam_ops.get_op(name if name in ("gelu", "silu") else "gelu")
+    return op(x.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# softmax (standalone rows: the MoE router, the staged decode scores)
+# ---------------------------------------------------------------------------
+
+@register("softmax", "digital")
+def _softmax_digital(plan, logits, axis):
+    return jax.nn.softmax(logits, axis=axis)
+
+
+@register("softmax", "raceit_acam")
+def _softmax_raceit_acam(plan, logits, axis):
+    return acam_softmax(logits, axis=axis, mode=plan.exec_cfg.softmax_mode)
+
+
+# ---------------------------------------------------------------------------
+# dd_matmul (data-dependent matmuls on int8 codes: q.K^T, probs.V)
+# ---------------------------------------------------------------------------
+
+@register("dd_matmul", "int")
+def _dd_matmul_int(plan, a_codes, b_codes):
+    return dd_matmul_codes(a_codes, b_codes, fidelity="int")
+
+
+@register("dd_matmul", "acam",
+          notes="4-bit nibble-table multiplies; bit-identical to 'int', slow")
+def _dd_matmul_acam(plan, a_codes, b_codes):
+    return dd_matmul_codes(a_codes, b_codes, fidelity="acam")
+
+
+# ---------------------------------------------------------------------------
+# attention_prefill (full / prefill attention)
+# ---------------------------------------------------------------------------
+# Interface: impl(plan, q, k, v, *, scale, q_offset, kind, window, chunk,
+#                 probs_dtype)
+#   q (B, Sq, H, hd) flat heads; k/v (B, Sk, KV, hd); kind in
+#   ("cross", "bidir", "local", "causal").
+#
+# The rule for ModelConfig-derived knobs: anything a sub-stack may *replace*
+# (mask kind, window, probs dtype, activation name) is computed by the call
+# site from ITS cfg and passed in — encoder sub-stacks run with a replaced
+# ModelConfig the plan was not resolved against. ``plan.model_cfg`` is only
+# read for knobs that are constant across sub-stacks by construction
+# (matmul_out_dtype) and as a fallback when the call site passes None.
+
+def _mask_fn(kind: str, sk: int, q_offset, window: int):
+    if kind == "cross":
+        return lambda qi, ki: jnp.ones((), bool)  # full cross attention
+    if kind == "bidir":
+        return lambda qi, ki: ki < sk + 0 * qi    # bidirectional
+    if kind == "local":
+        return lambda qi, ki: ((ki <= qi + q_offset)
+                               & (ki > qi + q_offset - window))
+    return lambda qi, ki: ki <= qi + q_offset     # causal
+
+
+def _mask_array(kind, b, sq, sk, q_offset, window):
+    msk = _mask_fn(kind, sk, q_offset, window)(
+        jnp.arange(sq)[:, None], jnp.arange(sk)[None, :])
+    return jnp.broadcast_to(msk, (b, sq, sk))
+
+
+@register("attention_prefill", "digital")
+def _prefill_digital(plan, q, k, v, *, scale, q_offset, kind, window, chunk,
+                     probs_dtype=None):
+    if probs_dtype is None:
+        probs_dtype = layers._probs_dtype(plan.model_cfg)
+    sq, sk = q.shape[1], k.shape[1]
+    if (kind == "local" and sq == sk and sq % window == 0 and sq > window):
+        # sliding-window layers, train & single-shot prefill: q-blocked
+        # 2W-key attention instead of the masked-full path
+        return layers._local_block_attention(q, k, v, window, scale,
+                                             probs_dtype)
+    mask_fn = _mask_fn(kind, sk, q_offset, window)
+    return layers._chunked_attention(q, k, v, mask_fn, min(chunk, sk), scale,
+                                     probs_dtype)
+
+
+@register("attention_prefill", "raceit_staged", notes=_SEQ_NOTE)
+def _prefill_raceit_staged(plan, q, k, v, *, scale, q_offset, kind, window,
+                           chunk, probs_dtype=None):
+    sk = k.shape[1]
+    if sk > RACEIT_ATTENTION_MAX_KEYS:
+        return _prefill_digital(plan, q, k, v, scale=scale, q_offset=q_offset,
+                                kind=kind, window=window, chunk=chunk,
+                                probs_dtype=probs_dtype)
+    mask = _mask_array(kind, q.shape[0], q.shape[1], sk, q_offset, window)
+    return layers._raceit_staged_attention(q, k, v, mask, scale, plan)
+
+
+@register("attention_prefill", "raceit_fused", supported=_fused_supported,
+          notes=_SEQ_NOTE)
+def _prefill_raceit_fused(plan, q, k, v, *, scale, q_offset, kind, window,
+                          chunk, probs_dtype=None):
+    sk = k.shape[1]
+    if sk > RACEIT_ATTENTION_MAX_KEYS:
+        return _prefill_digital(plan, q, k, v, scale=scale, q_offset=q_offset,
+                                kind=kind, window=window, chunk=chunk,
+                                probs_dtype=probs_dtype)
+    if kind == "causal":
+        # plain causal: the kernel masks from block indices, so not even a
+        # mask of score shape is ever built
+        return layers._raceit_fused_attention(q, k, v, None, scale, plan,
+                                              causal_offset=q_offset)
+    mask = _mask_array(kind, q.shape[0], q.shape[1], sk, q_offset, window)
+    return layers._raceit_fused_attention(q, k, v, mask, scale, plan)
+
+
+# ---------------------------------------------------------------------------
+# attention_decode (Sq=1 against the KV cache's valid prefix)
+# ---------------------------------------------------------------------------
+# Interface: impl(plan, q, k, v, *, kv_len, scale) -> (B, 1, H, hd)
+#   q (B, 1, H, hd) flat heads; k/v (B, Smax, KV, hd) fixed-shape buffers.
+
+def _decode_scores(q, k, kv_heads, scale):
+    """Float decode scores in grouped-query layout: (B, KV, G, 1, Smax)."""
+    qg = layers._split_gqa(q, kv_heads)  # (B, 1, KV, G, hd)
+    return jnp.einsum("bqkgd,bckd->bkgqc", qg.astype(jnp.float32) * scale,
+                      k.astype(jnp.float32))
+
+
+def _decode_combine(pr, v):
+    o = jnp.einsum("bkgqc,bckd->bkgqd", pr, v.astype(jnp.float32))
+    b, kv, g, sq, hd = o.shape
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, kv * g, hd)
+
+
+@register("attention_decode", "digital")
+def _decode_digital(plan, q, k, v, *, kv_len, scale):
+    s = _decode_scores(q, k, k.shape[2], scale)
+    valid = jnp.arange(k.shape[1]) < kv_len
+    s = jnp.where(valid[None, None, None, None], s, NEG_INF)
+    return _decode_combine(jax.nn.softmax(s, axis=-1), v)
+
+
+@register("attention_decode", "raceit_staged",
+          notes="float scores + ACAM softmax (the pre-PR2 serving decode)")
+def _decode_raceit_staged(plan, q, k, v, *, kv_len, scale):
+    s = _decode_scores(q, k, k.shape[2], scale)
+    valid = jnp.arange(k.shape[1]) < kv_len
+    s = jnp.where(valid[None, None, None, None], s, LOGIT_FMT.min_value)
+    pr = acam_softmax(s, axis=-1, mode=plan.exec_cfg.softmax_mode)
+    return _decode_combine(pr, v)
+
+
+@register("attention_decode", "raceit_fused", supported=_fused_supported)
+def _decode_raceit_fused(plan, q, k, v, *, kv_len, scale):
+    # full quantized Fig.-12 numerics over the cache's valid prefix — same
+    # contract as the fused prefill path
+    return layers._raceit_fused_decode(q, k, v, kv_len, scale, plan)
+
+
+# ---------------------------------------------------------------------------
+# lm_head (the unembedding projection)
+# ---------------------------------------------------------------------------
+
+@register("lm_head", "digital",
+          notes="resident int8 weights take the quantized path with the "
+                "plan's act_bits")
+def _lm_head_digital(plan, x, w):
+    if isinstance(w, QuantizedWeight):  # resident int8 unembedding
+        return _resident_matmul(plan, x, w, None).astype(jnp.float32)
+    return jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                      w.astype(jnp.float32))
+
+
+@register("lm_head", "raceit_q8",
+          notes="fully-quantized lm head (beyond-paper; default stays "
+                "full-precision)")
+def _lm_head_raceit_q8(plan, x, w):
+    if isinstance(w, QuantizedWeight):
+        return _resident_matmul(plan, x, w, None).astype(jnp.float32)
+    return _matmul_raceit_int(plan, x, w, None).astype(jnp.float32)

@@ -41,8 +41,10 @@ Two entry points share the kernel bodies:
   mask / in-kernel causal offset;
 * `acam_attention_decode_codes` — serving decode: Sq=1 queries against a
   fixed-shape KV cache whose valid prefix length ``kv_len`` is a *traced*
-  scalar (streamed into SMEM-style scalar state, masking key blocks past
-  the fill level instead of slicing the buffer).
+  scalar, ridden in as a scalar-prefetch operand: key blocks fully past
+  the fill level are skipped outright (clamped index maps + gated
+  compute), and only the partially valid boundary block is masked —
+  instead of slicing the buffer (dynamic shapes) or sweeping it whole.
 
 Both accept every softmax configuration of the staged path: "pot",
 "pot_fine", and the Fig.-14 "uniform" exp-quantization ablation — the LOG
@@ -150,12 +152,13 @@ def _requant_code_table(cmax, prob_lut_vals):
                     -128, 127).astype(jnp.int32)
 
 
-def _attn_kernel(s1_ref, qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, *rest,
+def _attn_kernel(kvlen_ref, s1_ref, qoff_ref, q_ref, k_ref, v_ref, *rest,
                  nq: int, nk: int, bg: int, bq: int, bk: int,
                  g_real: int, sq_real: int, sk_real: int,
                  sqrt_d: Optional[float],
                  e_min: float, octave_step: float, frac_shift: int,
-                 causal: bool, has_mask: bool, dyn_len: bool):
+                 causal: bool, has_mask: bool, dyn_len: bool,
+                 skip_blocks: bool):
     if has_mask:
         mask_ref, exp_val_ref, log_lut_ref, prob_lut_ref = rest[:4]
         rest = rest[4:]
@@ -172,12 +175,31 @@ def _attn_kernel(s1_ref, qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, *rest,
     rows = pl.dslice((g * nq + i) * bg * bq, bg * bq)  # per-row scratch slots
     # keys past the real/valid length carry no weight at all (they do not
     # exist in the oracle's input): static block padding, or — decode path —
-    # the dynamic KV-cache fill level streamed in as a scalar
+    # the dynamic KV-cache fill level streamed in as a prefetched scalar
     mask_keys = (sk_real % bk != 0) or dyn_len
+    def guard_live(body):
+        """Run ``body`` only for key blocks intersecting the valid prefix.
+
+        Scalar-prefetch decode grids (``skip_blocks``: dynamic length AND
+        more than one key block): fully-invalid blocks (k*bk >= kv_len)
+        are skipped outright — their accumulation work is gated off here,
+        and the k/v BlockSpec index maps clamp them to the last valid
+        block so no fresh tile is ever fetched for them (grid bounds
+        instead of masked sweeps over the whole cache buffer). kv_len is
+        then an SMEM scalar, safe to branch on. Every other grid keeps the
+        unconditional body: static (prefill) grids have nothing to skip,
+        and an nk==1 dynamic grid's only block always intersects the
+        prefix (kv_len >= 1) — gating there would predicate control flow
+        on a VMEM-resident scalar for a condition that is always true.
+        """
+        if skip_blocks:
+            pl.when((k * bk) < kvlen_ref[0])(body)
+        else:
+            body()
 
     def key_valid():
         return (k * bk + jax.lax.broadcasted_iota(jnp.int32, (bg, bq, bk), 2)
-                ) < kvlen_ref[0, 0]
+                ) < kvlen_ref[0]
 
     def tile_logit_codes():
         """matmul-1 + div-add: (bg, bq, bk) LOGIT codes."""
@@ -216,18 +238,20 @@ def _attn_kernel(s1_ref, qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, *rest,
             sum_ref[rows, :] = jnp.zeros((bg * bq, 1), jnp.float32)
             xmax_ref[...] = jnp.full((bg, bq, 1), LOGIT_FMT.code_min, jnp.int32)
 
-        xc = tile_logit_codes()
-        # exp_val_ref folds the exp LUT with its output decode: one f32 gather
-        e_vals = exp_val_ref[xc + 128]
-        xmax_tile = xc
-        if mask_keys:
-            valid = key_valid()
-            e_vals = jnp.where(valid, e_vals, 0.0)
-            xmax_tile = jnp.where(valid, xc, LOGIT_FMT.code_min)
-        sum_ref[rows, :] += jnp.sum(e_vals, axis=-1, keepdims=True
-                                    ).reshape(bg * bq, 1)
-        xmax_ref[...] = jnp.maximum(
-            xmax_ref[...], jnp.max(xmax_tile, axis=-1, keepdims=True))
+        @guard_live
+        def _accumulate():
+            xc = tile_logit_codes()
+            # exp_val_ref folds the exp LUT with its decode: one f32 gather
+            e_vals = exp_val_ref[xc + 128]
+            xmax_tile = xc
+            if mask_keys:
+                valid = key_valid()
+                e_vals = jnp.where(valid, e_vals, 0.0)
+                xmax_tile = jnp.where(valid, xc, LOGIT_FMT.code_min)
+            sum_ref[rows, :] += jnp.sum(e_vals, axis=-1, keepdims=True
+                                        ).reshape(bg * bq, 1)
+            xmax_ref[...] = jnp.maximum(
+                xmax_ref[...], jnp.max(xmax_tile, axis=-1, keepdims=True))
 
         @pl.when(k == nk - 1)
         def _row_finish():
@@ -248,16 +272,19 @@ def _attn_kernel(s1_ref, qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, *rest,
         def _init_acc():
             acc_ref[...] = jnp.zeros_like(acc_ref)
 
-        xc = tile_logit_codes()
-        L = log_lut_ref[_pot_encode_sum(load_row_sums(), e_min, octave_step)]
-        d = jnp.clip(xc - (L << frac_shift),
-                     LOGIT_FMT.code_min, LOGIT_FMT.code_max)
-        pc = _requant_code_table(cmax_ref[0, 0], prob_lut_ref[...])[d + 128]
-        if mask_keys:  # padded/invalid keys: PROB code 0 -> requantized code 0
-            pc = jnp.where(key_valid(), pc, 0)
-        acc_ref[...] += jax.lax.dot_general(
-            pc, v_ref[...].astype(jnp.int32),
-            (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.int32)
+        @guard_live
+        def _accumulate():
+            xc = tile_logit_codes()
+            L = log_lut_ref[_pot_encode_sum(load_row_sums(), e_min,
+                                            octave_step)]
+            d = jnp.clip(xc - (L << frac_shift),
+                         LOGIT_FMT.code_min, LOGIT_FMT.code_max)
+            pc = _requant_code_table(cmax_ref[0, 0], prob_lut_ref[...])[d + 128]
+            if mask_keys:  # padded/invalid keys: PROB code 0 -> requant code 0
+                pc = jnp.where(key_valid(), pc, 0)
+            acc_ref[...] += jax.lax.dot_general(
+                pc, v_ref[...].astype(jnp.int32),
+                (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.int32)
 
         @pl.when(k == nk - 1)
         def _write():
@@ -265,7 +292,7 @@ def _attn_kernel(s1_ref, qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, *rest,
             cmax_out_ref[0, 0] = cmax_ref[0, 0]
 
 
-def _attn_kernel_single(s1_ref, qoff_ref, kvlen_ref, q_ref, k_ref, v_ref,
+def _attn_kernel_single(kvlen_ref, s1_ref, qoff_ref, q_ref, k_ref, v_ref,
                         *rest, bg: int, bq: int, bk: int,
                         g_real: int, sq_real: int, sk_real: int,
                         sqrt_d: Optional[float],
@@ -305,7 +332,7 @@ def _attn_kernel_single(s1_ref, qoff_ref, kvlen_ref, q_ref, k_ref, v_ref,
     xmax_tile = xc
     if mask_keys:
         valid = (jax.lax.broadcasted_iota(jnp.int32, (bg, bq, bk), 2)
-                 < kvlen_ref[0, 0])
+                 < kvlen_ref[0])
         e_vals = jnp.where(valid, e_vals, 0.0)
         xmax_tile = jnp.where(valid, xc, LOGIT_FMT.code_min)
     S = jnp.sum(e_vals, axis=-1, keepdims=True)
@@ -399,27 +426,52 @@ def acam_attention_codes(
     kv_len_val = (jnp.minimum(jnp.asarray(kv_len, jnp.int32), Sk)
                   if dyn_len else jnp.asarray(Sk, jnp.int32))
 
-    spec_scalar = pl.BlockSpec((1, 1), lambda p, g, i, k: (0, 0))
-    spec_lut = pl.BlockSpec((256,), lambda p, g, i, k: (0,))
+    # When the decode grid streams multiple key blocks, kv_len rides as a
+    # *scalar-prefetch* operand: it is available before each grid step, so
+    # the k/v BlockSpec index maps can clamp fully-invalid key blocks to
+    # the last valid block — the grid keeps a static shape, but blocks past
+    # the fill level never DMA a fresh tile and their compute is gated off
+    # in-kernel (`guard_live`). Static grids (prefill, and single-tile
+    # decode, where there is no whole block to skip) keep kv_len as a plain
+    # first operand and pay none of the prefetch machinery; the kernels see
+    # an identical (1,)-shaped ref either way.
+    use_prefetch = dyn_len and nk > 1
+
+    def _im(f):
+        """Index map with the right arity: scalar-prefetch index maps
+        receive the prefetched refs as trailing arguments."""
+        if use_prefetch:
+            return lambda p, g, i, k, kvl: f(p, g, i, k, kvl)
+        return lambda p, g, i, k: f(p, g, i, k, None)
+
+    spec_scalar = pl.BlockSpec((1, 1), _im(lambda p, g, i, k, kvl: (0, 0)))
+    spec_lut = pl.BlockSpec((256,), _im(lambda p, g, i, k, kvl: (0,)))
+
+    if use_prefetch:
+        def kv_index(p, g, i, k, kvl):
+            last_live = jnp.maximum((kvl[0] + bk - 1) // bk - 1, 0)
+            return (g, jnp.minimum(k, last_live), 0)
+    else:
+        kv_index = _im(lambda p, g, i, k, kvl: (g, k, 0))
+
     in_specs = [
-        spec_scalar,                                              # logit scale
-        spec_scalar,                                              # q offset
-        spec_scalar,                                              # kv length
-        pl.BlockSpec((bg, bq, Dp), lambda p, g, i, k: (g, i, 0)),  # q
-        pl.BlockSpec((bg, bk, Dp), lambda p, g, i, k: (g, k, 0)),  # k
-        pl.BlockSpec((bg, bk, Dp), lambda p, g, i, k: (g, k, 0)),  # v
+        spec_scalar,                                                # logit scale
+        spec_scalar,                                                # q offset
+        pl.BlockSpec((bg, bq, Dp), _im(lambda p, g, i, k, kvl: (g, i, 0))),
+        pl.BlockSpec((bg, bk, Dp), kv_index),                       # k
+        pl.BlockSpec((bg, bk, Dp), kv_index),                       # v
     ]
     operands = [
+        kv_len_val.reshape(1),  # first: scalar-prefetch arg / plain operand
         logit_scale.reshape(1, 1),
         jnp.asarray(q_offset, jnp.int32).reshape(1, 1),
-        kv_len_val.reshape(1, 1),
         qp, kp, vp,
     ]
     if mask is not None:
         mp = pad3(jnp.pad(mask.astype(jnp.int8),
                           ((0, 0), (0, pad_q), (0, pad_k))))
         in_specs.append(pl.BlockSpec((bg, bq, bk),
-                                     lambda p, g, i, k: (g, i, k)))
+                                     _im(lambda p, g, i, k, kvl: (g, i, k))))
         operands.append(mp)
     in_specs += [spec_lut, spec_lut, spec_lut]
     operands += [exp_val, jnp.asarray(log_lut, jnp.int32),
@@ -440,7 +492,7 @@ def acam_attention_codes(
             g_real=G, sq_real=Sq, sk_real=Sk,
             sqrt_d=sqrt_d, e_min=e_min, octave_step=octave_step,
             frac_shift=frac_shift, causal=causal, has_mask=mask is not None,
-            dyn_len=dyn_len)
+            dyn_len=dyn_len, skip_blocks=use_prefetch)
         scratch = [
             pltpu.VMEM((Gp * Sqp, 1), jnp.float32),  # streaming PoT row sums
             pltpu.VMEM((bg, bq, 1), jnp.int32),      # row logit max (pass A)
@@ -449,17 +501,25 @@ def acam_attention_codes(
         ]
         grid = (2, ng, nq, nk)
 
-    out, cmax = pl.pallas_call(
-        kernel,
-        out_shape=(jax.ShapeDtypeStruct((Gp, Sqp, Dp), jnp.int32),
-                   jax.ShapeDtypeStruct((1, 1), jnp.int32)),
-        in_specs=in_specs,
-        out_specs=(pl.BlockSpec((bg, bq, Dp), lambda p, g, i, k: (g, i, 0)),
-                   spec_scalar),
-        scratch_shapes=scratch,
-        grid=grid,
-        interpret=interpret,
-    )(*operands)
+    out_shape = (jax.ShapeDtypeStruct((Gp, Sqp, Dp), jnp.int32),
+                 jax.ShapeDtypeStruct((1, 1), jnp.int32))
+    out_specs = (pl.BlockSpec((bg, bq, Dp),
+                              _im(lambda p, g, i, k, kvl: (g, i, 0))),
+                 spec_scalar)
+    if use_prefetch:
+        call = pl.pallas_call(
+            kernel, out_shape=out_shape,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+                out_specs=out_specs, scratch_shapes=scratch),
+            interpret=interpret)
+    else:
+        kvlen_spec = pl.BlockSpec((1,), _im(lambda p, g, i, k, kvl: (0,)))
+        call = pl.pallas_call(
+            kernel, out_shape=out_shape, grid=grid,
+            in_specs=[kvlen_spec] + in_specs, out_specs=out_specs,
+            scratch_shapes=scratch, interpret=interpret)
+    out, cmax = call(*operands)
     return out[:G, :Sq, :D], cmax[0, 0]
 
 
@@ -483,8 +543,11 @@ def acam_attention_decode_codes(
     ``kv_len`` do not exist for the kernel — no exp weight, no PROB max
     contribution, no matmul-2 term — so (out, cmax) are exactly what
     `acam_attention_codes` returns on the sliced cache ``k[:, :kv_len]``,
-    with no dynamic shapes anywhere (the grid still sweeps the whole buffer;
-    invalid blocks are masked, not skipped).
+    with no dynamic shapes anywhere: the grid keeps a static shape, but
+    ``kv_len`` is scalar-prefetched, so fully-invalid key blocks are
+    *skipped* (index maps clamp to the last valid block — no fresh tile
+    fetch — and `guard_live` gates off their compute), while the partially
+    valid boundary block is masked.
 
     No mask array or causal offset is needed: decode causality is precisely
     "attend the valid prefix", which ``kv_len`` already encodes.

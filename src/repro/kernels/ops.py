@@ -141,8 +141,16 @@ def raceit_attention_decode_fused(
 
     k/v are quantized with `masked_prefix_quantize`, so the tensor scale is
     computed over the valid prefix only — entries past ``kv_len`` (stale or
-    zero-initialized cache rows) cannot perturb the quantizer, and the kernel
-    masks them out of the softmax and matmul-2 entirely.
+    zero-initialized cache rows) cannot perturb the quantizer. Partially
+    valid key blocks are masked out of the softmax and matmul-2; *fully*
+    invalid blocks are skipped outright via scalar-prefetched grid bounds
+    (kv_len rides as a `pltpu.PrefetchScalarGridSpec` operand, so their
+    k/v tiles are never fetched and their compute is gated off — see
+    `acam_attention_codes`).
+
+    This wrapper is what the ExecPlan's ``attention_decode`` slot resolves
+    to as the ``raceit_fused`` backend (via `models.layers`); it remains
+    directly callable for kernel-level tests and benchmarks.
     """
     from .acam_attention import DEFAULT_BLOCK_G, DEFAULT_BLOCK_K
     B, H, Sq, D = q.shape

@@ -4,11 +4,28 @@ crossbar weights.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gpt2-large --mode raceit_q8 \
       --set n_layers=2 d_model=128 vocab_size=512 --requests 4
+
+Operator dispatch is a resolved ExecPlan (printed at startup): A/B runs
+name backends per op slot instead of flipping booleans, e.g.
+
+  --exec-plan attention_decode=raceit_staged lm_head=raceit_q8
 """
 from __future__ import annotations
 
 import argparse
 import json
+
+
+def parse_exec_plan(pairs: list[str]) -> tuple:
+    """["slot=backend", ...] -> ExecConfig.op_overrides tuple."""
+    overrides = []
+    for pair in pairs:
+        slot, _, backend = pair.partition("=")
+        if not slot or not backend:
+            raise SystemExit(f"--exec-plan entries are slot=backend, got "
+                             f"{pair!r}")
+        overrides.append((slot, backend))
+    return tuple(overrides)
 
 
 def main():
@@ -21,7 +38,12 @@ def main():
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--staged-attention", action="store_true",
                     help="opt out of the fused-attention serving default "
-                         "(A/B the staged XLA pipeline)")
+                         "(sugar for --exec-plan attention_prefill="
+                         "raceit_staged attention_decode=raceit_staged)")
+    ap.add_argument("--exec-plan", nargs="*", default=[], metavar="SLOT=BACKEND",
+                    help="pin op slots to named backends (see "
+                         "repro.exec.registry.OP_SLOTS); unsupported combos "
+                         "degrade and the startup plan table says why")
     ap.add_argument("--set", nargs="*", default=[])
     args = ap.parse_args()
 
@@ -50,15 +72,19 @@ def main():
     if args.ckpt:
         (params, _), _ = CheckpointManager(args.ckpt).restore((params, None))
     # serving defaults to the fused streaming attention kernel on both the
-    # prefill and decode paths (ExecConfig.serving)
+    # prefill and decode paths (ExecConfig.serving); --exec-plan pins
+    # individual op slots to named backends on top of that
     exec_cfg = ExecConfig.serving(
         mode="raceit" if args.mode.startswith("raceit") else "digital",
-        fused_attention=not args.staged_attention)
+        fused_attention=not args.staged_attention,
+        op_overrides=parse_exec_plan(args.exec_plan))
     if args.mode == "raceit_q8":
         params = quantize_model_params(params)
         print("[serve] weights quantized to resident int8 crossbar codes")
 
     eng = GenerationEngine(cfg, params, exec_cfg=exec_cfg, max_len=128)
+    print("[serve] resolved execution plan:")
+    print("\n".join("  " + l for l in eng.explain_plan().splitlines()))
     sched = BatchScheduler(eng, bucket_size=4)
     rng = np.random.default_rng(0)
     for rid in range(args.requests):

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ExecConfig, ModelConfig
 from repro.dist.sharding import MeshContext
+from repro.exec.plan import ExecPlan, as_plan
 
 from repro.dist.sharding import constraint
 
@@ -55,20 +56,21 @@ def init_layer(key, cfg: ModelConfig, mixer: str, ffn_kind: str, dtype,
 
 
 def apply_layer(p: Params, x: jax.Array, *, cfg: ModelConfig,
-                exec_cfg: ExecConfig, mixer: str, ffn_kind: str,
+                plan: ExecPlan | ExecConfig, mixer: str, ffn_kind: str,
                 positions: jax.Array, cache: Optional[Params],
                 mesh_ctx: Optional[MeshContext],
                 enc_kv: Optional[tuple] = None) -> tuple[jax.Array, Any]:
+    plan = as_plan(cfg, plan)
     h = layers.apply_norm(p["norm1"], x, cfg)
     if mixer in ("attn", "attn_local"):
         m, new_cache = layers.attention(
-            p["attn"], h, cfg=cfg, exec_cfg=exec_cfg, positions=positions,
+            p["attn"], h, cfg=cfg, plan=plan, positions=positions,
             local=(mixer == "attn_local"),
             cache=cache.get("attn") if cache else None)
         if cache is not None:
             new_cache = {"attn": new_cache}
     elif mixer == "mamba":
-        m, new_cache = ssm.mamba(p["mamba"], h, cfg=cfg, exec_cfg=exec_cfg,
+        m, new_cache = ssm.mamba(p["mamba"], h, cfg=cfg, plan=plan,
                                  cache=cache.get("mamba") if cache else None)
         if cache is not None:
             new_cache = {"mamba": new_cache}
@@ -78,16 +80,16 @@ def apply_layer(p: Params, x: jax.Array, *, cfg: ModelConfig,
 
     if "cross" in p and enc_kv is not None:
         hx = layers.apply_norm(p["norm_x"], x, cfg)
-        cx, _ = layers.attention(p["cross"], hx, cfg=cfg, exec_cfg=exec_cfg,
+        cx, _ = layers.attention(p["cross"], hx, cfg=cfg, plan=plan,
                                  positions=positions, cross_kv=enc_kv)
         x = x + cx
 
     if ffn_kind == "dense":
         h2 = layers.apply_norm(p["norm2"], x, cfg)
-        x = x + layers.ffn(p["ffn"], h2, cfg, exec_cfg)
+        x = x + layers.ffn(p["ffn"], h2, cfg, plan)
     elif ffn_kind == "moe":
         h2 = layers.apply_norm(p["norm2"], x, cfg)
-        x = x + moe_mod.moe(p["moe"], h2, cfg, exec_cfg, mesh_ctx)
+        x = x + moe_mod.moe(p["moe"], h2, cfg, plan, mesh_ctx)
     # sequence-parallel residual stream: the carried activation (and thus the
     # remat stash) lives sharded over "model"; XLA inserts AG/RS at the
     # boundaries that need full sequence (Megatron-SP pattern).
@@ -186,12 +188,13 @@ def _remat_wrap(fn, cfg: ModelConfig):
 
 
 def apply_stack(params: Params, x: jax.Array, *, cfg: ModelConfig,
-                exec_cfg: ExecConfig, positions: jax.Array,
+                plan: ExecPlan | ExecConfig, positions: jax.Array,
                 caches: Optional[Params], mesh_ctx: Optional[MeshContext],
                 enc_kv_stack: Optional[list] = None,
                 n_layers: Optional[int] = None,
                 use_remat: bool = False) -> tuple[jax.Array, Optional[Params]]:
     """Run the stack. caches is the pytree from init_stack_cache (or None)."""
+    plan = as_plan(cfg, plan)
     P, n_full, specs = layer_plan(cfg, n_layers)
     has_cache = caches is not None
 
@@ -204,7 +207,7 @@ def apply_stack(params: Params, x: jax.Array, *, cfg: ModelConfig,
                 mixer, ffn_kind = specs[j]
                 cache_j = c_list[j] if has_cache else None
                 x, nc = apply_layer(
-                    p_list[j], x, cfg=cfg, exec_cfg=exec_cfg, mixer=mixer,
+                    p_list[j], x, cfg=cfg, plan=plan, mixer=mixer,
                     ffn_kind=ffn_kind, positions=positions,
                     cache=(cache_j if cache_j else None), mesh_ctx=mesh_ctx,
                     enc_kv=None)
@@ -225,7 +228,7 @@ def apply_stack(params: Params, x: jax.Array, *, cfg: ModelConfig,
         mixer, ffn_kind = specs[i]
         cache_t = caches["tail"][t] if has_cache else None
         x, nc = apply_layer(
-            params["tail"][t], x, cfg=cfg, exec_cfg=exec_cfg, mixer=mixer,
+            params["tail"][t], x, cfg=cfg, plan=plan, mixer=mixer,
             ffn_kind=ffn_kind, positions=positions,
             cache=(cache_t if cache_t else None), mesh_ctx=mesh_ctx,
             enc_kv=None)

@@ -1,13 +1,18 @@
 """Transformer building blocks: norms, positions, attention, FFN.
 
-Everything is a pure function over explicit parameter pytrees (dicts). Each
-layer supports two execution modes (ExecConfig.mode):
+Everything is a pure function over explicit parameter pytrees (dicts).
+Operator dispatch goes through a resolved `repro.exec.ExecPlan`: each layer
+calls ``plan.matmul`` / ``plan.activation`` / ``plan.attention_prefill`` /
+``plan.attention_decode`` instead of branching on an execution mode — the
+plan was resolved once per (ModelConfig, ExecConfig) pair and names exactly
+one backend per operator slot (``plan.explain()`` shows the table).
 
-* ``digital`` — the bf16/f32 baseline;
-* ``raceit`` — the paper's analog-faithful inference path: int8 weights on the
-  crossbar DPE lane (exact-ADC integer matmul, equivalence proven against
-  core.crossbar), Compute-ACAM LUT activations, and the ACAM softmax dataflow
-  inside attention.
+The analog-faithful math that the raceit backends bind lives here as
+private helpers (`_raceit_staged_attention`, `_raceit_fused_attention`,
+`_raceit_fused_decode`) next to the float formulations they are validated
+against (`_chunked_attention`, `_local_block_attention`); the backend
+registrations that expose them as named plan entries are in
+`repro.exec.backends`.
 
 Attention uses a KV-chunked online-softmax (flash-style) formulation under
 ``jax.lax.scan`` so scores are never fully materialized — required to fit
@@ -15,8 +20,8 @@ prefill_32k in HBM and mirrored by the Pallas kernel.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-import warnings
 from typing import Any, Optional
 
 import jax
@@ -24,19 +29,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ExecConfig, ModelConfig
-from repro.core.attention import fused_attention_supported
-from repro.core import ops as acam_ops
-from repro.core.ops import LOGIT_FMT
 from repro.core.quant import quantize_tensor
-from repro.core.softmax import acam_softmax
 from repro.dist.sharding import constraint
+from repro.exec.plan import ExecPlan, as_plan
 
 Params = dict
 NEG_INF = -1e9
-_PROBS_DTYPE = [jnp.bfloat16]  # module-level knob set from ModelConfig
-
-
-import dataclasses
 
 
 @jax.tree_util.register_pytree_node_class
@@ -56,13 +54,12 @@ class QuantizedWeight:
         return cls(children[0], children[1], aux[0])
 
 
-def set_perf_knobs(cfg) -> None:
-    """Install per-config perf knobs (called by Model)."""
+def _probs_dtype(cfg: ModelConfig):
+    """dtype of the p matrix fed to the PV matmul (perf knob; f32 compute
+    keeps both paths bit-consistent)."""
     if cfg.attn_probs_dtype == "float32" or cfg.compute_dtype == "float32":
-        _PROBS_DTYPE[0] = jnp.float32  # f32 compute: keep paths bit-consistent
-    else:
-        _PROBS_DTYPE[0] = jnp.bfloat16
-    _linear._f32_out = cfg.matmul_out_dtype == "f32"
+        return jnp.float32
+    return jnp.bfloat16
 
 
 # --------------------------------------------------------------------------
@@ -141,57 +138,19 @@ def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig) -> jax.Arra
 
 
 # --------------------------------------------------------------------------
-# quantized linear (the crossbar DPE lane, exact-ADC fast path)
+# linear projections (dispatched through the plan's matmul slot)
 # --------------------------------------------------------------------------
 
-def _linear(x: jax.Array, w: jax.Array, exec_cfg: ExecConfig,
+def _linear(x: jax.Array, w: jax.Array, plan: ExecPlan,
             bias: Optional[jax.Array] = None) -> jax.Array:
-    """x (..., K) @ w (K, ...) with optional RACE-IT int8 semantics.
+    """x (..., K) @ w (K, ...) on the plan's matmul backend.
 
-    `w` may be a pre-quantized resident weight {"codes": int8 (K, N),
-    "scale": (1, N) f32, "shape": out-shape} — the crossbar-native serving
-    form: weights stored as conductance codes, halving HBM weight traffic.
+    `w` may be a pre-quantized resident weight (`QuantizedWeight`) — the
+    crossbar-native serving form: weights stored as conductance codes,
+    halving HBM weight traffic. The resident path always quantizes
+    activations with the plan's ``act_bits``.
     """
-    if isinstance(w, QuantizedWeight):
-        k = w.codes.shape[0]
-        xq = quantize_tensor(x.astype(jnp.float32), bits=exec_cfg.act_bits)
-        y32 = jax.lax.dot(xq.codes.reshape(-1, k).astype(jnp.int32),
-                          w.codes.astype(jnp.int32),
-                          preferred_element_type=jnp.int32)
-        y = y32.astype(jnp.float32) * (xq.scale * w.scale)
-        y = y.reshape(*x.shape[:-1], *w.shape).astype(x.dtype)
-        if bias is not None:
-            y = y + bias.reshape(w.shape).astype(y.dtype)
-        return y
-    k = w.shape[0]
-    w2 = w.reshape(k, -1)
-    if exec_cfg.mode == "raceit":
-        xq = quantize_tensor(x.astype(jnp.float32), bits=exec_cfg.act_bits)
-        wq = quantize_tensor(w2.astype(jnp.float32), bits=exec_cfg.weight_bits, axis=1)
-        y32 = jax.lax.dot(xq.codes.reshape(-1, k).astype(jnp.int32),
-                          wq.codes.astype(jnp.int32),
-                          preferred_element_type=jnp.int32)
-        y = y32.astype(jnp.float32) * (xq.scale * wq.scale)
-        y = y.reshape(*x.shape[:-1], *w.shape[1:]).astype(x.dtype)
-    else:
-        # preferred f32 materializes f32 outputs (and f32 TP collectives);
-        # the MXU accumulates in f32 internally either way, so the default
-        # keeps the boundary in compute dtype and halves collective bytes.
-        pref = jnp.float32 if getattr(_linear, "_f32_out", False) else x.dtype
-        y = jax.lax.dot_general(
-            x, w2.astype(x.dtype), (((x.ndim - 1,), (0,)), ((), ())),
-            preferred_element_type=pref).astype(x.dtype)
-        y = y.reshape(*x.shape[:-1], *w.shape[1:])
-    if bias is not None:
-        y = y + bias.reshape(w.shape[1:]).astype(y.dtype)
-    return y
-
-
-def _activation(x: jax.Array, cfg: ModelConfig, exec_cfg: ExecConfig) -> jax.Array:
-    if exec_cfg.mode == "raceit":
-        op = acam_ops.get_op(cfg.activation if cfg.activation in ("gelu", "silu") else "gelu")
-        return op(x.astype(jnp.float32)).astype(x.dtype)
-    return (jax.nn.gelu(x) if cfg.activation == "gelu" else jax.nn.silu(x))
+    return plan.matmul(x, w, bias=bias)
 
 
 # --------------------------------------------------------------------------
@@ -223,7 +182,7 @@ def _split_gqa(q, n_kv):
 
 
 def _chunked_attention(q, k, v, mask_fn, chunk: int, scale: float,
-                       exec_cfg: ExecConfig):
+                       probs_dtype):
     """Online-softmax attention, scanning over KV chunks, flat-head layout.
 
     q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd). KV heads are repeated to H inside
@@ -259,7 +218,7 @@ def _chunked_attention(q, k, v, mask_fn, chunk: int, scale: float,
         l_new = l * corr + p.sum(-1)
         # storing p in bf16 halves the dominant HBM tensor of the chunk loop;
         # the accumulator stays f32 (online-softmax stability)
-        pv = p.astype(_PROBS_DTYPE[0])
+        pv = p.astype(probs_dtype)
         vr = jnp.repeat(vc.astype(pv.dtype), rep, axis=2)
         acc_new = acc * corr[..., None] + jnp.einsum(
             "bhqc,bchd->bhqd", pv, vr, preferred_element_type=jnp.float32)
@@ -279,7 +238,7 @@ def _chunked_attention(q, k, v, mask_fn, chunk: int, scale: float,
     return out.transpose(0, 2, 1, 3)  # (B, Sq, H, hd)
 
 
-def _local_block_attention(q, k, v, window: int, scale: float):
+def _local_block_attention(q, k, v, window: int, scale: float, probs_dtype):
     """Sliding-window attention in q-blocks: each W-token block attends only
     its own and the previous KV block (2W keys instead of S), cutting local
     layers' score FLOPs/bytes by S/(2W) vs the masked-full path.
@@ -306,45 +265,22 @@ def _local_block_attention(q, k, v, window: int, scale: float):
     blk0 = base & (kpos >= 0)
     mask = jnp.where((jnp.arange(nb) == 0)[:, None, None], blk0[None], base[None])
     s = jnp.where(mask[None, :, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1).astype(_PROBS_DTYPE[0])
+    p = jax.nn.softmax(s, axis=-1).astype(probs_dtype)
     o = jnp.einsum("bnhwc,bnchd->bnwhd", p, vcat.astype(p.dtype),
                    preferred_element_type=jnp.float32)
     return o.reshape(B, S, H, hd)
 
 
-_FUSED_FALLBACK_WARNED: set = set()
-
-
-def _resolve_fused(exec_cfg: ExecConfig) -> ExecConfig:
-    """Degrade ``fused_attention=True`` to the staged path when the fused
-    kernel can't serve this config (e.g. ``matmul_fidelity="acam"``),
-    warning once per distinct reason instead of crashing mid-generation —
-    the layer-level flag is a performance preference, unlike the hard
-    ``fused=True`` request on `core.attention.raceit_attention`.
-    """
-    if exec_cfg.mode != "raceit" or not exec_cfg.fused_attention:
-        return exec_cfg
-    reason = fused_attention_supported(fidelity=exec_cfg.matmul_fidelity,
-                                       softmax_mode=exec_cfg.softmax_mode)
-    if reason is None:
-        return exec_cfg
-    if reason not in _FUSED_FALLBACK_WARNED:
-        _FUSED_FALLBACK_WARNED.add(reason)
-        warnings.warn(f"fused_attention=True requested but unsupported: "
-                      f"{reason}; falling back to the staged attention path",
-                      RuntimeWarning, stacklevel=2)
-    return dataclasses.replace(exec_cfg, fused_attention=False)
-
-
-def _raceit_fused_decode(q, k, v, kv_len, scale, exec_cfg: ExecConfig):
+def _raceit_fused_decode(q, k, v, kv_len, scale, plan: ExecPlan):
     """Decode-step (Sq=1) attention on the fused streaming kernel.
 
     q: (B, 1, H, hd) flat heads; k/v: (B, Smax, KV, hd) — the fixed-shape
     cache buffers, of which only the first ``kv_len`` rows are valid. The
     kernel masks the invalid tail out of the softmax, the global PROB max,
-    and matmul-2, and the k/v quantizer scales are reduced over the valid
-    prefix only, so the result is bit-exact vs the staged oracle on the
-    cache slice. Returns (B, 1, H, hd).
+    and matmul-2 (fully-invalid key blocks are skipped outright via
+    scalar-prefetched grid bounds), and the k/v quantizer scales are
+    reduced over the valid prefix only, so the result is bit-exact vs the
+    staged oracle on the cache slice. Returns (B, 1, H, hd).
 
     GQA heads are repeated to H *after* quantization, as int8 codes: the
     repeated tensor has the same max-abs as the original, so the scales are
@@ -368,57 +304,75 @@ def _raceit_fused_decode(q, k, v, kv_len, scale, exec_cfg: ExecConfig):
     out32, cmax = acam_attention_decode_codes(
         qq.codes.transpose(0, 2, 1, 3).reshape(b * h, sq, hd),
         fold(k_codes), fold(v_codes), qq.scale * k_scale,
-        jnp.asarray(kv_len, jnp.int32), mode=exec_cfg.softmax_mode)
+        jnp.asarray(kv_len, jnp.int32), mode=plan.exec_cfg.softmax_mode)
     out = out32.astype(jnp.float32) * (prob_requant_scale(cmax) * v_scale)
     return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
 
 
-def _raceit_full_attention(q, k, v, mask, scale, exec_cfg: ExecConfig,
-                           causal_offset=None):
-    """Analog-faithful attention (quantized matmuls + ACAM softmax).
-
-    q: (B, Sq, H, hd) flat heads; k/v: (B, Sk, KV, hd). With
-    ``exec_cfg.fused_attention`` the whole pipeline runs in the streaming
-    Pallas kernel (one VMEM pass per tile, no (Sq, Sk) intermediates);
-    otherwise the staged XLA pipeline below is the bit-accurate oracle.
-    ``causal_offset`` (fused only) replaces the mask array with the kernel's
-    in-kernel causal mask, so not even a mask of score shape is ever built.
-    """
+def _attn_quantize(q, k, v, scale):
+    """Shared Fig.-12 prolog: repeat KV heads to H, quantize to int8 codes."""
     rep = q.shape[2] // k.shape[2]
     kf = jnp.repeat(k, rep, axis=2)
     vf = jnp.repeat(v, rep, axis=2)
     qq = quantize_tensor(q.astype(jnp.float32) * scale, bits=8)
     kq = quantize_tensor(kf.astype(jnp.float32), bits=8)
     vq = quantize_tensor(vf.astype(jnp.float32), bits=8)
-    if exec_cfg.fused_attention:
-        from repro.kernels.ops import acam_attention_codes, prob_requant_scale
-        b, sq, h, hd = q.shape
-        sk = k.shape[1]
-        if causal_offset is None:
-            mb = jnp.broadcast_to(mask[:, None],
-                                  (b, h, sq, sk)).reshape(b * h, sq, sk)
-        else:
-            mb = None
-        out32, cmax = acam_attention_codes(
-            qq.codes.transpose(0, 2, 1, 3).reshape(b * h, sq, hd),
-            kq.codes.transpose(0, 2, 1, 3).reshape(b * h, sk, hd),
-            vq.codes.transpose(0, 2, 1, 3).reshape(b * h, sk, hd),
-            qq.scale * kq.scale, mb,
-            q_offset=causal_offset if causal_offset is not None else 0,
-            causal=causal_offset is not None,
-            mode=exec_cfg.softmax_mode)
-        out = out32.astype(jnp.float32) * (prob_requant_scale(cmax) * vq.scale)
-        return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
-    s32 = jnp.einsum("bqhd,bchd->bhqc", qq.codes.astype(jnp.int32),
-                     kq.codes.astype(jnp.int32))
+    return qq, kq, vq
+
+
+def _raceit_staged_attention(q, k, v, mask, scale, plan: ExecPlan):
+    """Analog-faithful attention, stage by stage (the bit-accurate oracle
+    formulation): quantized matmul-1, div-add mask, ACAM softmax, PROB
+    re-quantization, matmul-2. The data-dependent matmuls go through the
+    plan's ``dd_matmul`` slot, so ``matmul_fidelity="acam"`` routes them
+    through the compiled 4-bit nibble tables (bit-identical to the integer
+    matmul, per tests/test_core_acam.py).
+
+    q: (B, Sq, H, hd) flat heads; k/v: (B, Sk, KV, hd); mask (B, Sq, Sk).
+    """
+    from repro.core.ops import LOGIT_FMT
+    from repro.core.softmax import acam_softmax
+    qq, kq, vq = _attn_quantize(q, k, v, scale)
+    s32 = plan.dd_matmul(qq.codes.transpose(0, 2, 1, 3),      # (B,H,Sq,hd)
+                         kq.codes.transpose(0, 2, 3, 1))      # (B,H,hd,Sk)
     logits = s32.astype(jnp.float32) * (qq.scale * kq.scale)
     logits = jnp.where(mask[:, None], logits, LOGIT_FMT.min_value)
-    probs = acam_softmax(logits, axis=-1, mode=exec_cfg.softmax_mode)
+    probs = acam_softmax(logits, axis=-1, mode=plan.exec_cfg.softmax_mode)
     pq = quantize_tensor(probs, bits=8)
-    o32 = jnp.einsum("bhqc,bchd->bhqd", pq.codes.astype(jnp.int32),
-                     vq.codes.astype(jnp.int32))
+    o32 = plan.dd_matmul(pq.codes,                            # (B,H,Sq,Sk)
+                         vq.codes.transpose(0, 2, 1, 3))      # (B,H,Sk,hd)
     out = o32.astype(jnp.float32) * (pq.scale * vq.scale)
     return out.transpose(0, 2, 1, 3)  # (B, Sq, H, hd)
+
+
+def _raceit_fused_attention(q, k, v, mask, scale, plan: ExecPlan,
+                            causal_offset=None):
+    """Analog-faithful attention on the streaming Pallas kernel: the whole
+    Fig.-12 pipeline per VMEM tile, no (Sq, Sk) intermediates.
+
+    ``causal_offset`` replaces the mask array with the kernel's in-kernel
+    causal mask, so not even a mask of score shape is ever built; otherwise
+    ``mask`` is (B, Sq, Sk) and broadcast over heads.
+    """
+    from repro.kernels.ops import acam_attention_codes, prob_requant_scale
+    qq, kq, vq = _attn_quantize(q, k, v, scale)
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    if causal_offset is None:
+        mb = jnp.broadcast_to(mask[:, None],
+                              (b, h, sq, sk)).reshape(b * h, sq, sk)
+    else:
+        mb = None
+    out32, cmax = acam_attention_codes(
+        qq.codes.transpose(0, 2, 1, 3).reshape(b * h, sq, hd),
+        kq.codes.transpose(0, 2, 1, 3).reshape(b * h, sk, hd),
+        vq.codes.transpose(0, 2, 1, 3).reshape(b * h, sk, hd),
+        qq.scale * kq.scale, mb,
+        q_offset=causal_offset if causal_offset is not None else 0,
+        causal=causal_offset is not None,
+        mode=plan.exec_cfg.softmax_mode)
+    out = out32.astype(jnp.float32) * (prob_requant_scale(cmax) * vq.scale)
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
 
 
 def attention(
@@ -426,7 +380,7 @@ def attention(
     x: jax.Array,
     *,
     cfg: ModelConfig,
-    exec_cfg: ExecConfig,
+    plan: ExecPlan | ExecConfig,
     positions: jax.Array,
     local: bool = False,
     cache: Optional[Params] = None,
@@ -438,21 +392,28 @@ def attention(
     cache = {"k": (B, Smax, KV, hd), "v": ..., "idx": int32 scalar}.
     prefill: x covers [0, S); decode: x is a single new token (Sq=1).
 
-    With ``exec_cfg.mode == "raceit"`` and ``exec_cfg.fused_attention``, both
-    the prefill path and the Sq=1 decode path run the streaming Pallas kernel
-    (`repro.kernels.acam_attention`) — decode attends the cache's valid
-    prefix via a traced ``kv_len`` scalar, with no mask array and no staged
-    fallback left in the serving hot loop. Configs the kernel can't serve
-    degrade to the staged path with a one-time warning (`_resolve_fused`).
+    Dispatch goes through the resolved plan: prefill (and full/cross
+    attention) through ``plan.attention_prefill``, the Sq=1 cache step
+    through ``plan.attention_decode`` — the backend (digital chunked,
+    staged Fig.-12, or the streaming Pallas kernel) was chosen once at
+    `repro.exec.resolve_plan` time, with unsupported combos degraded and
+    the reasons recorded on the plan. ``plan`` also accepts a raw
+    ExecConfig and resolves it against ``cfg`` (cached).
+
+    The mask *kind* is computed here from the call-site ``cfg`` (encoder
+    sub-stacks pass a replaced config), then the backend builds whatever
+    mask representation it needs — a mask_fn for the chunked float path, a
+    (B, Sq, Sk) array for the staged pipeline, or no mask at all for the
+    fused kernel's in-kernel causal path.
     """
-    exec_cfg = _resolve_fused(exec_cfg)
+    plan = as_plan(cfg, plan)
     b, sq, _ = x.shape
     hd = cfg.resolved_head_dim
-    q = _linear(x, p["wq"], exec_cfg, p.get("bq"))
+    q = _linear(x, p["wq"], plan, p.get("bq"))
     q = constraint(q, "batch", None, "heads", None)
     if cross_kv is None:
-        k = _linear(x, p["wk"], exec_cfg, p.get("bk"))
-        v = _linear(x, p["wv"], exec_cfg, p.get("bv"))
+        k = _linear(x, p["wk"], plan, p.get("bk"))
+        v = _linear(x, p["wv"], plan, p.get("bv"))
         if cfg.pos_emb in ("rope", "mrope"):
             q = apply_rope(q, positions, cfg)
             k = apply_rope(k, positions, cfg)
@@ -480,62 +441,26 @@ def attention(
             k, v = ck, cv
 
     scale = 1.0 / math.sqrt(hd)
-    qg = _split_gqa(q, cfg.n_kv_heads)  # (B, Sq, KV, G, hd)
 
     if sq == 1 and cache is not None:
         # decode: single query against the cache, masked by validity/window.
         # (ring buffers: every written slot is inside the window by design,
         # so validity is always a prefix of length min(idx, buffer_len))
         kv_len = jnp.minimum(new_cache["idx"], k.shape[1])
-        if exec_cfg.mode == "raceit" and exec_cfg.fused_attention:
-            # fused decode: the kernel streams the cache's valid prefix —
-            # full quantized Fig.-12 numerics, same as the fused prefill path
-            o = _raceit_fused_decode(q, k, v, kv_len, scale, exec_cfg)
-        else:
-            valid = jnp.arange(k.shape[1]) < kv_len
-            s = jnp.einsum("bqkgd,bckd->bkgqc", qg.astype(jnp.float32) * scale,
-                           k.astype(jnp.float32))
-            if exec_cfg.mode == "raceit":
-                s = jnp.where(valid[None, None, None, None], s,
-                              LOGIT_FMT.min_value)
-                pr = acam_softmax(s, axis=-1, mode=exec_cfg.softmax_mode)
-            else:
-                s = jnp.where(valid[None, None, None, None], s, NEG_INF)
-                pr = jax.nn.softmax(s, axis=-1)
-            o = jnp.einsum("bkgqc,bckd->bkgqd", pr, v.astype(jnp.float32))
-            o = o.transpose(0, 3, 1, 2, 4)
+        o = plan.attention_decode(q, k, v, kv_len=kv_len, scale=scale)
     else:
         q_off = cache["idx"] if cache is not None else 0
         if cross_kv is not None:
-            mask_fn = lambda qi, ki: jnp.ones((), bool)  # full cross attention
+            kind = "cross"       # full cross attention
         elif not cfg.causal:
-            mask_fn = lambda qi, ki: ki < k.shape[1] + 0 * qi  # bidirectional
+            kind = "bidir"       # bidirectional (encoder-only)
         elif local:
-            mask_fn = lambda qi, ki: (ki <= qi + q_off) & (ki > qi + q_off - cfg.window)
+            kind = "local"       # causal sliding window
         else:
-            mask_fn = lambda qi, ki: ki <= qi + q_off
-        if exec_cfg.mode == "raceit" and k.shape[1] <= 4096:
-            if (exec_cfg.fused_attention and cross_kv is None and cfg.causal
-                    and not local):
-                # plain causal: the fused kernel masks from block indices, so
-                # no score-shaped mask array is materialized either
-                o = _raceit_full_attention(q, k, v, None, scale, exec_cfg,
-                                           causal_offset=q_off)
-            else:
-                msk = mask_fn(jnp.arange(sq)[:, None],
-                              jnp.arange(k.shape[1])[None, :])
-                o = _raceit_full_attention(
-                    q, k, v, jnp.broadcast_to(msk, (b,) + msk.shape),
-                    scale, exec_cfg)
-        elif (local and cross_kv is None and cfg.causal
-              and sq == k.shape[1] and sq % cfg.window == 0
-              and sq > cfg.window):  # train & single-shot prefill paths
-            # sliding-window layers: q-blocked 2W-key attention instead of
-            # the masked-full path (S/(2W)x fewer score FLOPs/bytes)
-            o = _local_block_attention(q, k, v, cfg.window, scale)
-        else:
-            ch = min(chunk, k.shape[1])
-            o = _chunked_attention(q, k, v, mask_fn, ch, scale, exec_cfg)
+            kind = "causal"
+        o = plan.attention_prefill(q, k, v, scale=scale, q_offset=q_off,
+                                   kind=kind, window=cfg.window, chunk=chunk,
+                                   probs_dtype=_probs_dtype(cfg))
 
     wq = p["wq"]
     heff = wq.shape[0] if isinstance(wq, QuantizedWeight) else wq.shape[1]
@@ -544,7 +469,7 @@ def attention(
         o = o * (jnp.arange(heff) < cfg.n_heads)[None, None, :, None].astype(o.dtype)
     wo = p["wo"]
     if isinstance(wo, QuantizedWeight):  # codes already (H*hd, D)
-        out = _linear(o.reshape(b, sq, heff * hd), wo, exec_cfg)
+        out = _linear(o.reshape(b, sq, heff * hd), wo, plan)
     else:
         out = jnp.einsum("bshd,hdm->bsm", o, wo.astype(x.dtype))
     return out, new_cache
@@ -563,13 +488,15 @@ def init_ffn(key, cfg: ModelConfig, dtype) -> Params:
     return p
 
 
-def ffn(p: Params, x: jax.Array, cfg: ModelConfig, exec_cfg: ExecConfig) -> jax.Array:
-    h = _linear(x, p["w1"], exec_cfg)
-    h = _activation(h, cfg, exec_cfg)
+def ffn(p: Params, x: jax.Array, cfg: ModelConfig,
+        plan: ExecPlan | ExecConfig) -> jax.Array:
+    plan = as_plan(cfg, plan)
+    h = _linear(x, p["w1"], plan)
+    h = plan.activation(h, cfg.activation)
     if cfg.glu:
-        h = h * _linear(x, p["w3"], exec_cfg)
+        h = h * _linear(x, p["w3"], plan)
     h = constraint(h, "batch", None, "mlp")
-    return _linear(h, p["w2"], exec_cfg)
+    return _linear(h, p["w2"], plan)
 
 
 # --------------------------------------------------------------------------
@@ -603,11 +530,16 @@ def embed(p: Params, tokens: jax.Array, positions: jax.Array, cfg: ModelConfig) 
     return constraint(x, "batch", None, None)
 
 
-def unembed(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+def unembed(p: Params, x: jax.Array, cfg: ModelConfig,
+            plan: ExecPlan | ExecConfig) -> jax.Array:
+    """Logits through the plan's ``lm_head`` slot.
+
+    Resident int8 unembeddings (`QuantizedWeight`, the raceit_q8 serving
+    form) take the quantized path *with the plan's act_bits* — previously
+    this spot rebuilt a bare ``ExecConfig(mode="raceit")`` and silently
+    dropped the caller's bit-width knobs.
+    """
+    plan = as_plan(cfg, plan)
     w = p["tok_emb"].T if cfg.tie_embeddings else p["unembed"]
-    if isinstance(w, QuantizedWeight):  # resident int8 unembedding
-        logits = _linear(x, w, ExecConfig(mode="raceit")).astype(jnp.float32)
-    else:
-        logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
-                            w.astype(jnp.float32))
+    logits = plan.lm_head(x, w)
     return constraint(logits, "batch", None, "vocab")

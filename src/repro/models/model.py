@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ExecConfig, ModelConfig
 from repro.dist.sharding import MeshContext, constraint
+from repro.exec.plan import ExecPlan, as_plan
 
 from . import blocks, layers
 
@@ -87,12 +88,15 @@ def _dtype(name: str):
 
 
 class Model:
-    def __init__(self, cfg: ModelConfig, exec_cfg: ExecConfig = ExecConfig(),
+    def __init__(self, cfg: ModelConfig,
+                 exec_cfg: "ExecConfig | ExecPlan" = ExecConfig(),
                  mesh_ctx: Optional[MeshContext] = None):
         self.cfg = cfg
-        self.exec_cfg = exec_cfg
+        # resolve the operator dispatch table once: every layer call below
+        # goes through self.plan's slot methods, never through mode branches
+        self.plan = as_plan(cfg, exec_cfg)
+        self.exec_cfg = self.plan.exec_cfg
         self.mesh_ctx = mesh_ctx
-        layers.set_perf_knobs(cfg)
 
     # ------------------------------------------------------------------ init
     def init(self, rng) -> Params:
@@ -124,7 +128,7 @@ class Model:
         pos = self._positions(enc_feats[..., 0])
         x = enc_feats.astype(_dtype(self.cfg.compute_dtype))
         x, _ = blocks.apply_stack(params["encoder"], x, cfg=enc_cfg,
-                                  exec_cfg=self.exec_cfg, positions=pos,
+                                  plan=self.plan, positions=pos,
                                   caches=None, mesh_ctx=self.mesh_ctx,
                                   n_layers=self.cfg.n_encoder_layers)
         return layers.apply_norm(params["enc_norm"], x, self.cfg)
@@ -134,8 +138,8 @@ class Model:
         kvs = []
         for t in range(self.cfg.n_layers):
             lp = self._decoder_layer_params(params, t)["cross"]
-            k = layers._linear(enc_out, lp["wk"], self.exec_cfg, lp.get("bk"))
-            v = layers._linear(enc_out, lp["wv"], self.exec_cfg, lp.get("bv"))
+            k = layers._linear(enc_out, lp["wk"], self.plan, lp.get("bk"))
+            v = layers._linear(enc_out, lp["wv"], self.plan, lp.get("bv"))
             kvs.append((k, v))
         return kvs
 
@@ -167,7 +171,7 @@ class Model:
                 mixer, ffn_kind = cfg.layer_spec(t)
                 cache_t = dec_caches[t] if dec_caches is not None else None
                 x, nc = blocks.apply_layer(
-                    lp, x, cfg=cfg, exec_cfg=self.exec_cfg, mixer=mixer,
+                    lp, x, cfg=cfg, plan=self.plan, mixer=mixer,
                     ffn_kind=ffn_kind, positions=positions,
                     cache=cache_t if cache_t else None, mesh_ctx=self.mesh_ctx,
                     enc_kv=enc_kv[t])
@@ -176,7 +180,7 @@ class Model:
                           if caches is not None else None)
         else:
             x, new_caches = blocks.apply_stack(
-                params["blocks"], x, cfg=cfg, exec_cfg=self.exec_cfg,
+                params["blocks"], x, cfg=cfg, plan=self.plan,
                 positions=positions, caches=caches, mesh_ctx=self.mesh_ctx,
                 use_remat=use_remat)
 
@@ -191,7 +195,7 @@ class Model:
             positions = self._positions(tokens)
         x, _ = self._trunk(params, tokens, positions, None,
                            batch.get("enc_feats"), use_remat)
-        return layers.unembed(params["embed"], x, self.cfg)
+        return layers.unembed(params["embed"], x, self.cfg, self.plan)
 
     def init_cache(self, batch: int, max_len: int, dtype=None) -> Params:
         cfg = self.cfg
@@ -218,21 +222,22 @@ class Model:
                 (k.astype(c[0].dtype), v.astype(c[1].dtype))
                 for (k, v), c in zip(self._enc_kv(params, enc_out), cache["enc_kv"])])
         x, new_cache = self._trunk(params, tokens, positions, cache, None, False)
-        logits = layers.unembed(params["embed"], x[:, -1:], self.cfg)
+        logits = layers.unembed(params["embed"], x[:, -1:], self.cfg, self.plan)
         return logits, new_cache
 
     def decode_step(self, params: Params, token: jax.Array, cache: Params):
         """token: (B, 1). Returns (logits (B,1,V), cache).
 
-        With ``ExecConfig(mode="raceit", fused_attention=True)`` every
-        attention layer's decode step runs the fused streaming kernel over
-        the cache's valid prefix (`layers._raceit_fused_decode`) — the
-        serving hot loop has no staged-pipeline fallback left.
+        Each attention layer's decode step runs whatever backend the plan
+        resolved for the ``attention_decode`` slot — the serving default
+        (`ExecConfig.serving()`) is ``raceit_fused``, the streaming kernel
+        over the cache's valid prefix (`layers._raceit_fused_decode`);
+        ``plan.explain()`` names the backend and any degrade reason.
         """
         idx = self._cache_index(cache)
         positions = jnp.broadcast_to(idx, token.shape).astype(jnp.int32)
         x, new_cache = self._trunk(params, token, positions, cache, None, False)
-        logits = layers.unembed(params["embed"], x, self.cfg)
+        logits = layers.unembed(params["embed"], x, self.cfg, self.plan)
         return logits, new_cache
 
     def _cache_index(self, cache: Params):

@@ -25,8 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ExecConfig, ModelConfig
-from repro.core.softmax import acam_softmax
 from repro.dist.sharding import MeshContext, shard_map
+from repro.exec.plan import ExecPlan, as_plan
 from jax.sharding import PartitionSpec as P
 
 from . import layers
@@ -47,7 +47,7 @@ def init_moe(key, cfg: ModelConfig, dtype) -> Params:
     return p
 
 
-def _moe_local(p, x, cfg: ModelConfig, exec_cfg: ExecConfig, axis: Optional[str],
+def _moe_local(p, x, cfg: ModelConfig, plan: ExecPlan, axis: Optional[str],
                tp_size: int):
     """Per-shard MoE body. x: (B_l, S, D). axis: model axis name (or None)."""
     Bl, S, D = x.shape
@@ -56,10 +56,10 @@ def _moe_local(p, x, cfg: ModelConfig, exec_cfg: ExecConfig, axis: Optional[str]
     xf = x.reshape(T, D)
 
     logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
-    if exec_cfg.mode == "raceit":
-        probs = acam_softmax(logits, axis=-1, mode=exec_cfg.softmax_mode)
-    else:
-        probs = jax.nn.softmax(logits, axis=-1)
+    # the router softmax goes through the plan's softmax slot — the ACAM
+    # dataflow in raceit mode, the paper's reconfigurability claim applied
+    # to a post-paper layer type
+    probs = plan.softmax(logits, axis=-1)
     gate, expert = jax.lax.top_k(probs, K)  # (T, K)
     gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
 
@@ -85,7 +85,7 @@ def _moe_local(p, x, cfg: ModelConfig, exec_cfg: ExecConfig, axis: Optional[str]
     w1, w2 = p["w1"], p["w2"]
     h = jnp.einsum("ecd,edf->ecf", disp, w1.astype(disp.dtype),
                    preferred_element_type=jnp.float32).astype(disp.dtype)
-    h = layers._activation(h, cfg, exec_cfg)
+    h = plan.activation(h, cfg.activation)
     if "w3" in p:
         h = h * jnp.einsum("ecd,edf->ecf", disp, p["w3"].astype(disp.dtype),
                            preferred_element_type=jnp.float32).astype(disp.dtype)
@@ -105,11 +105,13 @@ def _moe_local(p, x, cfg: ModelConfig, exec_cfg: ExecConfig, axis: Optional[str]
     return y.reshape(Bl, S, D)
 
 
-def moe(p: Params, x: jax.Array, cfg: ModelConfig, exec_cfg: ExecConfig,
+def moe(p: Params, x: jax.Array, cfg: ModelConfig,
+        plan: "ExecPlan | ExecConfig",
         mesh_ctx: Optional[MeshContext]) -> jax.Array:
     """Dispatching wrapper: shard_map over the mesh, or plain local call."""
+    plan = as_plan(cfg, plan)
     if mesh_ctx is None or mesh_ctx.mesh is None:
-        return _moe_local(p, x, cfg, exec_cfg, axis=None, tp_size=1)
+        return _moe_local(p, x, cfg, plan, axis=None, tp_size=1)
 
     mesh = mesh_ctx.mesh
     model = mesh_ctx.model_axis if mesh_ctx.model_size > 1 else None
@@ -133,7 +135,7 @@ def moe(p: Params, x: jax.Array, cfg: ModelConfig, exec_cfg: ExecConfig,
         if "w3" in p:
             w_specs["w3"] = P(None, None, model)
 
-    fn = partial(_moe_local, cfg=cfg, exec_cfg=exec_cfg, axis=model,
+    fn = partial(_moe_local, cfg=cfg, plan=plan, axis=model,
                  tp_size=mesh_ctx.model_size)
     return shard_map(
         fn, mesh=mesh, in_specs=(w_specs, x_spec), out_specs=x_spec,

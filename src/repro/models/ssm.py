@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ExecConfig, ModelConfig
 from repro.dist.sharding import constraint, current_policy
+from repro.exec.plan import ExecPlan, as_plan
 
 from . import layers
 
@@ -135,17 +136,23 @@ def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
     return y.astype(xh.dtype), s_final
 
 
-def mamba(p: Params, x: jax.Array, *, cfg: ModelConfig, exec_cfg: ExecConfig,
+def mamba(p: Params, x: jax.Array, *, cfg: ModelConfig,
+          plan: "ExecPlan | ExecConfig",
           cache: Optional[Params] = None) -> tuple[jax.Array, Optional[Params]]:
-    """Mamba-2 mixer. cache = {"state","conv_x","conv_B","conv_C"} for decode."""
+    """Mamba-2 mixer. cache = {"state","conv_x","conv_B","conv_C"} for decode.
+
+    Projections dispatch through the plan's matmul slot (int8 crossbar
+    matmuls in raceit mode); the SSD scan itself stays float.
+    """
+    plan = as_plan(cfg, plan)
     Bsz, S, _ = x.shape
     H, Pd, N, G = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_groups
 
-    z = layers._linear(x, p["w_z"], exec_cfg)
-    xs = layers._linear(x, p["w_x"], exec_cfg)
-    Bv = layers._linear(x, p["w_B"], exec_cfg)
-    Cv = layers._linear(x, p["w_C"], exec_cfg)
-    dt_raw = layers._linear(x, p["w_dt"], exec_cfg).astype(jnp.float32)
+    z = layers._linear(x, p["w_z"], plan)
+    xs = layers._linear(x, p["w_x"], plan)
+    Bv = layers._linear(x, p["w_B"], plan)
+    Cv = layers._linear(x, p["w_C"], plan)
+    dt_raw = layers._linear(x, p["w_dt"], plan).astype(jnp.float32)
 
     xs, cs_x = _causal_conv_simple(xs, p["conv_x"], cache["conv_x"] if cache else None)
     Bv, cs_B = _causal_conv_simple(Bv, p["conv_B"], cache["conv_B"] if cache else None)
@@ -183,7 +190,7 @@ def mamba(p: Params, x: jax.Array, *, cfg: ModelConfig, exec_cfg: ExecConfig,
     g = g * jax.lax.rsqrt(jnp.mean(g * g, -1, keepdims=True) + 1e-6)
     y = (g * p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
 
-    out = layers._linear(y, p["out_proj"], exec_cfg)
+    out = layers._linear(y, p["out_proj"], plan)
     new_cache = None
     if cache is not None:
         new_cache = {"state": state.astype(cache["state"].dtype),

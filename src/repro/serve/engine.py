@@ -2,20 +2,22 @@
 
 `GenerationEngine` serves one batch bucket end-to-end (prefill then greedy /
 temperature sampling decode); `serve/batching.py` schedules request queues
-onto buckets. Supports both execution modes — `raceit` runs the paper's
-quantized path (int8 crossbar matmuls, ACAM softmax with PoT).
+onto buckets. Operator dispatch goes through the engine's resolved
+`repro.exec.ExecPlan` (``engine.plan``, also ``engine.explain_plan()``) —
+the engine itself contains no execution-mode branches.
 
-Fused attention dispatch (``ExecConfig.fused_attention``, the serving
-default via ``ExecConfig.serving()``): *both* the jitted prefill and the
-jitted per-token ``_decode`` step route raceit attention through the fused
-streaming Pallas kernel (one VMEM pass over the Fig.-12 pipeline, no
+With the serving default (``ExecConfig.serving()``), the plan resolves the
+``attention_prefill`` and ``attention_decode`` slots to ``raceit_fused``:
+both the jitted prefill and the jitted per-token ``_decode`` step run the
+fused streaming Pallas kernel (one VMEM pass over the Fig.-12 pipeline, no
 (Sq, Sk) intermediates in HBM). The decode step attends the KV cache's
 valid prefix via a traced ``kv_len`` scalar — fixed buffer shapes, so the
-decode executable compiles once and is reused for every token. Every
+decode executable compiles once and is reused for every token; fully
+invalid key blocks are skipped via scalar-prefetched grid bounds. Every
 ``softmax_mode`` ("pot", "pot_fine", "uniform") is covered; configs the
-kernel can't serve (``matmul_fidelity="acam"``) fall back to the staged
-XLA pipeline with a one-time RuntimeWarning instead of raising — see
-`repro.core.attention.fused_attention_supported` for the exact rules.
+kernel can't serve (``matmul_fidelity="acam"``) resolve to
+``raceit_staged`` with the reason recorded on the plan (and a one-time
+RuntimeWarning) — `repro.exec.resolve_plan` has the exact rules.
 """
 from __future__ import annotations
 
@@ -44,6 +46,7 @@ class GenerationEngine:
 
     def __post_init__(self):
         self.model = Model(self.cfg, self.exec_cfg, self.mesh_ctx)
+        self.plan = self.model.plan  # resolved operator dispatch table
         # one jitted prefill serves both paths: encoder-decoder models pass
         # enc_feats as an extra traced arg (re-jitting per generate() call
         # recompiled the whole prefill graph every request).
@@ -72,6 +75,10 @@ class GenerationEngine:
             tok = self._sample(logits[:, -1], sub)
             out.append(tok)
         return np.stack([np.asarray(t) for t in out], axis=1)
+
+    def explain_plan(self) -> str:
+        """The resolved slot -> backend table this engine serves with."""
+        return self.plan.explain()
 
     def _sample(self, logits: jax.Array, rng) -> jax.Array:
         if self.temperature <= 0.0:

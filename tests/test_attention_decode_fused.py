@@ -17,6 +17,7 @@ from repro.configs.base import ExecConfig, ModelConfig
 from repro.core.attention import fused_attention_supported, raceit_attention
 from repro.core.ops import PROB_FMT
 from repro.core.quant import quantize_tensor
+from repro.exec import reset_plan_cache
 from repro.kernels.ops import (masked_prefix_quantize,
                                raceit_attention_decode_fused)
 from repro.models import layers
@@ -115,13 +116,13 @@ def _run_prefill_then_decode(p, cfg, exec_cfg, rng_seed=7, n_decode=3):
     x = jnp.asarray(rng.normal(0, 1, (B, 6, cfg.d_model)), jnp.float32)
     pos = jnp.broadcast_to(jnp.arange(6), (B, 6))
     out, cache = layers.attention(p, x, cfg=cfg, positions=pos,
-                                  exec_cfg=exec_cfg, cache=cache)
+                                  plan=exec_cfg, cache=cache)
     outs = [out]
     for t in range(6, 6 + n_decode):
         xt = jnp.asarray(rng.normal(0, 1, (B, 1, cfg.d_model)), jnp.float32)
         o, cache = layers.attention(p, xt, cfg=cfg,
                                     positions=jnp.full((B, 1), t),
-                                    exec_cfg=exec_cfg, cache=cache)
+                                    plan=exec_cfg, cache=cache)
         outs.append(o)
     return outs
 
@@ -131,7 +132,6 @@ def test_layers_fused_decode_close_to_staged(key):
     decode (float scores + ACAM softmax): different numerics by design, but
     they must agree to quantization noise and stay finite."""
     cfg = _layer_cfg()
-    layers.set_perf_knobs(cfg)
     p = layers.init_attention(key, cfg, jnp.float32)
     staged = _run_prefill_then_decode(p, cfg, ExecConfig(mode="raceit"))
     fused = _run_prefill_then_decode(
@@ -148,11 +148,11 @@ def test_layers_fused_decode_close_to_staged(key):
 def test_layers_fused_fallback_warns_once_and_matches_staged(key):
     """Unsupported combo (matmul_fidelity='acam') degrades to the staged
     path with one RuntimeWarning instead of crashing — and the degraded
-    outputs are exactly the staged outputs."""
+    outputs are exactly the staged outputs. (The warning now fires at plan
+    resolution; reset_plan_cache drops the cache + warned-reason set.)"""
     cfg = _layer_cfg()
-    layers.set_perf_knobs(cfg)
     p = layers.init_attention(key, cfg, jnp.float32)
-    layers._FUSED_FALLBACK_WARNED.clear()
+    reset_plan_cache()
     bad = ExecConfig(mode="raceit", fused_attention=True,
                      matmul_fidelity="acam")
     with warnings.catch_warnings(record=True) as w:

@@ -103,19 +103,20 @@ def test_core_dispatch_flag(rng):
 
 
 def test_layers_fused_exec_config(rng):
-    """Model-layer attention: ExecConfig(fused_attention=True) == staged."""
+    """Model-layer attention: ExecConfig(fused_attention=True) == staged
+    (the plan resolves the attention slots to raceit_fused vs raceit_staged;
+    outputs must be bit-identical)."""
     cfg = ModelConfig(name="t", n_layers=1, d_model=32, n_heads=4,
                       n_kv_heads=2, d_ff=64, vocab_size=64,
                       param_dtype="float32", compute_dtype="float32")
-    layers.set_perf_knobs(cfg)
     p = layers.init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
     x = jnp.asarray(rng.normal(0, 1, (2, 24, 32)), jnp.float32)
     pos = jnp.broadcast_to(jnp.arange(24), (2, 24))
     staged, _ = layers.attention(p, x, cfg=cfg, positions=pos,
-                                 exec_cfg=ExecConfig(mode="raceit"))
+                                 plan=ExecConfig(mode="raceit"))
     fused, _ = layers.attention(
         p, x, cfg=cfg, positions=pos,
-        exec_cfg=ExecConfig(mode="raceit", fused_attention=True))
+        plan=ExecConfig(mode="raceit", fused_attention=True))
     np.testing.assert_array_equal(np.asarray(staged), np.asarray(fused))
 
 
