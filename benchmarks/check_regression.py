@@ -32,7 +32,10 @@ would fail innocent PRs)::
 The bench itself uses interleaved min-of-N to suppress scheduler noise,
 and the 20% normalized gate is deliberately loose. Excuse a knowing trade
 on single rows with ``--allow name ...`` (say so in the PR description),
-or tighten/loosen with ``--threshold``.
+or tighten/loosen with ``--threshold``. ``--expect prefix ...`` adds a
+coverage gate: the current artifact must contain at least one row per
+named prefix (new-kernel families — e.g. the ``decode_gqa`` rows — stay
+tracked instead of silently dropping out of the bench).
 """
 from __future__ import annotations
 
@@ -92,6 +95,11 @@ def main() -> int:
     ap.add_argument("--drift-limit", type=float, default=1.5,
                     help="fail outright when the median ratio exceeds this "
                          "(board-wide slowdowns are not drift)")
+    ap.add_argument("--expect", nargs="*", default=[],
+                    help="row-name prefixes that must be present in the "
+                         "current artifact — a coverage gate so tracked "
+                         "families (e.g. kernel/attention_decode_gqa) can't "
+                         "silently drop out of the bench")
     args = ap.parse_args()
 
     prev = json.loads(Path(args.prev).read_text())
@@ -100,6 +108,10 @@ def main() -> int:
           f"{len(set(prev) & set(cur))} tracked kernels")
     failures = compare(prev, cur, args.threshold, set(args.allow),
                        drift_limit=args.drift_limit)
+    for prefix in args.expect:
+        if not any(name.startswith(prefix) for name in cur):
+            failures.append(f"expected bench row(s) {prefix}* missing from "
+                            f"the current artifact (coverage gate)")
     if failures:
         print("[bench-gate] FAIL:")
         for f in failures:

@@ -143,6 +143,65 @@ def _decode_attention_rows(rng, reps=8):
     return rows
 
 
+def _decode_gqa_rows(rng, reps=8):
+    """GQA-native decode vs the flat fused kernel on the repeated cache.
+
+    The flat entry folds batch x *query* heads, so a GQA serving stack must
+    repeat the KV cache codes to H before the kernel — rep x the cache
+    bytes. The GQA-native entry keeps the cache in its (B, KV, Smax, D)
+    layout and rides the rep sharing queries on one tile, so each KV tile
+    is fetched once per head group. Bytes-moved (the KV-cache int8 traffic
+    per call, k+v) is reported next to the timing — the ratio is exactly
+    rep, and it is the quantity that scales with serving load; outputs are
+    bit-identical (tests/test_attention_gqa.py).
+
+    ``rep_1`` guards the degenerate end: at H == KV the two entries are
+    the same dataflow, so the GQA row must match the flat row to noise
+    (no regression from the grouping machinery itself).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import (raceit_attention_decode_fused,
+                                   raceit_attention_decode_gqa)
+
+    B, H, D, Smax = 1, 8, 64, 2048
+    kv_len = jnp.int32(Smax)
+    rows = []
+    for rep in (1, 4, 8):
+        KV = H // rep
+        q = jnp.asarray(rng.normal(0, 1, (B, H, 1, D)), jnp.float32)
+        kn = jnp.asarray(rng.normal(0, 1, (B, KV, Smax, D)), jnp.float32)
+        vn = jnp.asarray(rng.normal(0, 1, (B, KV, Smax, D)), jnp.float32)
+        kf, vf = (jnp.repeat(a, rep, axis=1) for a in (kn, vn))
+        cands = {
+            "fused": lambda: raceit_attention_decode_fused(q, kf, vf, kv_len),
+            "gqa": lambda: raceit_attention_decode_gqa(q, kn, vn, kv_len),
+        }
+        best = {}
+        for fn in cands.values():
+            fn()  # compile all before interleaved timing
+        for _ in range(reps):
+            for name, fn in cands.items():
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                best[name] = min(best.get(name, float("inf")),
+                                 time.perf_counter() - t0)
+        kv_bytes_native = 2 * B * KV * Smax * D      # int8 k + v per call
+        kv_bytes_flat = 2 * B * H * Smax * D
+        shape = f"{B * H}x1x{Smax}x{D}"
+        rows.append(
+            (f"kernel/attention_decode_gqa_{shape}_rep{rep}",
+             best["gqa"] * 1e6,
+             f"native_kv_{best['fused'] / best['gqa']:.2f}x_vs_fused_"
+             f"kvbytes_{kv_bytes_native}_vs_{kv_bytes_flat}"))
+        if rep > 1:  # the flat-kernel partner row, for auditable speedups
+            rows.append(
+                (f"kernel/attention_decode_fused_{shape}_rep{rep}",
+                 best["fused"] * 1e6, f"repeat_to_H_kvbytes_{kv_bytes_flat}"))
+    return rows
+
+
 def run() -> list[tuple]:
     import jax.numpy as jnp
     import numpy as np
@@ -169,6 +228,7 @@ def run() -> list[tuple]:
 
     rows.extend(_attention_rows(rng))
     rows.extend(_decode_attention_rows(rng))
+    rows.extend(_decode_gqa_rows(rng))
 
     for name, us, derived in rows:
         print(f"  {name}: {us:.0f} us/call ({derived})")

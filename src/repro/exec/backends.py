@@ -162,9 +162,11 @@ def _dd_matmul_acam(plan, a_codes, b_codes):
 # attention_prefill (full / prefill attention)
 # ---------------------------------------------------------------------------
 # Interface: impl(plan, q, k, v, *, scale, q_offset, kind, window, chunk,
-#                 probs_dtype)
+#                 probs_dtype, pad_lens)
 #   q (B, Sq, H, hd) flat heads; k/v (B, Sk, KV, hd); kind in
-#   ("cross", "bidir", "local", "causal").
+#   ("cross", "bidir", "local", "causal"); pad_lens (B,) int32 marks each
+#   row's left-pad key prefix (batched-serving buckets) — those keys are
+#   masked on top of the structural mask.
 #
 # The rule for ModelConfig-derived knobs: anything a sub-stack may *replace*
 # (mask kind, window, probs dtype, activation name) is computed by the call
@@ -184,63 +186,74 @@ def _mask_fn(kind: str, sk: int, q_offset, window: int):
     return lambda qi, ki: ki <= qi + q_offset     # causal
 
 
-def _mask_array(kind, b, sq, sk, q_offset, window):
+def _mask_array(kind, b, sq, sk, q_offset, window, pad_lens=None):
     msk = _mask_fn(kind, sk, q_offset, window)(
         jnp.arange(sq)[:, None], jnp.arange(sk)[None, :])
-    return jnp.broadcast_to(msk, (b, sq, sk))
+    msk = jnp.broadcast_to(msk, (b, sq, sk))
+    if pad_lens is not None:  # left-pad keys do not exist for their row
+        msk = msk & (jnp.arange(sk)[None, None, :] >= pad_lens[:, None, None])
+    return msk
 
 
 @register("attention_prefill", "digital")
 def _prefill_digital(plan, q, k, v, *, scale, q_offset, kind, window, chunk,
-                     probs_dtype=None):
+                     probs_dtype=None, pad_lens=None):
     if probs_dtype is None:
         probs_dtype = layers._probs_dtype(plan.model_cfg)
     sq, sk = q.shape[1], k.shape[1]
-    if (kind == "local" and sq == sk and sq % window == 0 and sq > window):
+    if (kind == "local" and sq == sk and sq % window == 0 and sq > window
+            and pad_lens is None):
         # sliding-window layers, train & single-shot prefill: q-blocked
-        # 2W-key attention instead of the masked-full path
+        # 2W-key attention instead of the masked-full path (the blocked
+        # form has no per-row mask slot, so padded buckets take the
+        # chunked path below)
         return layers._local_block_attention(q, k, v, window, scale,
                                              probs_dtype)
     mask_fn = _mask_fn(kind, sk, q_offset, window)
     return layers._chunked_attention(q, k, v, mask_fn, min(chunk, sk), scale,
-                                     probs_dtype)
+                                     probs_dtype, pad_lens=pad_lens)
 
 
 @register("attention_prefill", "raceit_staged", notes=_SEQ_NOTE)
 def _prefill_raceit_staged(plan, q, k, v, *, scale, q_offset, kind, window,
-                           chunk, probs_dtype=None):
+                           chunk, probs_dtype=None, pad_lens=None):
     sk = k.shape[1]
     if sk > RACEIT_ATTENTION_MAX_KEYS:
         return _prefill_digital(plan, q, k, v, scale=scale, q_offset=q_offset,
                                 kind=kind, window=window, chunk=chunk,
-                                probs_dtype=probs_dtype)
-    mask = _mask_array(kind, q.shape[0], q.shape[1], sk, q_offset, window)
+                                probs_dtype=probs_dtype, pad_lens=pad_lens)
+    mask = _mask_array(kind, q.shape[0], q.shape[1], sk, q_offset, window,
+                       pad_lens)
     return layers._raceit_staged_attention(q, k, v, mask, scale, plan)
 
 
 @register("attention_prefill", "raceit_fused", supported=_fused_supported,
           notes=_SEQ_NOTE)
 def _prefill_raceit_fused(plan, q, k, v, *, scale, q_offset, kind, window,
-                          chunk, probs_dtype=None):
+                          chunk, probs_dtype=None, pad_lens=None):
     sk = k.shape[1]
     if sk > RACEIT_ATTENTION_MAX_KEYS:
         return _prefill_digital(plan, q, k, v, scale=scale, q_offset=q_offset,
                                 kind=kind, window=window, chunk=chunk,
-                                probs_dtype=probs_dtype)
-    if kind == "causal":
+                                probs_dtype=probs_dtype, pad_lens=pad_lens)
+    if kind == "causal" and pad_lens is None:
         # plain causal: the kernel masks from block indices, so not even a
-        # mask of score shape is ever built
+        # mask of score shape is ever built (padded buckets need the
+        # per-row mask array)
         return layers._raceit_fused_attention(q, k, v, None, scale, plan,
                                               causal_offset=q_offset)
-    mask = _mask_array(kind, q.shape[0], q.shape[1], sk, q_offset, window)
+    mask = _mask_array(kind, q.shape[0], q.shape[1], sk, q_offset, window,
+                       pad_lens)
     return layers._raceit_fused_attention(q, k, v, mask, scale, plan)
 
 
 # ---------------------------------------------------------------------------
 # attention_decode (Sq=1 against the KV cache's valid prefix)
 # ---------------------------------------------------------------------------
-# Interface: impl(plan, q, k, v, *, kv_len, scale) -> (B, 1, H, hd)
-#   q (B, 1, H, hd) flat heads; k/v (B, Smax, KV, hd) fixed-shape buffers.
+# Interface: impl(plan, q, k, v, *, kv_len, scale, pad_valid) -> (B, 1, H, hd)
+#   q (B, 1, H, hd) flat heads; k/v (B, Smax, KV, hd) fixed-shape buffers;
+#   pad_valid (B, Smax) bool restricts each row's attendable slots inside
+#   the valid prefix (left-padded batch buckets), None = all attendable.
 
 def _decode_scores(q, k, kv_heads, scale):
     """Float decode scores in grouped-query layout: (B, KV, G, 1, Smax)."""
@@ -255,29 +268,60 @@ def _decode_combine(pr, v):
     return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, kv * g, hd)
 
 
+def _decode_valid(k, kv_len, pad_valid):
+    """(B, Smax) or (1, Smax) key-validity mask for the float decode paths."""
+    valid = (jnp.arange(k.shape[1]) < kv_len)[None, :]
+    if pad_valid is not None:
+        valid = valid & pad_valid
+    return valid
+
+
 @register("attention_decode", "digital")
-def _decode_digital(plan, q, k, v, *, kv_len, scale):
+def _decode_digital(plan, q, k, v, *, kv_len, scale, pad_valid=None):
     s = _decode_scores(q, k, k.shape[2], scale)
-    valid = jnp.arange(k.shape[1]) < kv_len
-    s = jnp.where(valid[None, None, None, None], s, NEG_INF)
+    valid = _decode_valid(k, kv_len, pad_valid)
+    s = jnp.where(valid[:, None, None, None], s, NEG_INF)
     return _decode_combine(jax.nn.softmax(s, axis=-1), v)
 
 
 @register("attention_decode", "raceit_staged",
           notes="float scores + ACAM softmax (the pre-PR2 serving decode)")
-def _decode_raceit_staged(plan, q, k, v, *, kv_len, scale):
+def _decode_raceit_staged(plan, q, k, v, *, kv_len, scale, pad_valid=None):
     s = _decode_scores(q, k, k.shape[2], scale)
-    valid = jnp.arange(k.shape[1]) < kv_len
-    s = jnp.where(valid[None, None, None, None], s, LOGIT_FMT.min_value)
+    valid = _decode_valid(k, kv_len, pad_valid)
+    s = jnp.where(valid[:, None, None, None], s, LOGIT_FMT.min_value)
     pr = acam_softmax(s, axis=-1, mode=plan.exec_cfg.softmax_mode)
     return _decode_combine(pr, v)
 
 
 @register("attention_decode", "raceit_fused", supported=_fused_supported)
-def _decode_raceit_fused(plan, q, k, v, *, kv_len, scale):
+def _decode_raceit_fused(plan, q, k, v, *, kv_len, scale, pad_valid=None):
     # full quantized Fig.-12 numerics over the cache's valid prefix — same
     # contract as the fused prefill path
-    return layers._raceit_fused_decode(q, k, v, kv_len, scale, plan)
+    return layers._raceit_fused_decode(q, k, v, kv_len, scale, plan,
+                                       pad_valid=pad_valid)
+
+
+def _gqa_native_supported(model_cfg, exec_cfg):
+    why = _fused_supported(model_cfg, exec_cfg)
+    if why is not None:
+        return why
+    if model_cfg.n_kv_heads >= model_cfg.n_heads:
+        return (f"n_kv_heads={model_cfg.n_kv_heads} == "
+                f"n_heads={model_cfg.n_heads} (no KV-head sharing to "
+                f"exploit; the flat fused kernel is the same dataflow)")
+    return None
+
+
+@register("attention_decode", "raceit_gqa_native",
+          supported=_gqa_native_supported,
+          notes="native (B*KV) cache layout; the rep queries sharing a KV "
+                "head ride one tile — no cache-code repeat in the hot loop")
+def _decode_raceit_gqa(plan, q, k, v, *, kv_len, scale, pad_valid=None):
+    # bit-identical to raceit_fused, at 1/rep of the KV-cache reads: the
+    # cache codes are never repeated to H (see layers._raceit_gqa_decode)
+    return layers._raceit_gqa_decode(q, k, v, kv_len, scale, plan,
+                                     pad_valid=pad_valid)
 
 
 # ---------------------------------------------------------------------------

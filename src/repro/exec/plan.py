@@ -99,22 +99,29 @@ class ExecPlan:
         return self.op("softmax").spec.impl(self, logits, axis)
 
     def attention_prefill(self, q, k, v, *, scale, q_offset, kind, window,
-                          chunk, probs_dtype=None):
+                          chunk, probs_dtype=None, pad_lens=None):
         """Full/prefill attention. q (B,Sq,H,hd) flat heads; k/v (B,Sk,KV,hd).
 
         ``kind`` in ("cross", "bidir", "local", "causal") names the mask
         structure; it comes from the *call site's* ModelConfig (encoder
         sub-stacks pass a replaced config), as do ``window`` and
-        ``probs_dtype`` (the float paths' p-matrix dtype).
+        ``probs_dtype`` (the float paths' p-matrix dtype). ``pad_lens``
+        (B,) int32 marks per-row left-pad key prefixes that must be masked
+        on top of the structural mask (batched-serving buckets).
         """
         return self.op("attention_prefill").spec.impl(
             self, q, k, v, scale=scale, q_offset=q_offset, kind=kind,
-            window=window, chunk=chunk, probs_dtype=probs_dtype)
+            window=window, chunk=chunk, probs_dtype=probs_dtype,
+            pad_lens=pad_lens)
 
-    def attention_decode(self, q, k, v, *, kv_len, scale):
-        """Sq=1 decode vs a fixed-shape cache valid to ``kv_len``."""
+    def attention_decode(self, q, k, v, *, kv_len, scale, pad_valid=None):
+        """Sq=1 decode vs a fixed-shape cache valid to ``kv_len``.
+
+        ``pad_valid`` (B, Smax) bool further restricts each row's
+        attendable slots inside the prefix (left-padded buckets).
+        """
         return self.op("attention_decode").spec.impl(
-            self, q, k, v, kv_len=kv_len, scale=scale)
+            self, q, k, v, kv_len=kv_len, scale=scale, pad_valid=pad_valid)
 
     def dd_matmul(self, a_codes, b_codes):
         """Data-dependent matmul on int8 codes -> int32."""
@@ -168,6 +175,11 @@ def _default_chain(slot: str, exec_cfg: ExecConfig) -> tuple[str, ...]:
         return _BASELINE[slot]     # which degrade below with a reason)
     fused_first = ("raceit_fused", "raceit_staged", "digital")
     staged_first = ("raceit_staged", "digital")
+    # decode prefers the GQA-native kernel: its capability predicate accepts
+    # only configs with KV-head sharing (n_kv_heads < n_heads), so MHA
+    # configs degrade one step to the flat fused kernel with the reason
+    # recorded — same dataflow there, nothing to warn about
+    gqa_first = ("raceit_gqa_native",) + fused_first
     return {
         "matmul": ("raceit_int",),
         "activation": ("raceit_lut",),
@@ -176,7 +188,7 @@ def _default_chain(slot: str, exec_cfg: ExecConfig) -> tuple[str, ...]:
                       else ("int",)),
         "attention_prefill": (fused_first if exec_cfg.fused_attention
                               else staged_first),
-        "attention_decode": (fused_first if exec_cfg.fused_attention
+        "attention_decode": (gqa_first if exec_cfg.fused_attention
                              else staged_first),
         # the lm head stays full-precision by default even in raceit mode
         # (resident int8 weights still take the quantized path inside the
@@ -254,11 +266,19 @@ def resolve_plan(model_cfg: ModelConfig,
     return plan
 
 
+_FUSED_FAMILY = ("raceit_fused", "raceit_gqa_native")
+
+
 def _warn_fused_degrades(plan: ExecPlan) -> None:
-    """Back-compat one-time warning when fused attention degrades."""
+    """Back-compat one-time warning when fused attention degrades.
+
+    Warns only when a fused-family request landed *outside* the family —
+    the GQA-native -> flat-fused step for MHA configs is a layout choice,
+    not a lost kernel, and stays silent (the plan records the reason).
+    """
     for op in plan.ops:
-        if (op.slot.startswith("attention") and op.requested == "raceit_fused"
-                and op.backend != "raceit_fused" and op.reason
+        if (op.slot.startswith("attention") and op.requested in _FUSED_FAMILY
+                and op.backend not in _FUSED_FAMILY and op.reason
                 and op.reason not in _DEGRADE_WARNED):
             _DEGRADE_WARNED.add(op.reason)
             warnings.warn(

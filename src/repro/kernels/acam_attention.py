@@ -44,7 +44,15 @@ Two entry points share the kernel bodies:
   scalar, ridden in as a scalar-prefetch operand: key blocks fully past
   the fill level are skipped outright (clamped index maps + gated
   compute), and only the partially valid boundary block is masked —
-  instead of slicing the buffer (dynamic shapes) or sweeping it whole.
+  instead of slicing the buffer (dynamic shapes) or sweeping it whole;
+* `acam_attention_decode_gqa_codes` — GQA-native serving decode: k/v stay
+  in their native (B*KV, Smax, hd) cache layout and the ``rep = H/KV``
+  query heads that share a KV head ride the *row* dimension of one tile,
+  so the grid's group dimension iterates B*KV groups (not B*H) and each
+  KV tile is fetched once per head group instead of once per query head —
+  the ``jnp.repeat`` of int8 cache codes disappears from the decode hot
+  loop along with rep x of its cache-read traffic. Same scalar-prefetched
+  ``kv_len`` machinery (clamped index maps + `guard_live` gating).
 
 Both accept every softmax configuration of the staged path: "pot",
 "pot_fine", and the Fig.-14 "uniform" exp-quantization ablation — the LOG
@@ -69,8 +77,9 @@ from repro.core.quant import PoTFormat
 from .runtime import resolve_interpret
 
 __all__ = ["acam_attention_codes", "acam_attention_decode_codes",
-           "softmax_tables", "FUSED_SOFTMAX_MODES", "DEFAULT_BLOCK_Q",
-           "DEFAULT_BLOCK_K", "DEFAULT_BLOCK_G"]
+           "acam_attention_decode_gqa_codes", "softmax_tables",
+           "FUSED_SOFTMAX_MODES", "DEFAULT_BLOCK_Q", "DEFAULT_BLOCK_K",
+           "DEFAULT_BLOCK_G"]
 
 DEFAULT_BLOCK_Q = 256
 DEFAULT_BLOCK_K = 512
@@ -529,6 +538,7 @@ def acam_attention_decode_codes(
     v_codes: jax.Array,   # (G, Smax, D) int8
     logit_scale: jax.Array,          # () f32: s_q * s_k
     kv_len: jax.Array,               # () int32: valid cache prefix, >= 1
+    mask: Optional[jax.Array] = None,  # (G, 1, Smax) bool/int8, 0 => mask out
     mode: str = "pot",
     scale_by_sqrt_d: Optional[int] = None,
     block_k: int = DEFAULT_BLOCK_K,
@@ -549,12 +559,59 @@ def acam_attention_decode_codes(
     fetch — and `guard_live` gates off their compute), while the partially
     valid boundary block is masked.
 
-    No mask array or causal offset is needed: decode causality is precisely
-    "attend the valid prefix", which ``kv_len`` already encodes.
+    No mask array or causal offset is needed for solo serving: decode
+    causality is precisely "attend the valid prefix", which ``kv_len``
+    already encodes. ``mask`` exists for *batched* serving with left-padded
+    buckets: per-group key validity (pad slots masked to the LOGIT minimum,
+    exactly like the staged oracle's additive mask) on top of the prefix
+    rule.
     """
     if q_codes.shape[1] != 1:
         raise ValueError(f"decode path expects Sq=1, got {q_codes.shape[1]}")
     return acam_attention_codes(
-        q_codes, k_codes, v_codes, logit_scale, None, kv_len=kv_len,
+        q_codes, k_codes, v_codes, logit_scale, mask, kv_len=kv_len,
+        mode=mode, scale_by_sqrt_d=scale_by_sqrt_d,
+        block_k=block_k, block_g=block_g, interpret=interpret)
+
+
+def acam_attention_decode_gqa_codes(
+    q_codes: jax.Array,   # (B*KV, rep, D) int8 — the rep queries of a group
+    k_codes: jax.Array,   # (B*KV, Smax, D) int8 — native-layout cache buffer
+    v_codes: jax.Array,   # (B*KV, Smax, D) int8
+    logit_scale: jax.Array,          # () f32: s_q * s_k
+    kv_len: jax.Array,               # () int32: valid cache prefix, >= 1
+    mask: Optional[jax.Array] = None,  # (B*KV, rep, Smax), 0 => mask out
+    mode: str = "pot",
+    scale_by_sqrt_d: Optional[int] = None,
+    block_k: int = DEFAULT_BLOCK_K,
+    block_g: int = DEFAULT_BLOCK_G,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """GQA-native decode: k/v in their (B*KV, Smax, D) cache layout.
+
+    The flat decode entry above folds batch x *query* heads into the group
+    dimension, which forces GQA callers to `jnp.repeat` the KV cache codes
+    to H groups first — rep x the cache bytes the grouped-query layout was
+    designed to avoid. This entry keeps the cache native: the grid's group
+    dimension iterates the B*KV *KV-head* groups, and the ``rep`` query
+    heads that share each KV head ride the row (``bq``) dimension of the
+    tile — the same slot the prefill grid uses for query positions. Decode
+    queries all sit at the same position (causality == "attend the valid
+    prefix", encoded by ``kv_len``), so rows are interchangeable and the
+    kernel bodies, the scalar-prefetched ``kv_len`` skip machinery, and the
+    global-cmax reduction apply unchanged.
+
+    Per key block the tile now loads one k/v tile for ``bg`` *groups*
+    instead of ``bg`` query heads: 1/rep of the grid steps and 1/rep of the
+    KV bytes of the flat entry, with bit-identical (out, cmax) — same
+    logits per (head, key), same per-row PoT sums in the same block order,
+    same integer cmax reduction (order-free), same requant scale.
+    """
+    if k_codes.shape[0] != q_codes.shape[0]:
+        raise ValueError(
+            f"GQA decode expects q and k/v to share the group dim "
+            f"(B*KV): got q {q_codes.shape} vs k {k_codes.shape}")
+    return acam_attention_codes(
+        q_codes, k_codes, v_codes, logit_scale, mask, kv_len=kv_len,
         mode=mode, scale_by_sqrt_d=scale_by_sqrt_d,
         block_k=block_k, block_g=block_g, interpret=interpret)

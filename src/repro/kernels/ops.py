@@ -18,7 +18,8 @@ from repro.core.crossbar import CrossbarConfig
 from repro.core.quant import quantize_tensor
 
 from .acam_attention import (  # noqa: F401
-    FUSED_SOFTMAX_MODES, acam_attention_codes, acam_attention_decode_codes)
+    FUSED_SOFTMAX_MODES, acam_attention_codes, acam_attention_decode_codes,
+    acam_attention_decode_gqa_codes)
 from .acam_lut import acam_lut, acam_lut_2d  # noqa: F401
 from .acam_mvm import acam_mvm  # noqa: F401
 from .acam_softmax import acam_softmax_codes, acam_softmax_kernel  # noqa: F401
@@ -119,6 +120,14 @@ def masked_prefix_quantize(x: jax.Array, kv_len: jax.Array, axis: int = 2):
     return jnp.where(valid, codes, 0), scale
 
 
+def _decode_quantize_operands(q, k, v, kv_len):
+    """Shared decode-wrapper prolog: q whole-tensor int8, k/v valid-prefix
+    int8 (the single point of truth for both the flat and GQA wrappers —
+    their bit-identical contract starts with identical codes and scales)."""
+    return (quantize_tensor(q, bits=8), masked_prefix_quantize(k, kv_len),
+            masked_prefix_quantize(v, kv_len))
+
+
 @partial(jax.jit, static_argnames=("softmax_mode", "fold_scale",
                                    "block_k", "block_g", "interpret"))
 def raceit_attention_decode_fused(
@@ -155,14 +164,64 @@ def raceit_attention_decode_fused(
     from .acam_attention import DEFAULT_BLOCK_G, DEFAULT_BLOCK_K
     B, H, Sq, D = q.shape
     Smax = k.shape[2]
-    qq = quantize_tensor(q, bits=8)
-    k_codes, k_scale = masked_prefix_quantize(k, kv_len)
-    v_codes, v_scale = masked_prefix_quantize(v, kv_len)
+    qq, (k_codes, k_scale), (v_codes, v_scale) = \
+        _decode_quantize_operands(q, k, v, kv_len)
     out32, cmax = acam_attention_decode_codes(
         qq.codes.reshape(B * H, Sq, D), k_codes.reshape(B * H, Smax, D),
         v_codes.reshape(B * H, Smax, D), qq.scale * k_scale,
         jnp.asarray(kv_len, jnp.int32), mode=softmax_mode,
         scale_by_sqrt_d=None if fold_scale else D,
+        block_k=block_k or DEFAULT_BLOCK_K, block_g=block_g or DEFAULT_BLOCK_G,
+        interpret=interpret)
+    p_scale = prob_requant_scale(cmax)
+    return (out32.astype(jnp.float32) * (p_scale * v_scale)
+            ).reshape(B, H, Sq, D)
+
+
+@partial(jax.jit, static_argnames=("softmax_mode", "fold_scale",
+                                   "block_k", "block_g", "interpret"))
+def raceit_attention_decode_gqa(
+    q: jax.Array,   # (B, H, 1, D) float — the new token's queries, all heads
+    k: jax.Array,   # (B, KV, Smax, D) float — native-layout KV cache buffer
+    v: jax.Array,   # (B, KV, Smax, D) float
+    kv_len: jax.Array,              # () int32: valid cache prefix, >= 1
+    softmax_mode: str = "pot",
+    fold_scale: bool = False,       # True: 1/sqrt(d) already folded into q
+    block_k: int | None = None,
+    block_g: int | None = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """GQA-native fused decode attention, float in/out.
+
+    Takes the KV cache in its *native* grouped layout — KV heads are never
+    repeated to H, neither as floats nor as int8 codes — and hands the
+    kernel (`acam_attention_decode_gqa_codes`) one group per KV head with
+    the ``rep = H/KV`` sharing queries riding the tile's row dimension, so
+    each KV tile is fetched once per group. Bit-identical to
+    `raceit_attention_decode_fused` on ``jnp.repeat(k, rep, axis=1)`` (and
+    hence bit-exact vs the staged oracle on the cache slice, to the same
+    <=1 PROB ulp contract): the repeated tensor has the same max-abs as the
+    native one, so quantizer scales, codes, per-row PoT sums, and the
+    global cmax are all unchanged — only the dataflow is.
+
+    At rep=1 (MHA) the two entries coincide; the ExecPlan only resolves
+    ``raceit_gqa_native`` when ``n_kv_heads < n_heads``.
+    """
+    from .acam_attention import DEFAULT_BLOCK_G, DEFAULT_BLOCK_K
+    B, H, Sq, D = q.shape
+    KV, Smax = k.shape[1], k.shape[2]
+    if Sq != 1:
+        raise ValueError(f"decode path expects Sq=1, got {Sq}")
+    if H % KV:
+        raise ValueError(f"n_heads={H} not a multiple of n_kv_heads={KV}")
+    rep = H // KV
+    qq, (k_codes, k_scale), (v_codes, v_scale) = \
+        _decode_quantize_operands(q, k, v, kv_len)
+    out32, cmax = acam_attention_decode_gqa_codes(
+        qq.codes.reshape(B, KV, rep, D).reshape(B * KV, rep, D),
+        k_codes.reshape(B * KV, Smax, D), v_codes.reshape(B * KV, Smax, D),
+        qq.scale * k_scale, jnp.asarray(kv_len, jnp.int32),
+        mode=softmax_mode, scale_by_sqrt_d=None if fold_scale else D,
         block_k=block_k or DEFAULT_BLOCK_K, block_g=block_g or DEFAULT_BLOCK_G,
         interpret=interpret)
     p_scale = prob_requant_scale(cmax)

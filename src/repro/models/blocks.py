@@ -59,14 +59,18 @@ def apply_layer(p: Params, x: jax.Array, *, cfg: ModelConfig,
                 plan: ExecPlan | ExecConfig, mixer: str, ffn_kind: str,
                 positions: jax.Array, cache: Optional[Params],
                 mesh_ctx: Optional[MeshContext],
-                enc_kv: Optional[tuple] = None) -> tuple[jax.Array, Any]:
+                enc_kv: Optional[tuple] = None,
+                pad_lens: Optional[jax.Array] = None,
+                pad_prompt_len: Optional[jax.Array] = None,
+                ) -> tuple[jax.Array, Any]:
     plan = as_plan(cfg, plan)
     h = layers.apply_norm(p["norm1"], x, cfg)
     if mixer in ("attn", "attn_local"):
         m, new_cache = layers.attention(
             p["attn"], h, cfg=cfg, plan=plan, positions=positions,
             local=(mixer == "attn_local"),
-            cache=cache.get("attn") if cache else None)
+            cache=cache.get("attn") if cache else None, pad_lens=pad_lens,
+            pad_prompt_len=pad_prompt_len)
         if cache is not None:
             new_cache = {"attn": new_cache}
     elif mixer == "mamba":
@@ -192,8 +196,16 @@ def apply_stack(params: Params, x: jax.Array, *, cfg: ModelConfig,
                 caches: Optional[Params], mesh_ctx: Optional[MeshContext],
                 enc_kv_stack: Optional[list] = None,
                 n_layers: Optional[int] = None,
-                use_remat: bool = False) -> tuple[jax.Array, Optional[Params]]:
-    """Run the stack. caches is the pytree from init_stack_cache (or None)."""
+                use_remat: bool = False,
+                pad_lens: Optional[jax.Array] = None,
+                pad_prompt_len: Optional[jax.Array] = None,
+                ) -> tuple[jax.Array, Optional[Params]]:
+    """Run the stack. caches is the pytree from init_stack_cache (or None).
+
+    ``pad_lens`` (B,) marks per-row left-pad prefixes (batched serving);
+    attention layers mask those key slots, SSM mixers currently scan
+    through them (see `repro.serve.batching` for the exactness contract).
+    """
     plan = as_plan(cfg, plan)
     P, n_full, specs = layer_plan(cfg, n_layers)
     has_cache = caches is not None
@@ -210,7 +222,8 @@ def apply_stack(params: Params, x: jax.Array, *, cfg: ModelConfig,
                     p_list[j], x, cfg=cfg, plan=plan, mixer=mixer,
                     ffn_kind=ffn_kind, positions=positions,
                     cache=(cache_j if cache_j else None), mesh_ctx=mesh_ctx,
-                    enc_kv=None)
+                    enc_kv=None, pad_lens=pad_lens,
+                    pad_prompt_len=pad_prompt_len)
                 new_cs.append(nc if nc is not None else {})
             return x, tuple(new_cs)
 
@@ -231,7 +244,7 @@ def apply_stack(params: Params, x: jax.Array, *, cfg: ModelConfig,
             params["tail"][t], x, cfg=cfg, plan=plan, mixer=mixer,
             ffn_kind=ffn_kind, positions=positions,
             cache=(cache_t if cache_t else None), mesh_ctx=mesh_ctx,
-            enc_kv=None)
+            enc_kv=None, pad_lens=pad_lens, pad_prompt_len=pad_prompt_len)
         new_tail.append(nc if nc is not None else {})
 
     new_caches = ({"scan": list(new_scan), "tail": new_tail} if has_cache else None)

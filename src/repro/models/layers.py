@@ -9,10 +9,10 @@ one backend per operator slot (``plan.explain()`` shows the table).
 
 The analog-faithful math that the raceit backends bind lives here as
 private helpers (`_raceit_staged_attention`, `_raceit_fused_attention`,
-`_raceit_fused_decode`) next to the float formulations they are validated
-against (`_chunked_attention`, `_local_block_attention`); the backend
-registrations that expose them as named plan entries are in
-`repro.exec.backends`.
+`_raceit_fused_decode`, `_raceit_gqa_decode`) next to the float
+formulations they are validated against (`_chunked_attention`,
+`_local_block_attention`); the backend registrations that expose them as
+named plan entries are in `repro.exec.backends`.
 
 Attention uses a KV-chunked online-softmax (flash-style) formulation under
 ``jax.lax.scan`` so scores are never fully materialized — required to fit
@@ -182,12 +182,23 @@ def _split_gqa(q, n_kv):
 
 
 def _chunked_attention(q, k, v, mask_fn, chunk: int, scale: float,
-                       probs_dtype):
+                       probs_dtype, pad_lens=None):
     """Online-softmax attention, scanning over KV chunks, flat-head layout.
 
     q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd). KV heads are repeated to H inside
     each chunk step so scores shard cleanly over "heads" for any GQA ratio.
-    mask_fn(q_idx, k_idx) -> bool.
+    mask_fn(q_idx, k_idx) -> bool; ``pad_lens`` (B,) int32 additionally
+    masks each row's first ``pad_lens[b]`` keys (left-padded batch buckets).
+
+    Masked-row semantics: a query row with *no* valid key outputs zeros.
+    (With the finite ``NEG_INF`` sentinel, a fully-masked row's running max
+    ``m`` never moves off its init, so ``p = exp(s - m_new) = exp(0) = 1``
+    on every masked position and the row would silently emit the uniform
+    average of V. ``m`` still at the sentinel after the scan is exactly the
+    "no valid key" signature — those rows are zeroed. Rows with >= 1 valid
+    key are unaffected: their masked positions get ``exp(NEG_INF - m) = 0``
+    and any garbage accumulated before the first valid chunk is killed by
+    the ``corr = exp(NEG_INF - m_new) = 0`` rescale.)
     """
     b, sq, h, hd = q.shape
     kv = k.shape[2]
@@ -211,7 +222,11 @@ def _chunked_attention(q, k, v, mask_fn, chunk: int, scale: float,
         s = constraint(s, "batch", "heads", None, None)
         kpos = c0 + jnp.arange(chunk)
         msk = mask_fn(qpos[:, None], kpos[None, :]) & (kpos < sk_real)[None, :]
-        s = jnp.where(msk[None, None], s, NEG_INF)
+        if pad_lens is not None:  # per-row: left-pad keys do not exist
+            msk = msk[None] & (kpos[None, :] >= pad_lens[:, None])[:, None, :]
+            s = jnp.where(msk[:, None], s, NEG_INF)
+        else:
+            s = jnp.where(msk[None, None], s, NEG_INF)
         m_new = jnp.maximum(m, s.max(-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -234,7 +249,8 @@ def _chunked_attention(q, k, v, mask_fn, chunk: int, scale: float,
     vs = v.reshape(b, nchunks, chunk, kv, hd).swapaxes(0, 1)
     c0s = jnp.arange(nchunks) * chunk
     (m, l, acc), _ = jax.lax.scan(body, init, (ks, vs, c0s))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.where(m[..., None] > NEG_INF * 0.5,
+                    acc / jnp.maximum(l, 1e-30)[..., None], 0.0)
     return out.transpose(0, 2, 1, 3)  # (B, Sq, H, hd)
 
 
@@ -271,7 +287,32 @@ def _local_block_attention(q, k, v, window: int, scale: float, probs_dtype):
     return o.reshape(B, S, H, hd)
 
 
-def _raceit_fused_decode(q, k, v, kv_len, scale, plan: ExecPlan):
+def _decode_quantize(q, k, v, kv_len, scale):
+    """Shared fused-decode prolog: int8 codes + scales, native KV layout.
+
+    q (B, 1, H, hd) is quantized with 1/sqrt(d) pre-folded; the k/v cache
+    buffers (B, Smax, KV, hd) are quantized ONCE, unrepeated, with scales
+    reduced over the valid prefix only. This (with `_decode_descale`) is
+    the single point of truth both fused decode backends share — their
+    bit-identical contract lives here, the backends differ only in how
+    codes are grouped for their kernel entry.
+    """
+    from repro.kernels.ops import masked_prefix_quantize
+    qq = quantize_tensor(q.astype(jnp.float32) * scale, bits=8)
+    kq = masked_prefix_quantize(k.astype(jnp.float32), kv_len, axis=1)
+    vq = masked_prefix_quantize(v.astype(jnp.float32), kv_len, axis=1)
+    return qq, kq, vq
+
+
+def _decode_descale(out32, cmax, v_scale, shape):
+    """Shared fused-decode epilog: the oracle's PROB requant + V scales."""
+    from repro.kernels.ops import prob_requant_scale
+    return (out32.astype(jnp.float32)
+            * (prob_requant_scale(cmax) * v_scale)).reshape(shape)
+
+
+def _raceit_fused_decode(q, k, v, kv_len, scale, plan: ExecPlan,
+                         pad_valid=None):
     """Decode-step (Sq=1) attention on the fused streaming kernel.
 
     q: (B, 1, H, hd) flat heads; k/v: (B, Smax, KV, hd) — the fixed-shape
@@ -280,33 +321,74 @@ def _raceit_fused_decode(q, k, v, kv_len, scale, plan: ExecPlan):
     and matmul-2 (fully-invalid key blocks are skipped outright via
     scalar-prefetched grid bounds), and the k/v quantizer scales are
     reduced over the valid prefix only, so the result is bit-exact vs the
-    staged oracle on the cache slice. Returns (B, 1, H, hd).
+    staged oracle on the cache slice. ``pad_valid`` (B, Smax) bool marks
+    per-row attendable slots inside the prefix (left-padded batch buckets);
+    masked slots sit at the LOGIT minimum, exactly like the oracle's
+    additive mask. Returns (B, 1, H, hd).
 
     GQA heads are repeated to H *after* quantization, as int8 codes: the
     repeated tensor has the same max-abs as the original, so the scales are
     bit-identical to quantizing the repeated floats, at a quarter of the
-    bytes and 1/rep of the quantizer scan in the serving hot loop. (A
-    GQA-native kernel that skips the repeat entirely is a ROADMAP item.)
+    bytes and 1/rep of the quantizer scan. The ExecPlan prefers the
+    `_raceit_gqa_decode` backend below for GQA configs, which skips the
+    repeat entirely — this flat path stays registered as ``raceit_fused``
+    (the MHA default and the GQA parity partner).
     """
-    from repro.kernels.ops import (acam_attention_decode_codes,
-                                   masked_prefix_quantize, prob_requant_scale)
+    from repro.kernels.ops import acam_attention_decode_codes
     b, sq, h, hd = q.shape
     smax, kv = k.shape[1], k.shape[2]
     rep = h // kv
-    qq = quantize_tensor(q.astype(jnp.float32) * scale, bits=8)
-    k_codes, k_scale = masked_prefix_quantize(k.astype(jnp.float32), kv_len,
-                                              axis=1)
-    v_codes, v_scale = masked_prefix_quantize(v.astype(jnp.float32), kv_len,
-                                              axis=1)
+    qq, (k_codes, k_scale), (v_codes, v_scale) = _decode_quantize(
+        q, k, v, kv_len, scale)
     fold = lambda c: jnp.repeat(c, rep, axis=2).transpose(0, 2, 1, 3
                                                           ).reshape(b * h,
                                                                     smax, hd)
+    mask = None
+    if pad_valid is not None:  # (B, Smax) -> (B*H, 1, Smax)
+        mask = jnp.broadcast_to(pad_valid[:, None, None, :],
+                                (b, h, 1, smax)).reshape(b * h, 1, smax)
     out32, cmax = acam_attention_decode_codes(
         qq.codes.transpose(0, 2, 1, 3).reshape(b * h, sq, hd),
         fold(k_codes), fold(v_codes), qq.scale * k_scale,
-        jnp.asarray(kv_len, jnp.int32), mode=plan.exec_cfg.softmax_mode)
-    out = out32.astype(jnp.float32) * (prob_requant_scale(cmax) * v_scale)
-    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+        jnp.asarray(kv_len, jnp.int32), mask=mask,
+        mode=plan.exec_cfg.softmax_mode)
+    return _decode_descale(out32, cmax, v_scale, (b, h, sq, hd)
+                           ).transpose(0, 2, 1, 3)
+
+
+def _raceit_gqa_decode(q, k, v, kv_len, scale, plan: ExecPlan,
+                       pad_valid=None):
+    """GQA-native decode-step attention: the KV cache is never repeated.
+
+    Same contract as `_raceit_fused_decode` — bit-identical outputs, in
+    fact (same quantizer scales and codes, same per-row sums in the same
+    key-block order, same order-free integer cmax) — but k/v stay in their
+    native (B, Smax, KV, hd) cache layout end to end: quantized once, and
+    handed to `acam_attention_decode_gqa_codes` as (B*KV, Smax, hd) groups
+    whose ``rep = H/KV`` sharing queries ride the tile's row dimension.
+    The decode hot loop's ``jnp.repeat`` of cache codes disappears, and
+    with it rep x of the KV-cache read traffic (see the ``decode_gqa_*``
+    rows in BENCH_kernels.json).
+    """
+    from repro.kernels.ops import acam_attention_decode_gqa_codes
+    b, sq, h, hd = q.shape
+    smax, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    qq, (k_codes, k_scale), (v_codes, v_scale) = _decode_quantize(
+        q, k, v, kv_len, scale)
+    to_groups = lambda c: c.transpose(0, 2, 1, 3).reshape(b * kv, smax, hd)
+    mask = None
+    if pad_valid is not None:  # (B, Smax) -> (B*KV, rep, Smax)
+        mask = jnp.broadcast_to(pad_valid[:, None, None, :],
+                                (b, kv, rep, smax)).reshape(b * kv, rep, smax)
+    out32, cmax = acam_attention_decode_gqa_codes(
+        qq.codes.reshape(b, h, hd).reshape(b, kv, rep, hd
+                                           ).reshape(b * kv, rep, hd),
+        to_groups(k_codes), to_groups(v_codes), qq.scale * k_scale,
+        jnp.asarray(kv_len, jnp.int32), mask=mask,
+        mode=plan.exec_cfg.softmax_mode)
+    # (b*kv, rep, hd) rows land in head order
+    return _decode_descale(out32, cmax, v_scale, (b, sq, h, hd))
 
 
 def _attn_quantize(q, k, v, scale):
@@ -386,11 +468,32 @@ def attention(
     cache: Optional[Params] = None,
     cross_kv: Optional[tuple] = None,
     chunk: int = 1024,
+    pad_lens: Optional[jax.Array] = None,
+    pad_prompt_len: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, Optional[Params]]:
     """Self- (or cross-) attention with optional KV cache.
 
     cache = {"k": (B, Smax, KV, hd), "v": ..., "idx": int32 scalar}.
     prefill: x covers [0, S); decode: x is a single new token (Sq=1).
+
+    ``pad_lens`` (B,) int32 marks each row's left-pad prefix (mixed-length
+    batch buckets, see `repro.serve.batching`): those key slots do not
+    exist for self-attention — prefill masks them per row, and the decode
+    step masks the corresponding cache slots (including the ring-overwrite
+    rule for local layers: a pad slot stays masked only until a later
+    token's ring write reclaims it). Cross-attention ignores ``pad_lens``
+    (its keys come from the encoder, not from ``x``); position offsets are
+    the *caller's* job — `repro.models.model` computes per-row positions
+    from the same pad lengths before RoPE ever sees them.
+
+    ``pad_prompt_len`` (scalar) is the bucket's padded prompt length,
+    needed only by the decode step: the slot-index == column-index mapping
+    the pad mask relies on breaks when the *prefill* overflowed a ring
+    buffer (the ``sq >= L`` branch below keeps the last L columns, putting
+    column ``plen - L + s`` at slot ``s``), so for layers with
+    ``pad_prompt_len > L`` the mask is dropped — every slot already holds
+    one of the last L tokens, mostly real ones, and the remaining pads are
+    the documented local-layer softening, not a mis-masked real token.
 
     Dispatch goes through the resolved plan: prefill (and full/cross
     attention) through ``plan.attention_prefill``, the Sq=1 cache step
@@ -446,8 +549,24 @@ def attention(
         # decode: single query against the cache, masked by validity/window.
         # (ring buffers: every written slot is inside the window by design,
         # so validity is always a prefix of length min(idx, buffer_len))
-        kv_len = jnp.minimum(new_cache["idx"], k.shape[1])
-        o = plan.attention_decode(q, k, v, kv_len=kv_len, scale=scale)
+        L = k.shape[1]
+        kv_len = jnp.minimum(new_cache["idx"], L)
+        pad_valid = None
+        if pad_lens is not None:
+            # slot s of row b is attendable unless it still holds a pad
+            # token: pads occupy slots [0, pad_lens[b]) until the ring
+            # write for token s + L reclaims them (idx > L + s); non-ring
+            # caches have L = max_len >= idx, so the clause is inert there
+            slots = jnp.arange(L)
+            pad_valid = ((slots[None, :] >= pad_lens[:, None])
+                         | (new_cache["idx"] > L + slots)[None, :])
+            if pad_prompt_len is not None:
+                # prompt overflowed this ring buffer: prefill kept the last
+                # L columns (column plen-L+s at slot s), so slot-space pad
+                # masking would hit real tokens — drop it for this layer
+                pad_valid = pad_valid | (jnp.asarray(pad_prompt_len) > L)
+        o = plan.attention_decode(q, k, v, kv_len=kv_len, scale=scale,
+                                  pad_valid=pad_valid)
     else:
         q_off = cache["idx"] if cache is not None else 0
         if cross_kv is not None:
@@ -460,7 +579,9 @@ def attention(
             kind = "causal"
         o = plan.attention_prefill(q, k, v, scale=scale, q_offset=q_off,
                                    kind=kind, window=cfg.window, chunk=chunk,
-                                   probs_dtype=_probs_dtype(cfg))
+                                   probs_dtype=_probs_dtype(cfg),
+                                   pad_lens=(pad_lens if cross_kv is None
+                                             else None))
 
     wq = p["wq"]
     heff = wq.shape[0] if isinstance(wq, QuantizedWeight) else wq.shape[1]

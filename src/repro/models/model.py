@@ -151,7 +151,7 @@ class Model:
         return params["decoder"]["tail"][t - n_full * P]
 
     def _trunk(self, params: Params, tokens, positions, caches, enc_feats,
-               use_remat: bool):
+               use_remat: bool, pad_lens=None, pad_prompt_len=None):
         cfg = self.cfg
         x = layers.embed(params["embed"], tokens,
                          positions if positions.ndim == 2 else positions[0], cfg)
@@ -174,7 +174,8 @@ class Model:
                     lp, x, cfg=cfg, plan=self.plan, mixer=mixer,
                     ffn_kind=ffn_kind, positions=positions,
                     cache=cache_t if cache_t else None, mesh_ctx=self.mesh_ctx,
-                    enc_kv=enc_kv[t])
+                    enc_kv=enc_kv[t], pad_lens=pad_lens,
+                    pad_prompt_len=pad_prompt_len)
                 new_tail.append(nc if nc is not None else {})
             new_caches = ({"dec": new_tail, "enc_kv": enc_kv}
                           if caches is not None else None)
@@ -182,7 +183,8 @@ class Model:
             x, new_caches = blocks.apply_stack(
                 params["blocks"], x, cfg=cfg, plan=self.plan,
                 positions=positions, caches=caches, mesh_ctx=self.mesh_ctx,
-                use_remat=use_remat)
+                use_remat=use_remat, pad_lens=pad_lens,
+                pad_prompt_len=pad_prompt_len)
 
         x = layers.apply_norm(params["final_norm"], x, cfg)
         return x, new_caches
@@ -212,31 +214,57 @@ class Model:
         return blocks.init_stack_cache(cfg, batch, max_len, dtype)
 
     def prefill(self, params: Params, tokens: jax.Array, cache: Params,
-                enc_feats=None, positions=None):
-        """Process the prompt; returns last-position logits + filled cache."""
+                enc_feats=None, positions=None, pad_lens=None):
+        """Process the prompt; returns last-position logits + filled cache.
+
+        ``pad_lens`` (B,) int32: per-row left-pad prefix lengths (batched
+        serving buckets). Real tokens then sit at positions shifted down by
+        their row's pad count (pad rows are clipped to position 0 — their
+        outputs are masked out of every real row's attention anyway), and
+        attention masks the pad columns per row, so a request's prefill is
+        independent of its bucket-mates. The last column is a real token
+        for every row by construction (left-padding), so the returned
+        last-position logits are per-request first-token logits.
+        """
         if positions is None:
             positions = self._positions(tokens)
+            if pad_lens is not None:
+                positions = jnp.maximum(
+                    positions - pad_lens[:, None].astype(jnp.int32), 0)
         if self.cfg.is_encoder_decoder and enc_feats is not None:
             enc_out = self._encode(params, enc_feats)
             cache = dict(cache, enc_kv=[
                 (k.astype(c[0].dtype), v.astype(c[1].dtype))
                 for (k, v), c in zip(self._enc_kv(params, enc_out), cache["enc_kv"])])
-        x, new_cache = self._trunk(params, tokens, positions, cache, None, False)
+        x, new_cache = self._trunk(params, tokens, positions, cache, None,
+                                   False, pad_lens=pad_lens)
         logits = layers.unembed(params["embed"], x[:, -1:], self.cfg, self.plan)
         return logits, new_cache
 
-    def decode_step(self, params: Params, token: jax.Array, cache: Params):
+    def decode_step(self, params: Params, token: jax.Array, cache: Params,
+                    pad_lens=None, pad_prompt_len=None):
         """token: (B, 1). Returns (logits (B,1,V), cache).
 
         Each attention layer's decode step runs whatever backend the plan
         resolved for the ``attention_decode`` slot — the serving default
-        (`ExecConfig.serving()`) is ``raceit_fused``, the streaming kernel
-        over the cache's valid prefix (`layers._raceit_fused_decode`);
+        (`ExecConfig.serving()`) is ``raceit_gqa_native`` when the config
+        shares KV heads (``n_kv_heads < n_heads``), else ``raceit_fused``;
+        both stream the cache's valid prefix in one kernel pass
+        (`layers._raceit_gqa_decode` / `layers._raceit_fused_decode`), and
         ``plan.explain()`` names the backend and any degrade reason.
+        ``pad_lens`` (B,) keeps left-padded bucket rows at their true
+        positions and masks their pad cache slots; ``pad_prompt_len`` (the
+        bucket's padded prompt length, scalar) lets layers whose ring
+        buffer the prompt overflowed drop the slot-space pad mask (the
+        last-L prefill broke the slot == column mapping it relies on).
         """
         idx = self._cache_index(cache)
         positions = jnp.broadcast_to(idx, token.shape).astype(jnp.int32)
-        x, new_cache = self._trunk(params, token, positions, cache, None, False)
+        if pad_lens is not None:
+            positions = positions - pad_lens[:, None].astype(jnp.int32)
+        x, new_cache = self._trunk(params, token, positions, cache, None,
+                                   False, pad_lens=pad_lens,
+                                   pad_prompt_len=pad_prompt_len)
         logits = layers.unembed(params["embed"], x, self.cfg, self.plan)
         return logits, new_cache
 

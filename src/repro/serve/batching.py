@@ -1,10 +1,28 @@
 """Request batching for the serving engine.
 
-Bucketed static batching: requests accumulate in a queue; when a bucket
-fills (or `max_wait_requests` arrive), the whole bucket prefills and decodes
-together, right-padded to the bucket's prompt length. Per-request decode
-lengths are honored by masking finished rows. (Slot-level continuous
-batching — per-slot cache indices — is documented future work in DESIGN.md.)
+Bucketed static batching: requests accumulate in a queue; `run_once` pops
+up to ``bucket_size`` of them, *left*-pads their prompts to the bucket's
+longest prompt, and prefills + decodes the whole bucket together. The
+per-row pad lengths ride along to the engine, which masks the pad columns
+out of every attention step and keeps real tokens at their solo positions
+— a request's generated tokens are therefore identical whether it is
+served alone or alongside bucket-mates (tests/test_serve_batching.py
+asserts this). The guarantee is bitwise for digital-mode attention
+mixers under greedy decoding; four documented softenings: sampling
+(``temperature > 0``) draws categorical noise whose shape is the batch,
+so a bucket's draws differ from a solo run's even with the same key;
+raceit modes quantize whole activation tensors, so int8 scales couple
+bucket rows exactly as they couple the heads of one request (masking is
+still exact — pad slots sit at the oracle's masked-LOGIT minimum; only
+quantizer granularity differs from a solo run); SSM layers scan through
+pad tokens; and a local-attention ring window is partly occupied by pads
+until they are overwritten (once a prompt overflows the ring, the
+last-L prefill breaks the slot == column mapping and the decode pad mask
+is dropped for that layer) — hybrid/local configs are near- rather than
+bit-equal in mixed buckets. Each request's result is truncated to its own
+``n_new``; the bucket decodes to the longest request. (Slot-level
+continuous batching — per-slot cache indices — is documented future work
+in DESIGN.md.)
 """
 from __future__ import annotations
 
@@ -45,13 +63,20 @@ class BatchScheduler:
             return []
         batch = [self.queue.popleft()
                  for _ in range(min(self.bucket, len(self.queue)))]
-        # right-align pad prompts to a common length
+        # right-align prompts to a common length; the pad prefix lengths go
+        # to the engine so pads are masked out of attention and positions
+        # stay per-request (without them, real tokens would causally attend
+        # the pad prefix at shifted positions and a request's output would
+        # depend on its bucket-mates)
         plen = max(len(r.prompt) for r in batch)
         n_new = max(r.n_new for r in batch)
         prompts = np.full((len(batch), plen), self.pad_id, np.int32)
+        pad_lens = np.zeros(len(batch), np.int32)
         for i, r in enumerate(batch):
             prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
-        out = self.engine.generate(prompts, n_new)
+            pad_lens[i] = plen - len(r.prompt)
+        out = self.engine.generate(
+            prompts, n_new, pad_lens=pad_lens if pad_lens.any() else None)
         finished = []
         for i, r in enumerate(batch):
             r.result = out[i, : r.n_new]

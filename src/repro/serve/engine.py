@@ -7,17 +7,25 @@ onto buckets. Operator dispatch goes through the engine's resolved
 the engine itself contains no execution-mode branches.
 
 With the serving default (``ExecConfig.serving()``), the plan resolves the
-``attention_prefill`` and ``attention_decode`` slots to ``raceit_fused``:
-both the jitted prefill and the jitted per-token ``_decode`` step run the
-fused streaming Pallas kernel (one VMEM pass over the Fig.-12 pipeline, no
-(Sq, Sk) intermediates in HBM). The decode step attends the KV cache's
-valid prefix via a traced ``kv_len`` scalar — fixed buffer shapes, so the
-decode executable compiles once and is reused for every token; fully
-invalid key blocks are skipped via scalar-prefetched grid bounds. Every
+``attention_prefill`` slot to ``raceit_fused`` and ``attention_decode`` to
+``raceit_gqa_native`` for grouped-query configs (``n_kv_heads < n_heads``;
+MHA configs take ``raceit_fused``): both the jitted prefill and the jitted
+per-token ``_decode`` step run the fused streaming Pallas kernel (one VMEM
+pass over the Fig.-12 pipeline, no (Sq, Sk) intermediates in HBM), and the
+GQA decode keeps the KV cache in its native (B, Smax, KV, hd) layout — the
+rep queries sharing a KV head ride one kernel tile, so cache codes are
+never repeated to H. The decode step attends the KV cache's valid prefix
+via a traced ``kv_len`` scalar — fixed buffer shapes, so the decode
+executable compiles once and is reused for every token; fully invalid key
+blocks are skipped via scalar-prefetched grid bounds. Every
 ``softmax_mode`` ("pot", "pot_fine", "uniform") is covered; configs the
-kernel can't serve (``matmul_fidelity="acam"``) resolve to
+kernels can't serve (``matmul_fidelity="acam"``) resolve to
 ``raceit_staged`` with the reason recorded on the plan (and a one-time
 RuntimeWarning) — `repro.exec.resolve_plan` has the exact rules.
+
+Mixed-length buckets (`serve.batching`) arrive left-padded with per-row
+``pad_lens``; prefill and decode mask the pad slots and shift positions so
+each row's tokens match serving it solo.
 """
 from __future__ import annotations
 
@@ -55,23 +63,44 @@ class GenerationEngine:
 
     def generate(self, prompts: jax.Array, n_new: int,
                  rng: Optional[jax.Array] = None,
-                 enc_feats: Optional[jax.Array] = None) -> np.ndarray:
-        """prompts: (B, P) int32 -> (B, n_new) generated ids."""
+                 enc_feats: Optional[jax.Array] = None,
+                 pad_lens: Optional[np.ndarray] = None) -> np.ndarray:
+        """prompts: (B, P) int32 -> (B, n_new) generated ids.
+
+        ``pad_lens`` (B,) int32: per-row *left-pad* prefix lengths for
+        mixed-length buckets (`repro.serve.batching` passes this). Pad
+        columns are masked out of every attention step and real tokens keep
+        their solo positions, so a row's generation matches serving the
+        unpadded prompt alone.
+
+        Every sampling step uses a fresh key split off the request ``rng``
+        — including the first token (sampling it with the root key and then
+        splitting that same key for later tokens would reuse the root as
+        both a sampling key and a split source, the classic JAX key-reuse
+        hazard).
+        """
         B, P = prompts.shape
         assert P + n_new <= self.max_len
+        if pad_lens is not None:
+            pad_lens = jnp.asarray(pad_lens, jnp.int32)
         cache = self.model.init_cache(B, self.max_len)
         if self.cfg.is_encoder_decoder:
             logits, cache = self._prefill(self.params, prompts, cache,
-                                          enc_feats=enc_feats)
+                                          enc_feats=enc_feats,
+                                          pad_lens=pad_lens)
         else:
-            logits, cache = self._prefill(self.params, prompts, cache)
+            logits, cache = self._prefill(self.params, prompts, cache,
+                                          pad_lens=pad_lens)
         out = []
         rng = rng if rng is not None else jax.random.PRNGKey(0)
-        tok = self._sample(logits[:, -1], rng)
+        rng, sub = jax.random.split(rng)
+        tok = self._sample(logits[:, -1], sub)
         out.append(tok)
+        pad_plen = jnp.int32(P) if pad_lens is not None else None
         for i in range(n_new - 1):
             rng, sub = jax.random.split(rng)
-            logits, cache = self._decode(self.params, tok[:, None], cache)
+            logits, cache = self._decode(self.params, tok[:, None], cache,
+                                         pad_lens, pad_plen)
             tok = self._sample(logits[:, -1], sub)
             out.append(tok)
         return np.stack([np.asarray(t) for t in out], axis=1)

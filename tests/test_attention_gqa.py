@@ -1,0 +1,198 @@
+"""GQA parity matrix: the GQA-native decode kernel and every resolved
+attention backend across grouping ratios rep = H/KV in {1, 2, 4, 8}.
+
+The tentpole contract: `raceit_attention_decode_gqa` (native (B, KV, Smax,
+D) cache layout, no KV repeat anywhere) is *bit-identical* to
+`raceit_attention_decode_fused` on the repeated cache — and hence bit-exact
+vs the staged `raceit_attention` oracle on the cache slice — for every
+softmax mode x fill level x rep, with and without per-row pad masks. The
+prefill matrix extends the fused-vs-staged bit-exactness contract (tested
+at rep in {1, 2} since PR 1) to rep in {4, 8}.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ExecConfig, ModelConfig
+from repro.core.attention import raceit_attention
+from repro.core.ops import PROB_FMT
+from repro.exec import resolve_plan
+from repro.kernels.ops import (raceit_attention_decode_fused,
+                               raceit_attention_decode_gqa)
+from repro.models import layers
+
+REPS = (1, 2, 4, 8)
+
+
+def _assert_parity(got, want, v):
+    """Bit-exact, with the <=1 PROB ulp acceptance bound as the hard floor."""
+    got, want = np.asarray(got), np.asarray(want)
+    if np.array_equal(got, want):
+        return
+    ulp = PROB_FMT.scale * float(jnp.max(jnp.abs(v)))
+    np.testing.assert_allclose(got, want, atol=ulp, rtol=0)
+
+
+def _gqa_cfg(rep, kv=2):
+    return ModelConfig(name=f"t{rep}", n_layers=1, d_model=kv * rep * 16,
+                       n_heads=kv * rep, n_kv_heads=kv, d_ff=64,
+                       vocab_size=64, head_dim=16, param_dtype="float32",
+                       compute_dtype="float32")
+
+
+def _decode_case(rng, rep, Smax=96, D=16, B=2, KV=2, fill=None, std=1.5):
+    H = KV * rep
+    mk = lambda s: jnp.asarray(rng.normal(0, std, s), jnp.float32)
+    q = mk((B, H, 1, D))
+    fill = Smax if fill is None else fill
+    k = jnp.zeros((B, KV, Smax, D), jnp.float32).at[:, :, :fill].set(
+        mk((B, KV, fill, D)))
+    v = jnp.zeros((B, KV, Smax, D), jnp.float32).at[:, :, :fill].set(
+        mk((B, KV, fill, D)))
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# kernel wrappers: gqa == fused == oracle, the full matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rep", REPS)
+@pytest.mark.parametrize("mode", ["pot", "pot_fine", "uniform"])
+def test_gqa_decode_matrix_bitexact_vs_fused_and_oracle(rng, mode, rep):
+    q, k, v = _decode_case(rng, rep)
+    kf, vf = (jnp.repeat(a, rep, axis=1) for a in (k, v))
+    for fill in (1, 33, 96):
+        L = jnp.int32(fill)
+        want = raceit_attention_decode_fused(q, kf, vf, L, softmax_mode=mode,
+                                             block_k=32)
+        got = raceit_attention_decode_gqa(q, k, v, L, softmax_mode=mode,
+                                          block_k=32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        oracle = raceit_attention(q, kf[:, :, :fill], vf[:, :, :fill],
+                                  softmax_mode=mode)
+        _assert_parity(got, oracle, vf[:, :, :fill])
+
+
+def test_gqa_decode_ignores_stale_cache_tail(rng):
+    """Garbage past kv_len in the *native* buffers must not leak."""
+    q, k, v = _decode_case(rng, rep=4, fill=20)
+    k = k.at[:, :, 20:].set(99.0)
+    v = v.at[:, :, 20:].set(-99.0)
+    kf, vf = (jnp.repeat(a, rep := 4, axis=1) for a in (k, v))
+    want = raceit_attention(q, kf[:, :, :20], vf[:, :, :20])
+    got = raceit_attention_decode_gqa(q, k, v, jnp.int32(20), block_k=32)
+    _assert_parity(got, want, vf[:, :, :20])
+
+
+def test_gqa_decode_kv_len_is_traced_one_compile(rng):
+    """One executable serves every fill level (kv_len traced, not static)."""
+    q, k, v = _decode_case(rng, rep=4)
+    kf, vf = (jnp.repeat(a, 4, axis=1) for a in (k, v))
+    fn = lambda L: raceit_attention_decode_gqa(q, k, v, L, block_k=32)
+    out0 = fn(jnp.int32(3))
+    traces = raceit_attention_decode_gqa._cache_size()
+    outs = [out0] + [fn(jnp.int32(L)) for L in (17, 96)]
+    # later fill levels must reuse the first call's executable — if kv_len
+    # regressed to a static argument this count would grow per fill level
+    assert raceit_attention_decode_gqa._cache_size() == traces
+    for L, got in zip((3, 17, 96), outs):
+        _assert_parity(got, raceit_attention(q, kf[:, :, :L], vf[:, :, :L]),
+                       vf[:, :, :L])
+
+
+def test_gqa_decode_rejects_bad_shapes(rng):
+    q, k, v = _decode_case(rng, rep=2)
+    with pytest.raises(ValueError):  # Sq != 1
+        raceit_attention_decode_gqa(jnp.concatenate([q, q], axis=2), k, v,
+                                    jnp.int32(4))
+    with pytest.raises(ValueError):  # H not a multiple of KV
+        raceit_attention_decode_gqa(q[:, :3], k, v, jnp.int32(4))
+
+
+# ---------------------------------------------------------------------------
+# layer adapters: plan-dispatched decode, pad masks, resolution policy
+# ---------------------------------------------------------------------------
+
+def _plan(rep, **kw):
+    return resolve_plan(_gqa_cfg(max(rep, 1)),
+                        ExecConfig.serving(**kw))
+
+
+@pytest.mark.parametrize("rep", REPS[1:])  # rep=1 resolves to raceit_fused
+def test_layer_gqa_decode_bitexact_vs_fused_adapter(rng, rep):
+    """The plan's default GQA decode == the flat fused adapter, bitwise —
+    including per-row pad masks (left-padded buckets)."""
+    plan = _plan(rep)
+    assert plan.backend("attention_decode") == "raceit_gqa_native"
+    B, Smax, KV, hd = 3, 64, 2, 16
+    H = KV * rep
+    fill = 40
+    scale = 1.0 / np.sqrt(hd)
+    mk = lambda s: jnp.asarray(rng.normal(0, 1, s), jnp.float32)
+    q = mk((B, 1, H, hd))
+    k = jnp.zeros((B, Smax, KV, hd)).at[:, :fill].set(mk((B, fill, KV, hd)))
+    v = jnp.zeros((B, Smax, KV, hd)).at[:, :fill].set(mk((B, fill, KV, hd)))
+    pad = jnp.asarray([0, 3, 7], jnp.int32)
+    for pad_valid in (None, jnp.arange(Smax)[None, :] >= pad[:, None]):
+        want = layers._raceit_fused_decode(q, k, v, jnp.int32(fill), scale,
+                                           plan, pad_valid=pad_valid)
+        got = layers._raceit_gqa_decode(q, k, v, jnp.int32(fill), scale,
+                                        plan, pad_valid=pad_valid)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # and both match the staged quantized pipeline on the masked slice
+        mask = (jnp.ones((B, 1, fill), bool) if pad_valid is None
+                else jnp.broadcast_to(pad_valid[:, None, :fill], (B, 1, fill)))
+        oracle = layers._raceit_staged_attention(q, k[:, :fill], v[:, :fill],
+                                                 mask, scale, plan)
+        _assert_parity(got, oracle, v[:, :fill])
+
+
+def test_resolution_gqa_vs_mha():
+    """serving() prefers the GQA-native decode exactly when KV heads are
+    shared; MHA degrades one step to raceit_fused with a recorded reason
+    and *no* warning (same dataflow, nothing lost)."""
+    import warnings
+    gqa = resolve_plan(_gqa_cfg(4), ExecConfig.serving())
+    assert gqa.backend("attention_decode") == "raceit_gqa_native"
+    assert gqa.op("attention_decode").reason is None
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # any RuntimeWarning fails the test
+        mha = resolve_plan(_gqa_cfg(1), ExecConfig.serving())
+    op = mha.op("attention_decode")
+    assert op.backend == "raceit_fused"
+    assert op.requested == "raceit_gqa_native"
+    assert "KV-head sharing" in op.reason
+    assert "raceit_gqa_native" in mha.explain()
+
+
+def test_gqa_native_not_used_without_fused_attention():
+    plan = resolve_plan(_gqa_cfg(4), ExecConfig(mode="raceit"))
+    assert plan.backend("attention_decode") == "raceit_staged"
+
+
+# ---------------------------------------------------------------------------
+# prefill matrix: staged == fused for every rep (extends the rep<=2 tests)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rep", REPS)
+def test_prefill_fused_vs_staged_bitexact_per_rep(rng, rep):
+    B, S, KV, hd = 2, 24, 2, 16
+    H = KV * rep
+    cfg = _gqa_cfg(rep)
+    scale = 1.0 / np.sqrt(hd)
+    mk = lambda s: jnp.asarray(rng.normal(0, 1.5, s), jnp.float32)
+    q, = (mk((B, S, H, hd)),)
+    k, v = mk((B, S, KV, hd)), mk((B, S, KV, hd))
+    common = dict(scale=scale, q_offset=0, kind="causal", window=cfg.window,
+                  chunk=1024, probs_dtype=jnp.float32)
+    staged = resolve_plan(cfg, ExecConfig(mode="raceit"))
+    fused = resolve_plan(cfg, ExecConfig.serving())
+    assert staged.backend("attention_prefill") == "raceit_staged"
+    assert fused.backend("attention_prefill") == "raceit_fused"
+    want = staged.attention_prefill(q, k, v, **common)
+    got = fused.attention_prefill(q, k, v, **common)
+    _assert_parity(got, want, v)
+    # the digital backend agrees to float-vs-int8 noise on the same shapes
+    dig = resolve_plan(cfg, ExecConfig()).attention_prefill(q, k, v, **common)
+    scale_ref = max(float(jnp.max(jnp.abs(want))), 1e-6)
+    assert float(jnp.max(jnp.abs(dig - want))) / scale_ref < 0.35

@@ -70,7 +70,11 @@ def test_every_combo_resolves_deterministically(mode, softmax_mode, fidelity,
         want_attn = ("raceit_fused" if fused and fidelity == "int"
                      else "raceit_staged")
         assert chosen["attention_prefill"] == want_attn
-        assert chosen["attention_decode"] == want_attn
+        # _cfg() is a GQA config (n_kv_heads=2 < n_heads=4): a supported
+        # fused decode resolves to the GQA-native kernel
+        want_dec = ("raceit_gqa_native" if fused and fidelity == "int"
+                    else want_attn)
+        assert chosen["attention_decode"] == want_dec
     # explain() renders every slot and never raises
     text = plan.explain()
     for slot in OP_SLOTS:
@@ -87,10 +91,13 @@ def test_unsupported_fused_degrades_with_structured_reason():
         resolve_plan(_cfg(), ec)  # cached: no second warning
     op = plan.op("attention_decode")
     assert op.backend == "raceit_staged"
-    assert op.requested == "raceit_fused"
+    # decode's preference head is the GQA-native kernel; the whole fused
+    # family is rejected by the same fidelity reason
+    assert op.requested == "raceit_gqa_native"
     assert "acam" in op.reason
-    assert any(d.slot == "attention_decode" and d.requested == "raceit_fused"
-               and d.chosen == "raceit_staged" for d in plan.degrades)
+    for name in ("raceit_gqa_native", "raceit_fused"):
+        assert any(d.slot == "attention_decode" and d.requested == name
+                   and d.chosen == "raceit_staged" for d in plan.degrades)
     msgs = [x for x in w if issubclass(x.category, RuntimeWarning)
             and "fused_attention" in str(x.message)]
     assert len(msgs) == 1, [str(x.message) for x in w]
