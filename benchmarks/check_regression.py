@@ -36,6 +36,10 @@ or tighten/loosen with ``--threshold``. ``--expect prefix ...`` adds a
 coverage gate: the current artifact must contain at least one row per
 named prefix (new-kernel families — e.g. the ``decode_gqa`` rows — stay
 tracked instead of silently dropping out of the bench).
+``--expect-file PATH`` reads those prefixes from a committed file
+(``benchmarks/expected_rows.txt``: one prefix per line, ``#`` comments) —
+a new kernel registers its coverage gate by appending a line next to its
+bench code instead of editing the CI workflow.
 """
 from __future__ import annotations
 
@@ -100,6 +104,12 @@ def main() -> int:
                          "current artifact — a coverage gate so tracked "
                          "families (e.g. kernel/attention_decode_gqa) can't "
                          "silently drop out of the bench")
+    ap.add_argument("--expect-file", default=None,
+                    help="file of expected row-name prefixes, one per line "
+                         "('#' comments); the committed "
+                         "benchmarks/expected_rows.txt lets new kernels "
+                         "self-register their coverage gate instead of "
+                         "editing the CI workflow")
     args = ap.parse_args()
 
     prev = json.loads(Path(args.prev).read_text())
@@ -108,7 +118,13 @@ def main() -> int:
           f"{len(set(prev) & set(cur))} tracked kernels")
     failures = compare(prev, cur, args.threshold, set(args.allow),
                        drift_limit=args.drift_limit)
-    for prefix in args.expect:
+    expect = list(args.expect)
+    if args.expect_file:
+        for line in Path(args.expect_file).read_text().splitlines():
+            line = line.split("#", 1)[0].strip()
+            if line:
+                expect.append(line)
+    for prefix in expect:
         if not any(name.startswith(prefix) for name in cur):
             failures.append(f"expected bench row(s) {prefix}* missing from "
                             f"the current artifact (coverage gate)")

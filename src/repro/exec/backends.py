@@ -252,8 +252,11 @@ def _prefill_raceit_fused(plan, q, k, v, *, scale, q_offset, kind, window,
 # ---------------------------------------------------------------------------
 # Interface: impl(plan, q, k, v, *, kv_len, scale, pad_valid) -> (B, 1, H, hd)
 #   q (B, 1, H, hd) flat heads; k/v (B, Smax, KV, hd) fixed-shape buffers;
-#   pad_valid (B, Smax) bool restricts each row's attendable slots inside
-#   the valid prefix (left-padded batch buckets), None = all attendable.
+#   kv_len is a () scalar (one shared fill level) or a (B,) vector of
+#   per-request fill levels (slot-level continuous batching; 0 = empty
+#   slot, a dead row); pad_valid (B, Smax) bool restricts each row's
+#   attendable slots inside the valid prefix (left-padded batch buckets),
+#   None = all attendable.
 
 def _decode_scores(q, k, kv_heads, scale):
     """Float decode scores in grouped-query layout: (B, KV, G, 1, Smax)."""
@@ -269,11 +272,36 @@ def _decode_combine(pr, v):
 
 
 def _decode_valid(k, kv_len, pad_valid):
-    """(B, Smax) or (1, Smax) key-validity mask for the float decode paths."""
-    valid = (jnp.arange(k.shape[1]) < kv_len)[None, :]
+    """(B, Smax) or (1, Smax) key-validity mask for the float decode paths.
+
+    ``kv_len`` may be a scalar or a (B,) per-row vector — the float paths
+    are per-row-native either way (the mask is already per row).
+    """
+    valid = (jnp.arange(k.shape[1])[None, :]
+             < jnp.reshape(jnp.asarray(kv_len), (-1, 1)))
     if pad_valid is not None:
         valid = valid & pad_valid
     return valid
+
+
+def _flatten_row_lens(k, kv_len, pad_valid):
+    """Degrade a per-row kv_len vector to the shared-max-fill contract.
+
+    The flat fused kernels take one scalar fill level; a per-row vector is
+    served by decoding every row to the batch max and masking each row's
+    tail via the pad mask — correct attention, but every row streams to
+    the shared frontier (the pre-rows occupancy behavior) and, unlike the
+    per-row kernels, stale cache entries inside [row_len, max_len) still
+    sit inside the quantizer-scale reduction window (they are *masked*,
+    not nonexistent). The ``*_rows`` backends exist to remove both; this
+    path keeps scalar-kv_len callers and explicit flat-backend pins
+    working when a per-row vector shows up.
+    """
+    if jnp.ndim(kv_len) == 0:
+        return kv_len, pad_valid
+    valid = jnp.arange(k.shape[1])[None, :] < kv_len[:, None]
+    return jnp.max(kv_len), (valid if pad_valid is None
+                             else valid & pad_valid)
 
 
 @register("attention_decode", "digital")
@@ -294,10 +322,12 @@ def _decode_raceit_staged(plan, q, k, v, *, kv_len, scale, pad_valid=None):
     return _decode_combine(pr, v)
 
 
-@register("attention_decode", "raceit_fused", supported=_fused_supported)
+@register("attention_decode", "raceit_fused", supported=_fused_supported,
+          notes="per-row kv_len vectors degrade to the shared max fill")
 def _decode_raceit_fused(plan, q, k, v, *, kv_len, scale, pad_valid=None):
     # full quantized Fig.-12 numerics over the cache's valid prefix — same
     # contract as the fused prefill path
+    kv_len, pad_valid = _flatten_row_lens(k, kv_len, pad_valid)
     return layers._raceit_fused_decode(q, k, v, kv_len, scale, plan,
                                        pad_valid=pad_valid)
 
@@ -320,6 +350,33 @@ def _gqa_native_supported(model_cfg, exec_cfg):
 def _decode_raceit_gqa(plan, q, k, v, *, kv_len, scale, pad_valid=None):
     # bit-identical to raceit_fused, at 1/rep of the KV-cache reads: the
     # cache codes are never repeated to H (see layers._raceit_gqa_decode)
+    kv_len, pad_valid = _flatten_row_lens(k, kv_len, pad_valid)
+    return layers._raceit_gqa_decode(q, k, v, kv_len, scale, plan,
+                                     pad_valid=pad_valid)
+
+
+@register("attention_decode", "raceit_fused_rows", supported=_fused_supported,
+          notes="per-row kv_len: every batch row decodes at its own cache "
+                "fill level (continuous batching); scalar kv_len callers "
+                "are served unchanged")
+def _decode_raceit_fused_rows(plan, q, k, v, *, kv_len, scale,
+                              pad_valid=None):
+    # the per-row serving decode: a (B,) kv_len vector reaches the kernel
+    # as per-group valid prefixes — per-row masks, per-row dead-block
+    # skipping, stale tails outside every quantizer-scale window, empty
+    # rows (kv_len 0) defined as zeros. A scalar kv_len is the flat path.
+    return layers._raceit_fused_decode(q, k, v, kv_len, scale, plan,
+                                       pad_valid=pad_valid)
+
+
+@register("attention_decode", "raceit_gqa_rows",
+          supported=_gqa_native_supported,
+          notes="per-row kv_len on the GQA-native cache layout — the "
+                "serving default for grouped-query configs")
+def _decode_raceit_gqa_rows(plan, q, k, v, *, kv_len, scale, pad_valid=None):
+    # per-row lengths + the GQA-native dataflow: each KV-head group's tile
+    # streams to its own request's fill frontier and is fetched once for
+    # the rep sharing queries (see layers._raceit_gqa_decode)
     return layers._raceit_gqa_decode(q, k, v, kv_len, scale, plan,
                                      pad_valid=pad_valid)
 

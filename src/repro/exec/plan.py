@@ -175,11 +175,15 @@ def _default_chain(slot: str, exec_cfg: ExecConfig) -> tuple[str, ...]:
         return _BASELINE[slot]     # which degrade below with a reason)
     fused_first = ("raceit_fused", "raceit_staged", "digital")
     staged_first = ("raceit_staged", "digital")
-    # decode prefers the GQA-native kernel: its capability predicate accepts
-    # only configs with KV-head sharing (n_kv_heads < n_heads), so MHA
-    # configs degrade one step to the flat fused kernel with the reason
-    # recorded — same dataflow there, nothing to warn about
-    gqa_first = ("raceit_gqa_native",) + fused_first
+    # decode prefers the per-row GQA-native kernel: per-request kv_len
+    # vectors (slot-level continuous batching) decode each row at its own
+    # fill level, and scalar-kv_len callers pass through unchanged. The
+    # GQA predicates accept only configs with KV-head sharing
+    # (n_kv_heads < n_heads), so MHA configs degrade within the fused
+    # family to the per-row flat kernel with the reason recorded — same
+    # dataflow there, nothing to warn about.
+    gqa_first = ("raceit_gqa_rows", "raceit_gqa_native",
+                 "raceit_fused_rows") + fused_first
     return {
         "matmul": ("raceit_int",),
         "activation": ("raceit_lut",),
@@ -266,7 +270,8 @@ def resolve_plan(model_cfg: ModelConfig,
     return plan
 
 
-_FUSED_FAMILY = ("raceit_fused", "raceit_gqa_native")
+_FUSED_FAMILY = ("raceit_fused", "raceit_gqa_native",
+                 "raceit_fused_rows", "raceit_gqa_rows")
 
 
 def _warn_fused_degrades(plan: ExecPlan) -> None:

@@ -41,10 +41,15 @@ Two entry points share the kernel bodies:
   mask / in-kernel causal offset;
 * `acam_attention_decode_codes` — serving decode: Sq=1 queries against a
   fixed-shape KV cache whose valid prefix length ``kv_len`` is a *traced*
-  scalar, ridden in as a scalar-prefetch operand: key blocks fully past
-  the fill level are skipped outright (clamped index maps + gated
-  compute), and only the partially valid boundary block is masked —
-  instead of slicing the buffer (dynamic shapes) or sweeping it whole;
+  scalar — or, for per-request serving, a *per-group vector* (one length
+  per grid group) — ridden in as a scalar-prefetch operand: key blocks
+  fully past the fill level are skipped outright (clamped index maps +
+  gated compute), and only the partially valid boundary block is masked —
+  instead of slicing the buffer (dynamic shapes) or sweeping it whole.
+  With a vector ``kv_len`` the skip bound is per *group tile* (the max
+  length of the ``bg`` groups riding the tile, prefetched as a second
+  scalar operand), so a short request in a mixed batch stops streaming at
+  its own fill level instead of the batch max;
 * `acam_attention_decode_gqa_codes` — GQA-native serving decode: k/v stay
   in their native (B*KV, Smax, hd) cache layout and the ``rep = H/KV``
   query heads that share a KV head ride the *row* dimension of one tile,
@@ -161,13 +166,14 @@ def _requant_code_table(cmax, prob_lut_vals):
                     -128, 127).astype(jnp.int32)
 
 
-def _attn_kernel(kvlen_ref, s1_ref, qoff_ref, q_ref, k_ref, v_ref, *rest,
+def _attn_kernel(kvlen_ref, kvmax_ref, s1_ref, qoff_ref, q_ref, k_ref, v_ref,
+                 *rest,
                  nq: int, nk: int, bg: int, bq: int, bk: int,
                  g_real: int, sq_real: int, sk_real: int,
                  sqrt_d: Optional[float],
                  e_min: float, octave_step: float, frac_shift: int,
                  causal: bool, has_mask: bool, dyn_len: bool,
-                 skip_blocks: bool):
+                 per_row: bool, skip_blocks: bool):
     if has_mask:
         mask_ref, exp_val_ref, log_lut_ref, prob_lut_ref = rest[:4]
         rest = rest[4:]
@@ -194,21 +200,32 @@ def _attn_kernel(kvlen_ref, s1_ref, qoff_ref, q_ref, k_ref, v_ref, *rest,
         are skipped outright — their accumulation work is gated off here,
         and the k/v BlockSpec index maps clamp them to the last valid
         block so no fresh tile is ever fetched for them (grid bounds
-        instead of masked sweeps over the whole cache buffer). kv_len is
-        then an SMEM scalar, safe to branch on. Every other grid keeps the
-        unconditional body: static (prefill) grids have nothing to skip,
-        and an nk==1 dynamic grid's only block always intersects the
-        prefix (kv_len >= 1) — gating there would predicate control flow
-        on a VMEM-resident scalar for a condition that is always true.
+        instead of masked sweeps over the whole cache buffer). The bound
+        is ``kvmax_ref[g]`` — the max valid length across the ``bg``
+        groups riding this tile: equal to the lone kv_len for a scalar
+        fill, and the *tile's own* fill frontier for a per-group vector
+        (a short request in a mixed batch stops streaming at its own
+        level, not the batch max). kv_len is an SMEM scalar load, safe to
+        branch on. Every other grid keeps the unconditional body: static
+        (prefill) grids have nothing to skip, and an nk==1 dynamic grid's
+        only block always intersects the prefix — gating there would
+        predicate control flow on a VMEM-resident scalar for a condition
+        that is always true.
         """
         if skip_blocks:
-            pl.when((k * bk) < kvlen_ref[0])(body)
+            pl.when((k * bk) < kvmax_ref[g])(body)
         else:
             body()
 
+    def row_lens():
+        """Per-group valid lengths of this tile's rows: (bg, 1, 1)."""
+        return kvlen_ref[pl.dslice(g * bg, bg)].reshape(bg, 1, 1)
+
     def key_valid():
-        return (k * bk + jax.lax.broadcasted_iota(jnp.int32, (bg, bq, bk), 2)
-                ) < kvlen_ref[0]
+        kpos = k * bk + jax.lax.broadcasted_iota(jnp.int32, (bg, bq, bk), 2)
+        if per_row:  # each group row attends its own request's prefix
+            return kpos < row_lens()
+        return kpos < kvlen_ref[0]
 
     def tile_logit_codes():
         """matmul-1 + div-add: (bg, bq, bk) LOGIT codes."""
@@ -272,6 +289,12 @@ def _attn_kernel(kvlen_ref, s1_ref, qoff_ref, q_ref, k_ref, v_ref, *rest,
             rpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bg, bq, 1), 1)
             gpos = g * bg + jax.lax.broadcasted_iota(jnp.int32, (bg, bq, 1), 0)
             c_row = jnp.where((rpos < sq_real) & (gpos < g_real), c_row, 0)
+            if per_row:
+                # a zero-length group has NO keys: its row sum is 0 and its
+                # xmax sits at the LOGIT minimum, which LOG(0) could still
+                # lift into a nonzero PROB code — such rows are defined as
+                # all-zero output and must not pollute the global cmax
+                c_row = jnp.where(row_lens() > 0, c_row, 0)
             cmax_ref[0, 0] = jnp.maximum(cmax_ref[0, 0], jnp.max(c_row))
 
     # ---------------- pass B: PROB codes . V with the exact oracle scale ---
@@ -301,12 +324,13 @@ def _attn_kernel(kvlen_ref, s1_ref, qoff_ref, q_ref, k_ref, v_ref, *rest,
             cmax_out_ref[0, 0] = cmax_ref[0, 0]
 
 
-def _attn_kernel_single(kvlen_ref, s1_ref, qoff_ref, q_ref, k_ref, v_ref,
-                        *rest, bg: int, bq: int, bk: int,
+def _attn_kernel_single(kvlen_ref, kvmax_ref, s1_ref, qoff_ref, q_ref, k_ref,
+                        v_ref, *rest, bg: int, bq: int, bk: int,
                         g_real: int, sq_real: int, sk_real: int,
                         sqrt_d: Optional[float],
                         e_min: float, octave_step: float, frac_shift: int,
-                        causal: bool, has_mask: bool, dyn_len: bool):
+                        causal: bool, has_mask: bool, dyn_len: bool,
+                        per_row: bool):
     """One-tile fast path: the whole pipeline in a single grid step.
 
     When (heads, Sq, Sk) fit one VMEM tile the two-pass structure degenerates
@@ -340,8 +364,12 @@ def _attn_kernel_single(kvlen_ref, s1_ref, qoff_ref, q_ref, k_ref, v_ref,
     e_vals = exp_val_ref[xc + 128]
     xmax_tile = xc
     if mask_keys:
-        valid = (jax.lax.broadcasted_iota(jnp.int32, (bg, bq, bk), 2)
-                 < kvlen_ref[0])
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (bg, bq, bk), 2)
+        if per_row:
+            lens = kvlen_ref[pl.dslice(0, bg)].reshape(bg, 1, 1)
+            valid = kpos < lens
+        else:
+            valid = kpos < kvlen_ref[0]
         e_vals = jnp.where(valid, e_vals, 0.0)
         xmax_tile = jnp.where(valid, xc, LOGIT_FMT.code_min)
     S = jnp.sum(e_vals, axis=-1, keepdims=True)
@@ -354,6 +382,8 @@ def _attn_kernel_single(kvlen_ref, s1_ref, qoff_ref, q_ref, k_ref, v_ref,
     rpos = jax.lax.broadcasted_iota(jnp.int32, (bg, bq, 1), 1)
     gpos = jax.lax.broadcasted_iota(jnp.int32, (bg, bq, 1), 0)
     c_row = jnp.where((rpos < sq_real) & (gpos < g_real), c_row, 0)
+    if per_row:  # zero-length groups: all-zero rows, no cmax pollution
+        c_row = jnp.where(lens > 0, c_row, 0)
     cmax = jnp.max(c_row)
 
     d = jnp.clip(xc - (L << frac_shift),
@@ -377,7 +407,7 @@ def acam_attention_codes(
     logit_scale: jax.Array,          # () f32: s_q * s_k (div-add numerator)
     mask: Optional[jax.Array] = None,  # (G, Sq, Sk) bool; None => causal/full
     q_offset: jax.Array | int = 0,     # causal decode offset (cache index)
-    kv_len: Optional[jax.Array] = None,  # dynamic valid key prefix (decode)
+    kv_len: Optional[jax.Array] = None,  # () or (G,): valid key prefix(es)
     mode: str = "pot",
     scale_by_sqrt_d: Optional[int] = None,  # d to fold 1/sqrt(d); None = folded
     causal: bool = False,
@@ -397,8 +427,14 @@ def acam_attention_codes(
     existing — keys past it contribute nothing to the row sum, the global
     PROB max, or matmul-2, exactly as if k/v had been sliced to that length
     (the KV-cache decode path: a fixed-shape cache buffer, dynamic fill).
-    ``mode`` accepts every staged softmax config: "pot", "pot_fine",
-    "uniform" (the Fig.-14 ablation's uniform exp quantization).
+    A *(G,) vector* ``kv_len`` gives every grid group its own valid prefix
+    (per-request serving decode): each group's keys past its own length do
+    not exist for that group, zero-length groups output all-zero rows (and
+    contribute nothing to the global PROB max), and block skipping clamps
+    to the per-tile max length, so short requests in a mixed batch stop
+    streaming at their own fill level. ``mode`` accepts every staged
+    softmax config: "pot", "pot_fine", "uniform" (the Fig.-14 ablation's
+    uniform exp quantization).
     """
     interpret = resolve_interpret(interpret)
     exp_val, log_lut, prob_lut, e_min, octave_step, frac_shift = \
@@ -432,46 +468,63 @@ def acam_attention_codes(
         sqrt_d = None
 
     dyn_len = kv_len is not None
-    kv_len_val = (jnp.minimum(jnp.asarray(kv_len, jnp.int32), Sk)
-                  if dyn_len else jnp.asarray(Sk, jnp.int32))
+    per_row = dyn_len and jnp.ndim(kv_len) == 1
+    if per_row:
+        kvv = jnp.asarray(kv_len, jnp.int32)
+        if kvv.shape[0] != G:
+            raise ValueError(f"per-group kv_len must have one entry per "
+                             f"group: got {kvv.shape} for G={G}")
+        # padded groups carry length 0: no keys exist for them, their rows
+        # are all-zero and they never contribute to the global PROB max
+        kv_len_val = jnp.pad(jnp.minimum(kvv, Sk), (0, pad_g))
+        # per group-tile fill frontier: the skip bound for each tile's key
+        # stream (max over the bg groups riding the tile)
+        kv_blockmax = jnp.max(kv_len_val.reshape(ng, bg), axis=1)
+    else:
+        kv_len_val = (jnp.minimum(jnp.asarray(kv_len, jnp.int32), Sk)
+                      if dyn_len else jnp.asarray(Sk, jnp.int32)).reshape(1)
+        kv_blockmax = jnp.broadcast_to(kv_len_val, (ng,))
 
     # When the decode grid streams multiple key blocks, kv_len rides as a
     # *scalar-prefetch* operand: it is available before each grid step, so
     # the k/v BlockSpec index maps can clamp fully-invalid key blocks to
     # the last valid block — the grid keeps a static shape, but blocks past
     # the fill level never DMA a fresh tile and their compute is gated off
-    # in-kernel (`guard_live`). Static grids (prefill, and single-tile
-    # decode, where there is no whole block to skip) keep kv_len as a plain
-    # first operand and pay none of the prefetch machinery; the kernels see
-    # an identical (1,)-shaped ref either way.
+    # in-kernel (`guard_live`). A second prefetched operand carries the
+    # per-group-tile max lengths, so the clamp/skip bound is one scalar
+    # load (``kvmax[g]``) for scalar and per-group fills alike. Static
+    # grids (prefill, and single-tile decode, where there is no whole
+    # block to skip) keep both as plain operands and pay none of the
+    # prefetch machinery; the kernels see identical refs either way.
     use_prefetch = dyn_len and nk > 1
 
     def _im(f):
         """Index map with the right arity: scalar-prefetch index maps
         receive the prefetched refs as trailing arguments."""
         if use_prefetch:
-            return lambda p, g, i, k, kvl: f(p, g, i, k, kvl)
-        return lambda p, g, i, k: f(p, g, i, k, None)
+            return lambda p, g, i, k, kvl, kvm: f(p, g, i, k, kvl, kvm)
+        return lambda p, g, i, k: f(p, g, i, k, None, None)
 
-    spec_scalar = pl.BlockSpec((1, 1), _im(lambda p, g, i, k, kvl: (0, 0)))
-    spec_lut = pl.BlockSpec((256,), _im(lambda p, g, i, k, kvl: (0,)))
+    spec_scalar = pl.BlockSpec((1, 1), _im(lambda p, g, i, k, kvl, kvm: (0, 0)))
+    spec_lut = pl.BlockSpec((256,), _im(lambda p, g, i, k, kvl, kvm: (0,)))
 
     if use_prefetch:
-        def kv_index(p, g, i, k, kvl):
-            last_live = jnp.maximum((kvl[0] + bk - 1) // bk - 1, 0)
+        def kv_index(p, g, i, k, kvl, kvm):
+            last_live = jnp.maximum((kvm[g] + bk - 1) // bk - 1, 0)
             return (g, jnp.minimum(k, last_live), 0)
     else:
-        kv_index = _im(lambda p, g, i, k, kvl: (g, k, 0))
+        kv_index = _im(lambda p, g, i, k, kvl, kvm: (g, k, 0))
 
     in_specs = [
         spec_scalar,                                                # logit scale
         spec_scalar,                                                # q offset
-        pl.BlockSpec((bg, bq, Dp), _im(lambda p, g, i, k, kvl: (g, i, 0))),
+        pl.BlockSpec((bg, bq, Dp), _im(lambda p, g, i, k, kvl, kvm: (g, i, 0))),
         pl.BlockSpec((bg, bk, Dp), kv_index),                       # k
         pl.BlockSpec((bg, bk, Dp), kv_index),                       # v
     ]
     operands = [
-        kv_len_val.reshape(1),  # first: scalar-prefetch arg / plain operand
+        kv_len_val,    # first two: scalar-prefetch args / plain operands
+        kv_blockmax,
         logit_scale.reshape(1, 1),
         jnp.asarray(q_offset, jnp.int32).reshape(1, 1),
         qp, kp, vp,
@@ -479,8 +532,8 @@ def acam_attention_codes(
     if mask is not None:
         mp = pad3(jnp.pad(mask.astype(jnp.int8),
                           ((0, 0), (0, pad_q), (0, pad_k))))
-        in_specs.append(pl.BlockSpec((bg, bq, bk),
-                                     _im(lambda p, g, i, k, kvl: (g, i, k))))
+        in_specs.append(pl.BlockSpec(
+            (bg, bq, bk), _im(lambda p, g, i, k, kvl, kvm: (g, i, k))))
         operands.append(mp)
     in_specs += [spec_lut, spec_lut, spec_lut]
     operands += [exp_val, jnp.asarray(log_lut, jnp.int32),
@@ -492,7 +545,7 @@ def acam_attention_codes(
             g_real=G, sq_real=Sq, sk_real=Sk,
             sqrt_d=sqrt_d, e_min=e_min, octave_step=octave_step,
             frac_shift=frac_shift, causal=causal, has_mask=mask is not None,
-            dyn_len=dyn_len)
+            dyn_len=dyn_len, per_row=per_row)
         scratch = []
         grid = (1, 1, 1, 1)
     else:
@@ -501,7 +554,7 @@ def acam_attention_codes(
             g_real=G, sq_real=Sq, sk_real=Sk,
             sqrt_d=sqrt_d, e_min=e_min, octave_step=octave_step,
             frac_shift=frac_shift, causal=causal, has_mask=mask is not None,
-            dyn_len=dyn_len, skip_blocks=use_prefetch)
+            dyn_len=dyn_len, per_row=per_row, skip_blocks=use_prefetch)
         scratch = [
             pltpu.VMEM((Gp * Sqp, 1), jnp.float32),  # streaming PoT row sums
             pltpu.VMEM((bg, bq, 1), jnp.int32),      # row logit max (pass A)
@@ -513,20 +566,24 @@ def acam_attention_codes(
     out_shape = (jax.ShapeDtypeStruct((Gp, Sqp, Dp), jnp.int32),
                  jax.ShapeDtypeStruct((1, 1), jnp.int32))
     out_specs = (pl.BlockSpec((bg, bq, Dp),
-                              _im(lambda p, g, i, k, kvl: (g, i, 0))),
+                              _im(lambda p, g, i, k, kvl, kvm: (g, i, 0))),
                  spec_scalar)
     if use_prefetch:
         call = pl.pallas_call(
             kernel, out_shape=out_shape,
             grid_spec=pltpu.PrefetchScalarGridSpec(
-                num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+                num_scalar_prefetch=2, grid=grid, in_specs=in_specs,
                 out_specs=out_specs, scratch_shapes=scratch),
             interpret=interpret)
     else:
-        kvlen_spec = pl.BlockSpec((1,), _im(lambda p, g, i, k, kvl: (0,)))
+        kvlen_spec = pl.BlockSpec(
+            kv_len_val.shape, _im(lambda p, g, i, k, kvl, kvm: (0,)))
+        kvmax_spec = pl.BlockSpec(
+            (ng,), _im(lambda p, g, i, k, kvl, kvm: (0,)))
         call = pl.pallas_call(
             kernel, out_shape=out_shape, grid=grid,
-            in_specs=[kvlen_spec] + in_specs, out_specs=out_specs,
+            in_specs=[kvlen_spec, kvmax_spec] + in_specs,
+            out_specs=out_specs,
             scratch_shapes=scratch, interpret=interpret)
     out, cmax = call(*operands)
     return out[:G, :Sq, :D], cmax[0, 0]
@@ -537,7 +594,7 @@ def acam_attention_decode_codes(
     k_codes: jax.Array,   # (G, Smax, D) int8 — fixed-shape KV cache buffer
     v_codes: jax.Array,   # (G, Smax, D) int8
     logit_scale: jax.Array,          # () f32: s_q * s_k
-    kv_len: jax.Array,               # () int32: valid cache prefix, >= 1
+    kv_len: jax.Array,               # () int32 (>= 1) or (G,) per-group
     mask: Optional[jax.Array] = None,  # (G, 1, Smax) bool/int8, 0 => mask out
     mode: str = "pot",
     scale_by_sqrt_d: Optional[int] = None,
@@ -565,6 +622,14 @@ def acam_attention_decode_codes(
     buckets: per-group key validity (pad slots masked to the LOGIT minimum,
     exactly like the staged oracle's additive mask) on top of the prefix
     rule.
+
+    ``kv_len`` may also be a *(G,)* vector — one valid prefix per group
+    (per-request serving: slot-level continuous batching hands every slot
+    its own fill level). Each group then attends exactly its own prefix,
+    zero-length groups are defined as all-zero output rows (a drained or
+    never-filled slot), and the dead-block skip clamps per group tile, so
+    a short request stops streaming where *its* cache ends, not at the
+    batch max.
     """
     if q_codes.shape[1] != 1:
         raise ValueError(f"decode path expects Sq=1, got {q_codes.shape[1]}")
@@ -579,7 +644,7 @@ def acam_attention_decode_gqa_codes(
     k_codes: jax.Array,   # (B*KV, Smax, D) int8 — native-layout cache buffer
     v_codes: jax.Array,   # (B*KV, Smax, D) int8
     logit_scale: jax.Array,          # () f32: s_q * s_k
-    kv_len: jax.Array,               # () int32: valid cache prefix, >= 1
+    kv_len: jax.Array,               # () int32 (>= 1) or (B*KV,) per-group
     mask: Optional[jax.Array] = None,  # (B*KV, rep, Smax), 0 => mask out
     mode: str = "pot",
     scale_by_sqrt_d: Optional[int] = None,
@@ -606,6 +671,12 @@ def acam_attention_decode_gqa_codes(
     KV bytes of the flat entry, with bit-identical (out, cmax) — same
     logits per (head, key), same per-row PoT sums in the same block order,
     same integer cmax reduction (order-free), same requant scale.
+
+    A *(B*KV,)* vector ``kv_len`` gives every KV-head group its own valid
+    prefix — all ``rep`` query rows riding a group's tile share that
+    group's length, which is exactly the per-request semantics (a
+    request's heads all see the same cache fill). See
+    `acam_attention_decode_codes` for the per-row contract.
     """
     if k_codes.shape[0] != q_codes.shape[0]:
         raise ValueError(

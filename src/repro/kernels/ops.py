@@ -109,15 +109,37 @@ def masked_prefix_quantize(x: jax.Array, kv_len: jax.Array, axis: int = 2):
     bit-identical to quantizing the dynamic slice, while invalid entries are
     zeroed (the kernel masks them out anyway; zeroing keeps the buffer
     contents irrelevant). Returns (codes int8, scale f32) with static shapes.
+
+    ``kv_len`` may be a scalar (one prefix for the whole tensor) or a
+    *(B,)* vector of per-row prefixes along the leading batch dim
+    (per-request serving): the scale then reduces over the *union* of the
+    rows' valid prefixes — one tensor-wide scale, exactly the quantizer
+    granularity batched raceit serving already has — and each row's stale
+    tail is zeroed/excluded at its own fill level.
     """
-    idx = jnp.arange(x.shape[axis])
-    valid = jnp.reshape(idx < kv_len,
-                        tuple(x.shape[axis] if d == axis else 1
-                              for d in range(x.ndim)))
+    idx = jnp.reshape(jnp.arange(x.shape[axis]),
+                      tuple(x.shape[axis] if d == axis else 1
+                            for d in range(x.ndim)))
+    kvl = jnp.asarray(kv_len, jnp.int32)
+    if kvl.ndim == 1:  # per-row prefixes along the leading batch dim
+        kvl = kvl.reshape((-1,) + (1,) * (x.ndim - 1))
+    valid = idx < kvl
     amax = jnp.max(jnp.where(valid, jnp.abs(x), 0.0))
     scale = (jnp.maximum(amax, 1e-12) / 127).astype(jnp.float32)
     codes = jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
     return jnp.where(valid, codes, 0), scale
+
+
+def expand_row_lens(kv_len: jax.Array, rep: int) -> jax.Array:
+    """Per-request lengths (B,) -> per-group lengths (B*rep,), b-major.
+
+    The single point of truth for how per-request ``kv_len`` vectors map
+    onto kernel grid groups: every one of a request's ``rep`` groups (its
+    query heads on the flat decode entry, its KV heads on the GQA entry)
+    shares the request's fill level. Scalars pass through untouched.
+    """
+    kvl = jnp.asarray(kv_len, jnp.int32)
+    return jnp.repeat(kvl, rep) if kvl.ndim == 1 else kvl
 
 
 def _decode_quantize_operands(q, k, v, kv_len):
@@ -134,7 +156,7 @@ def raceit_attention_decode_fused(
     q: jax.Array,   # (B, H, 1, D) float — the new token's query
     k: jax.Array,   # (B, H, Smax, D) float — KV cache buffer (fixed shape)
     v: jax.Array,   # (B, H, Smax, D) float
-    kv_len: jax.Array,              # () int32: valid cache prefix, >= 1
+    kv_len: jax.Array,              # () int32 (>= 1) or (B,) per-request
     softmax_mode: str = "pot",
     fold_scale: bool = False,       # True: 1/sqrt(d) already folded into q
     block_k: int | None = None,
@@ -160,16 +182,24 @@ def raceit_attention_decode_fused(
     This wrapper is what the ExecPlan's ``attention_decode`` slot resolves
     to as the ``raceit_fused`` backend (via `models.layers`); it remains
     directly callable for kernel-level tests and benchmarks.
+
+    A *(B,)* vector ``kv_len`` gives every batch row its own valid prefix
+    (per-request serving decode): all H head groups of a row share its
+    length, k/v quantizer scales reduce over the union of the rows' valid
+    prefixes (one tensor-wide scale, the batched-raceit granularity), and
+    zero-length rows output zeros. The ``raceit_fused_rows`` backend is
+    this path.
     """
     from .acam_attention import DEFAULT_BLOCK_G, DEFAULT_BLOCK_K
     B, H, Sq, D = q.shape
     Smax = k.shape[2]
     qq, (k_codes, k_scale), (v_codes, v_scale) = \
         _decode_quantize_operands(q, k, v, kv_len)
+    kvl = expand_row_lens(kv_len, H)
     out32, cmax = acam_attention_decode_codes(
         qq.codes.reshape(B * H, Sq, D), k_codes.reshape(B * H, Smax, D),
         v_codes.reshape(B * H, Smax, D), qq.scale * k_scale,
-        jnp.asarray(kv_len, jnp.int32), mode=softmax_mode,
+        kvl, mode=softmax_mode,
         scale_by_sqrt_d=None if fold_scale else D,
         block_k=block_k or DEFAULT_BLOCK_K, block_g=block_g or DEFAULT_BLOCK_G,
         interpret=interpret)
@@ -184,7 +214,7 @@ def raceit_attention_decode_gqa(
     q: jax.Array,   # (B, H, 1, D) float — the new token's queries, all heads
     k: jax.Array,   # (B, KV, Smax, D) float — native-layout KV cache buffer
     v: jax.Array,   # (B, KV, Smax, D) float
-    kv_len: jax.Array,              # () int32: valid cache prefix, >= 1
+    kv_len: jax.Array,              # () int32 (>= 1) or (B,) per-request
     softmax_mode: str = "pot",
     fold_scale: bool = False,       # True: 1/sqrt(d) already folded into q
     block_k: int | None = None,
@@ -206,6 +236,11 @@ def raceit_attention_decode_gqa(
 
     At rep=1 (MHA) the two entries coincide; the ExecPlan only resolves
     ``raceit_gqa_native`` when ``n_kv_heads < n_heads``.
+
+    A *(B,)* vector ``kv_len`` gives every batch row its own valid prefix
+    (per-request serving decode, the ``raceit_gqa_rows`` backend): all KV
+    groups of a row share its length, scales reduce over the union of
+    valid prefixes, zero-length rows output zeros.
     """
     from .acam_attention import DEFAULT_BLOCK_G, DEFAULT_BLOCK_K
     B, H, Sq, D = q.shape
@@ -217,10 +252,11 @@ def raceit_attention_decode_gqa(
     rep = H // KV
     qq, (k_codes, k_scale), (v_codes, v_scale) = \
         _decode_quantize_operands(q, k, v, kv_len)
+    kvl = expand_row_lens(kv_len, KV)
     out32, cmax = acam_attention_decode_gqa_codes(
         qq.codes.reshape(B, KV, rep, D).reshape(B * KV, rep, D),
         k_codes.reshape(B * KV, Smax, D), v_codes.reshape(B * KV, Smax, D),
-        qq.scale * k_scale, jnp.asarray(kv_len, jnp.int32),
+        qq.scale * k_scale, kvl,
         mode=softmax_mode, scale_by_sqrt_d=None if fold_scale else D,
         block_k=block_k or DEFAULT_BLOCK_K, block_g=block_g or DEFAULT_BLOCK_G,
         interpret=interpret)

@@ -36,6 +36,13 @@ def main():
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--n-new", type=int, default=8)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve with the slot-level continuous batcher "
+                         "(per-request kv_len decode, retire-and-admit "
+                         "mid-stream, one compiled decode step) instead of "
+                         "the bucketed scheduler")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="slot-pool size (--continuous) / bucket size")
     ap.add_argument("--staged-attention", action="store_true",
                     help="opt out of the fused-attention serving default "
                          "(sugar for --exec-plan attention_prefill="
@@ -55,7 +62,8 @@ def main():
     from repro.ckpt import CheckpointManager
     from repro.models import Model
     from repro.models.model import quantize_model_params
-    from repro.serve import BatchScheduler, GenerationEngine, Request
+    from repro.serve import (BatchScheduler, ContinuousBatcher,
+                             GenerationEngine, Request)
 
     overrides = {}
     for kv in args.set:
@@ -85,7 +93,10 @@ def main():
     eng = GenerationEngine(cfg, params, exec_cfg=exec_cfg, max_len=128)
     print("[serve] resolved execution plan:")
     print("\n".join("  " + l for l in eng.explain_plan().splitlines()))
-    sched = BatchScheduler(eng, bucket_size=4)
+    if args.continuous:
+        sched = ContinuousBatcher(eng, n_slots=args.slots)
+    else:
+        sched = BatchScheduler(eng, bucket_size=args.slots)
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         sched.submit(Request(rid, rng.integers(0, cfg.vocab_size,
@@ -94,6 +105,12 @@ def main():
     done = sched.run_all()
     for rid in sorted(done):
         print(f"[serve] req{rid}: {done[rid].result.tolist()}")
+    if args.continuous:
+        occ = (sched.decode_tokens / sched.decode_steps
+               if sched.decode_steps else float("nan"))
+        print(f"[serve] continuous: {sched.prefills} prefills, "
+              f"{sched.decode_steps} decode steps, "
+              f"{occ:.2f} tokens/step occupancy")
 
 
 if __name__ == "__main__":

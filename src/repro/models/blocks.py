@@ -62,6 +62,7 @@ def apply_layer(p: Params, x: jax.Array, *, cfg: ModelConfig,
                 enc_kv: Optional[tuple] = None,
                 pad_lens: Optional[jax.Array] = None,
                 pad_prompt_len: Optional[jax.Array] = None,
+                slot_lens: Optional[jax.Array] = None,
                 ) -> tuple[jax.Array, Any]:
     plan = as_plan(cfg, plan)
     h = layers.apply_norm(p["norm1"], x, cfg)
@@ -70,7 +71,7 @@ def apply_layer(p: Params, x: jax.Array, *, cfg: ModelConfig,
             p["attn"], h, cfg=cfg, plan=plan, positions=positions,
             local=(mixer == "attn_local"),
             cache=cache.get("attn") if cache else None, pad_lens=pad_lens,
-            pad_prompt_len=pad_prompt_len)
+            pad_prompt_len=pad_prompt_len, slot_lens=slot_lens)
         if cache is not None:
             new_cache = {"attn": new_cache}
     elif mixer == "mamba":
@@ -199,12 +200,17 @@ def apply_stack(params: Params, x: jax.Array, *, cfg: ModelConfig,
                 use_remat: bool = False,
                 pad_lens: Optional[jax.Array] = None,
                 pad_prompt_len: Optional[jax.Array] = None,
+                slot_lens: Optional[jax.Array] = None,
                 ) -> tuple[jax.Array, Optional[Params]]:
     """Run the stack. caches is the pytree from init_stack_cache (or None).
 
     ``pad_lens`` (B,) marks per-row left-pad prefixes (batched serving);
     attention layers mask those key slots, SSM mixers currently scan
     through them (see `repro.serve.batching` for the exactness contract).
+    ``slot_lens`` (B,) is the per-slot decode length authority for
+    slot-pool caches (`repro.serve.continuous`): attention layers decode
+    each row at its own fill level; SSM mixers ignore it (their state is
+    overwritten whenever a slot is re-admitted).
     """
     plan = as_plan(cfg, plan)
     P, n_full, specs = layer_plan(cfg, n_layers)
@@ -223,7 +229,7 @@ def apply_stack(params: Params, x: jax.Array, *, cfg: ModelConfig,
                     ffn_kind=ffn_kind, positions=positions,
                     cache=(cache_j if cache_j else None), mesh_ctx=mesh_ctx,
                     enc_kv=None, pad_lens=pad_lens,
-                    pad_prompt_len=pad_prompt_len)
+                    pad_prompt_len=pad_prompt_len, slot_lens=slot_lens)
                 new_cs.append(nc if nc is not None else {})
             return x, tuple(new_cs)
 
@@ -244,7 +250,8 @@ def apply_stack(params: Params, x: jax.Array, *, cfg: ModelConfig,
             params["tail"][t], x, cfg=cfg, plan=plan, mixer=mixer,
             ffn_kind=ffn_kind, positions=positions,
             cache=(cache_t if cache_t else None), mesh_ctx=mesh_ctx,
-            enc_kv=None, pad_lens=pad_lens, pad_prompt_len=pad_prompt_len)
+            enc_kv=None, pad_lens=pad_lens, pad_prompt_len=pad_prompt_len,
+            slot_lens=slot_lens)
         new_tail.append(nc if nc is not None else {})
 
     new_caches = ({"scan": list(new_scan), "tail": new_tail} if has_cache else None)

@@ -334,7 +334,7 @@ def _raceit_fused_decode(q, k, v, kv_len, scale, plan: ExecPlan,
     repeat entirely — this flat path stays registered as ``raceit_fused``
     (the MHA default and the GQA parity partner).
     """
-    from repro.kernels.ops import acam_attention_decode_codes
+    from repro.kernels.ops import acam_attention_decode_codes, expand_row_lens
     b, sq, h, hd = q.shape
     smax, kv = k.shape[1], k.shape[2]
     rep = h // kv
@@ -347,10 +347,11 @@ def _raceit_fused_decode(q, k, v, kv_len, scale, plan: ExecPlan,
     if pad_valid is not None:  # (B, Smax) -> (B*H, 1, Smax)
         mask = jnp.broadcast_to(pad_valid[:, None, None, :],
                                 (b, h, 1, smax)).reshape(b * h, 1, smax)
+    kvl = expand_row_lens(kv_len, h)
     out32, cmax = acam_attention_decode_codes(
         qq.codes.transpose(0, 2, 1, 3).reshape(b * h, sq, hd),
         fold(k_codes), fold(v_codes), qq.scale * k_scale,
-        jnp.asarray(kv_len, jnp.int32), mask=mask,
+        kvl, mask=mask,
         mode=plan.exec_cfg.softmax_mode)
     return _decode_descale(out32, cmax, v_scale, (b, h, sq, hd)
                            ).transpose(0, 2, 1, 3)
@@ -370,7 +371,8 @@ def _raceit_gqa_decode(q, k, v, kv_len, scale, plan: ExecPlan,
     with it rep x of the KV-cache read traffic (see the ``decode_gqa_*``
     rows in BENCH_kernels.json).
     """
-    from repro.kernels.ops import acam_attention_decode_gqa_codes
+    from repro.kernels.ops import (acam_attention_decode_gqa_codes,
+                                   expand_row_lens)
     b, sq, h, hd = q.shape
     smax, kv = k.shape[1], k.shape[2]
     rep = h // kv
@@ -381,11 +383,12 @@ def _raceit_gqa_decode(q, k, v, kv_len, scale, plan: ExecPlan,
     if pad_valid is not None:  # (B, Smax) -> (B*KV, rep, Smax)
         mask = jnp.broadcast_to(pad_valid[:, None, None, :],
                                 (b, kv, rep, smax)).reshape(b * kv, rep, smax)
+    kvl = expand_row_lens(kv_len, kv)
     out32, cmax = acam_attention_decode_gqa_codes(
         qq.codes.reshape(b, h, hd).reshape(b, kv, rep, hd
                                            ).reshape(b * kv, rep, hd),
         to_groups(k_codes), to_groups(v_codes), qq.scale * k_scale,
-        jnp.asarray(kv_len, jnp.int32), mask=mask,
+        kvl, mask=mask,
         mode=plan.exec_cfg.softmax_mode)
     # (b*kv, rep, hd) rows land in head order
     return _decode_descale(out32, cmax, v_scale, (b, sq, h, hd))
@@ -470,11 +473,25 @@ def attention(
     chunk: int = 1024,
     pad_lens: Optional[jax.Array] = None,
     pad_prompt_len: Optional[jax.Array] = None,
+    slot_lens: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, Optional[Params]]:
     """Self- (or cross-) attention with optional KV cache.
 
-    cache = {"k": (B, Smax, KV, hd), "v": ..., "idx": int32 scalar}.
+    cache = {"k": (B, Smax, KV, hd), "v": ..., "idx": int32 scalar — or a
+    (B,) vector of per-slot write indices for slot-pool caches}.
     prefill: x covers [0, S); decode: x is a single new token (Sq=1).
+
+    ``slot_lens`` (B,) int32 is the per-row decode length authority for
+    slot-level continuous batching (`repro.serve.continuous`): row b's
+    query attends exactly the first ``slot_lens[b]`` cache columns
+    (including the token written this step), so every slot decodes at its
+    own fill level and a 0 entry marks an empty slot whose row is dead
+    (no valid key; the raceit kernels define its output as zeros and its
+    stale cache never touches a quantizer scale). When ``slot_lens`` is
+    None the length comes from the cache's own ``idx``, scalar or
+    per-slot vector alike. Per-slot caches also write each row's new k/v
+    at its *own* column (a batched scatter instead of one shared
+    `dynamic_update_slice` offset).
 
     ``pad_lens`` (B,) int32 marks each row's left-pad prefix (mixed-length
     batch buckets, see `repro.serve.batching`): those key slots do not
@@ -526,6 +543,7 @@ def attention(
     new_cache = None
     if cache is not None and cross_kv is None:
         idx = cache["idx"]
+        per_slot = getattr(idx, "ndim", 0) == 1  # slot-pool cache
         L = cache["k"].shape[1]
         if sq >= L:
             # prefill past the buffer (ring caches of local layers): keep the
@@ -533,6 +551,18 @@ def attention(
             # order is irrelevant under the all-valid mask.
             ck = k[:, -L:].astype(cache["k"].dtype)
             cv = v[:, -L:].astype(cache["v"].dtype)
+        elif per_slot:
+            # per-slot write indices: each row's new token lands at its own
+            # column (slots fill independently under continuous batching)
+            if sq != 1:
+                raise ValueError("per-slot caches only take Sq=1 decode "
+                                 "steps; prefill into a slot goes through "
+                                 "a solo prefill + row scatter "
+                                 "(repro.serve.continuous)")
+            pos = idx % L if local else idx
+            rows = jnp.arange(b)
+            ck = cache["k"].at[rows, pos].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, pos].set(v[:, 0].astype(cache["v"].dtype))
         else:
             pos = idx % L if local else idx  # ring write for local layers
             ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
@@ -550,21 +580,27 @@ def attention(
         # (ring buffers: every written slot is inside the window by design,
         # so validity is always a prefix of length min(idx, buffer_len))
         L = k.shape[1]
-        kv_len = jnp.minimum(new_cache["idx"], L)
+        # slot_lens is the per-row length authority when given (continuous
+        # batching: slots at independent fill levels, 0 = empty slot);
+        # otherwise the cache's own post-write index — () or (B,) — rules
+        lens = (jnp.asarray(slot_lens, jnp.int32) if slot_lens is not None
+                else new_cache["idx"])
+        kv_len = jnp.minimum(lens, L)
         pad_valid = None
         if pad_lens is not None:
             # slot s of row b is attendable unless it still holds a pad
             # token: pads occupy slots [0, pad_lens[b]) until the ring
-            # write for token s + L reclaims them (idx > L + s); non-ring
-            # caches have L = max_len >= idx, so the clause is inert there
+            # write for token s + L reclaims them (lens > L + s); non-ring
+            # caches have L = max_len >= lens, so the clause is inert there
             slots = jnp.arange(L)
             pad_valid = ((slots[None, :] >= pad_lens[:, None])
-                         | (new_cache["idx"] > L + slots)[None, :])
+                         | (jnp.reshape(lens, (-1, 1)) > L + slots[None, :]))
             if pad_prompt_len is not None:
                 # prompt overflowed this ring buffer: prefill kept the last
                 # L columns (column plen-L+s at slot s), so slot-space pad
                 # masking would hit real tokens — drop it for this layer
-                pad_valid = pad_valid | (jnp.asarray(pad_prompt_len) > L)
+                pad_valid = pad_valid | (
+                    jnp.reshape(jnp.asarray(pad_prompt_len), (-1, 1)) > L)
         o = plan.attention_decode(q, k, v, kv_len=kv_len, scale=scale,
                                   pad_valid=pad_valid)
     else:

@@ -87,6 +87,27 @@ def _dtype(name: str):
             "float16": jnp.float16}[name]
 
 
+def map_cache_idx(cache, fn):
+    """Apply ``fn`` to every ``idx`` leaf of a cache pytree.
+
+    ``idx`` leaves are the per-layer write indices (`blocks.init_layer_cache`
+    puts one in every attention cache dict); scan-stacked layers carry a
+    leading repetition dim on theirs. Used to turn a fresh cache into a
+    slot pool (scalar idx -> (n_slots,) vectors) and by the continuous
+    batcher's row scatter.
+    """
+    def walk(t):
+        if isinstance(t, dict):
+            return {k: (fn(v) if k == "idx" else walk(v))
+                    for k, v in t.items()}
+        if isinstance(t, list):
+            return [walk(x) for x in t]
+        if isinstance(t, tuple):
+            return tuple(walk(x) for x in t)
+        return t
+    return walk(cache)
+
+
 class Model:
     def __init__(self, cfg: ModelConfig,
                  exec_cfg: "ExecConfig | ExecPlan" = ExecConfig(),
@@ -151,7 +172,8 @@ class Model:
         return params["decoder"]["tail"][t - n_full * P]
 
     def _trunk(self, params: Params, tokens, positions, caches, enc_feats,
-               use_remat: bool, pad_lens=None, pad_prompt_len=None):
+               use_remat: bool, pad_lens=None, pad_prompt_len=None,
+               slot_lens=None):
         cfg = self.cfg
         x = layers.embed(params["embed"], tokens,
                          positions if positions.ndim == 2 else positions[0], cfg)
@@ -175,7 +197,7 @@ class Model:
                     ffn_kind=ffn_kind, positions=positions,
                     cache=cache_t if cache_t else None, mesh_ctx=self.mesh_ctx,
                     enc_kv=enc_kv[t], pad_lens=pad_lens,
-                    pad_prompt_len=pad_prompt_len)
+                    pad_prompt_len=pad_prompt_len, slot_lens=slot_lens)
                 new_tail.append(nc if nc is not None else {})
             new_caches = ({"dec": new_tail, "enc_kv": enc_kv}
                           if caches is not None else None)
@@ -184,7 +206,7 @@ class Model:
                 params["blocks"], x, cfg=cfg, plan=self.plan,
                 positions=positions, caches=caches, mesh_ctx=self.mesh_ctx,
                 use_remat=use_remat, pad_lens=pad_lens,
-                pad_prompt_len=pad_prompt_len)
+                pad_prompt_len=pad_prompt_len, slot_lens=slot_lens)
 
         x = layers.apply_norm(params["final_norm"], x, cfg)
         return x, new_caches
@@ -198,6 +220,25 @@ class Model:
         x, _ = self._trunk(params, tokens, positions, None,
                            batch.get("enc_feats"), use_remat)
         return layers.unembed(params["embed"], x, self.cfg, self.plan)
+
+    def init_slot_cache(self, n_slots: int, max_len: int,
+                        dtype=None) -> Params:
+        """A fixed-shape *slot-pool* cache for continuous batching.
+
+        Identical buffers to `init_cache`, but every per-layer ``idx``
+        leaf is a (n_slots,) vector — one independent write index per
+        slot — so `decode_step` writes each row's new k/v at its own
+        column and slots fill/retire independently
+        (`repro.serve.continuous.ContinuousBatcher` owns the lifecycle).
+        """
+        if self.cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                "slot-pool caches cover decoder-only stacks; encoder-"
+                "decoder serving stays on bucketed batching")
+        cache = self.init_cache(n_slots, max_len, dtype)
+        vec = lambda a: jnp.broadcast_to(a[..., None],
+                                         a.shape + (n_slots,)).copy()
+        return map_cache_idx(cache, vec)
 
     def init_cache(self, batch: int, max_len: int, dtype=None) -> Params:
         cfg = self.cfg
@@ -242,29 +283,47 @@ class Model:
         return logits, new_cache
 
     def decode_step(self, params: Params, token: jax.Array, cache: Params,
-                    pad_lens=None, pad_prompt_len=None):
+                    pad_lens=None, pad_prompt_len=None, slot_lens=None):
         """token: (B, 1). Returns (logits (B,1,V), cache).
 
         Each attention layer's decode step runs whatever backend the plan
         resolved for the ``attention_decode`` slot — the serving default
-        (`ExecConfig.serving()`) is ``raceit_gqa_native`` when the config
-        shares KV heads (``n_kv_heads < n_heads``), else ``raceit_fused``;
-        both stream the cache's valid prefix in one kernel pass
-        (`layers._raceit_gqa_decode` / `layers._raceit_fused_decode`), and
-        ``plan.explain()`` names the backend and any degrade reason.
-        ``pad_lens`` (B,) keeps left-padded bucket rows at their true
-        positions and masks their pad cache slots; ``pad_prompt_len`` (the
-        bucket's padded prompt length, scalar) lets layers whose ring
-        buffer the prompt overflowed drop the slot-space pad mask (the
-        last-L prefill broke the slot == column mapping it relies on).
+        (`ExecConfig.serving()`) is ``raceit_gqa_rows`` when the config
+        shares KV heads (``n_kv_heads < n_heads``), else
+        ``raceit_fused_rows``; both stream each row's valid cache prefix
+        in one kernel pass (`layers._raceit_gqa_decode` /
+        `layers._raceit_fused_decode`), and ``plan.explain()`` names the
+        backend and any degrade reason. ``pad_lens`` (B,) keeps
+        left-padded rows at their true positions and masks their pad cache
+        slots; ``pad_prompt_len`` (the padded prompt length — scalar for a
+        bucket, (B,) for slot pools) lets layers whose ring buffer the
+        prompt overflowed drop the slot-space pad mask (the last-L prefill
+        broke the slot == column mapping it relies on).
+
+        ``slot_lens`` (B,) int32 drives slot-level continuous batching
+        (`repro.serve.continuous`): entry b is the number of valid cache
+        columns for row b *including the token decoded this step* (0 = an
+        empty slot whose row is dead), so each slot decodes at its own
+        fill level against a per-slot-``idx`` cache
+        (`Model.init_slot_cache`) and the pool's shapes — hence the
+        compiled executable — never change as requests come and go.
         """
-        idx = self._cache_index(cache)
-        positions = jnp.broadcast_to(idx, token.shape).astype(jnp.int32)
+        if slot_lens is not None:
+            # per-slot positions: the new token's index among the row's
+            # real tokens (pads excluded below); empty slots clamp to 0
+            idx = jnp.maximum(jnp.asarray(slot_lens, jnp.int32)[:, None] - 1,
+                              0)
+            positions = jnp.broadcast_to(idx, token.shape)
+        else:
+            idx = self._cache_index(cache)
+            positions = jnp.broadcast_to(idx, token.shape).astype(jnp.int32)
         if pad_lens is not None:
-            positions = positions - pad_lens[:, None].astype(jnp.int32)
+            positions = jnp.maximum(
+                positions - pad_lens[:, None].astype(jnp.int32), 0)
         x, new_cache = self._trunk(params, token, positions, cache, None,
                                    False, pad_lens=pad_lens,
-                                   pad_prompt_len=pad_prompt_len)
+                                   pad_prompt_len=pad_prompt_len,
+                                   slot_lens=slot_lens)
         logits = layers.unembed(params["embed"], x, self.cfg, self.plan)
         return logits, new_cache
 

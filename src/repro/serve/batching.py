@@ -20,9 +20,16 @@ until they are overwritten (once a prompt overflows the ring, the
 last-L prefill breaks the slot == column mapping and the decode pad mask
 is dropped for that layer) — hybrid/local configs are near- rather than
 bit-equal in mixed buckets. Each request's result is truncated to its own
-``n_new``; the bucket decodes to the longest request. (Slot-level
-continuous batching — per-slot cache indices — is documented future work
-in DESIGN.md.)
+``n_new``; the bucket decodes to the longest request.
+
+Two structural costs are inherent to bucketing (and are what
+`repro.serve.continuous.ContinuousBatcher` — the slot-pool scheduler —
+removes): a request that finishes early idles its row until the bucket's
+longest request drains, and every distinct (bucket, prompt-length, n_new)
+shape jits *fresh* prefill/decode executables — `run_once` serves one
+bucket per call, but the engine's compiled step is per-shape, not
+per-scheduler. The slot pool pins both shapes once and retires/admits
+mid-stream.
 """
 from __future__ import annotations
 
@@ -53,12 +60,27 @@ class BatchScheduler:
         self.pad_id = pad_id
         self.queue: deque[Request] = deque()
         self.done: dict[int, Request] = {}
+        # occupancy accounting, comparable to ContinuousBatcher's: the
+        # decode engine runs (max n_new - 1) steps per bucket and keeps
+        # (n_new_r - 1) post-prefill tokens per request — early-finished
+        # requests idle their row for the remaining steps, which is
+        # exactly what decode_tokens / decode_steps measures
+        self.model_calls = 0   # prefill + decode executions
+        self.tokens_out = 0    # all kept tokens (incl. prefill's first)
+        self.decode_steps = 0
+        self.decode_tokens = 0
 
     def submit(self, req: Request):
         self.queue.append(req)
 
     def run_once(self) -> list[int]:
-        """Serve one bucket; returns completed request ids."""
+        """Serve one bucket to completion; returns completed request ids.
+
+        One bucket per call, but NOT one compiled step per scheduler: the
+        engine re-jits prefill/decode for every distinct (batch, prompt
+        length, n_new) shape this produces. The slot-pool scheduler
+        (`repro.serve.continuous`) is the pinned-shape path.
+        """
         if not self.queue:
             return []
         batch = [self.queue.popleft()
@@ -77,9 +99,13 @@ class BatchScheduler:
             pad_lens[i] = plen - len(r.prompt)
         out = self.engine.generate(
             prompts, n_new, pad_lens=pad_lens if pad_lens.any() else None)
+        self.model_calls += n_new  # 1 prefill + (n_new - 1) decode steps
+        self.decode_steps += n_new - 1
         finished = []
         for i, r in enumerate(batch):
             r.result = out[i, : r.n_new]
+            self.tokens_out += r.n_new
+            self.decode_tokens += r.n_new - 1
             self.done[r.rid] = r
             finished.append(r.rid)
         return finished

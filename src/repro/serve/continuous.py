@@ -1,0 +1,263 @@
+"""Slot-level continuous batching: retire-and-admit without draining.
+
+`BatchScheduler` (serve/batching.py) is *bucketed*: it pops a bucket,
+decodes the whole bucket to its longest request, and only then admits the
+next one — every early-finishing request idles its row for the rest of the
+bucket, and every distinct (bucket, prompt, n_new) shape compiles fresh
+prefill/decode executables. `ContinuousBatcher` replaces the
+drain-the-bucket loop with a fixed pool of **slots** over one slot-pool KV
+cache (`Model.init_slot_cache`):
+
+    admit    a queued request is prefilled *solo* at the pool's pinned
+             prompt width (left-padded, the existing pad machinery) and its
+             cache row is scattered into a free slot;
+    decode   every step decodes the whole pool with one pinned-shape
+             executable — per-slot lengths ride to the kernels as a
+             ``kv_len`` vector (`slot_lens`), so each slot attends exactly
+             its own fill level and empty slots are dead rows (kv_len 0,
+             defined-zero output, no quantizer-scale pollution);
+    retire   a finished request frees its slot mid-stream; the next queued
+             request is admitted before the following step.
+
+Shapes are pinned by construction — (1, prefill_len) for every admission
+prefill, (n_slots, 1) for every decode step — so the engine compiles each
+exactly once per run, however requests come and go (the bucketed
+scheduler's per-bucket re-jit is gone; `tests/test_serve_continuous.py`
+asserts the single-trace property).
+
+Exactness contract: in digital greedy mode a request's tokens are
+**bitwise identical** to serving it alone — admission prefill is the
+proven left-pad path, and the per-row decode masks make neighbouring
+slots' keys nonexistent (the extra masked columns contribute exact 0.0
+weight). The softenings mirror bucketed batching (serve/batching.py):
+sampling draws differ (per-pool step keys), raceit modes couple slots
+through whole-tensor quantizer scales (per-row kv_len keeps every *stale*
+tail out of the scale window — only live prefixes couple), SSM layers scan
+through pads, and ring-window local layers are near-equal once a prompt
+overflows the window.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .batching import Request
+from .engine import GenerationEngine
+
+__all__ = ["ContinuousBatcher"]
+
+
+def _scatter_row(pool, row, slot):
+    """Write a batch-1 cache's row into a slot of the pool cache.
+
+    Leaves agree on every dim except the batch axis (n_slots vs 1) —
+    scan-stacked leaves carry it at axis 1, tail leaves at axis 0 — so the
+    first differing axis *is* the batch axis and a dynamic_update_slice of
+    the 1-sized row at ``slot`` along it is the whole scatter.
+    """
+    def put(p, r):
+        if p.shape == r.shape:  # n_slots == 1: the row is the pool
+            return r.astype(p.dtype)
+        axis = next(i for i, (a, b) in enumerate(zip(p.shape, r.shape))
+                    if a != b)
+        start = tuple(slot if i == axis else 0 for i in range(p.ndim))
+        return jax.lax.dynamic_update_slice(p, r.astype(p.dtype), start)
+    return jax.tree.map(put, pool, row)
+
+
+# donating the pool lets XLA update the slot row in place — without it
+# every admission would copy the whole (n_slots, max_len, ...) cache per
+# layer just to write one row, and admission cost would scale with pool
+# size on exactly the high-churn traces the scheduler exists for. ``slot``
+# is traced, so one executable serves every slot index.
+_scatter_row_jit = jax.jit(_scatter_row, donate_argnums=(0,))
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    tokens: list          # generated so far (python ints)
+    pad: int              # left-pad columns in this slot's cache
+    length: int           # valid cache columns (pad + real, incl. generated)
+
+
+class ContinuousBatcher:
+    """Continuous batching over a fixed slot pool.
+
+    Same submit/run_all surface as `BatchScheduler`. ``prefill_len`` pins
+    the admission-prefill width; when omitted it locks to the longest
+    prompt queued at the first admission (later prompts must fit —
+    submit-time checked once locked). ``n_slots`` fixes the decode batch.
+
+    Occupancy counters (`decode_steps`, `decode_tokens`, `prefills`,
+    `tokens_out`, `model_calls`) feed the ``serve/continuous_occupancy``
+    benchmark row: decode tokens per decode step on a mixed-length trace
+    is the metric the bucketed scheduler loses to slot idling (prefill is
+    accounted separately — it is a different cost class, and admission
+    prefills here are per-request while bucket prefills are bucket-wide).
+    """
+
+    def __init__(self, engine: GenerationEngine, n_slots: int = 4,
+                 prefill_len: Optional[int] = None, pad_id: int = 0,
+                 rng: Optional[jax.Array] = None):
+        self.engine = engine
+        self.n = n_slots
+        self.prefill_len = prefill_len
+        self.pad_id = pad_id
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.queue: deque[Request] = deque()
+        self.done: dict[int, Request] = {}
+        self.slots: list[Optional[_Slot]] = [None] * n_slots
+        self.cache = None  # slot-pool cache, built at first admission
+        self.tok = np.full((n_slots, 1), pad_id, np.int32)
+        self.decode_steps = 0
+        self.decode_tokens = 0
+        self.prefills = 0
+        self.tokens_out = 0
+
+    # ------------------------------------------------------------ lifecycle
+    @property
+    def model_calls(self) -> int:
+        """Prefill + decode executions — the occupancy denominator."""
+        return self.decode_steps + self.prefills
+
+    def submit(self, req: Request):
+        if self.prefill_len is not None and len(req.prompt) > self.prefill_len:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens exceeds the pool's "
+                f"pinned prefill_len={self.prefill_len}")
+        # the slot must hold the (possibly padded) prompt plus every
+        # generated token; reject at submit time, before the request could
+        # be popped mid-admission
+        width = (self.prefill_len if self.prefill_len is not None
+                 else len(req.prompt))
+        if width + req.n_new > self.engine.max_len:
+            raise ValueError(
+                f"prompt width {width} + n_new={req.n_new} exceeds the "
+                f"engine's max_len={self.engine.max_len}")
+        self.queue.append(req)
+
+    def _lock_prefill_len(self):
+        if self.prefill_len is not None:
+            return
+        width = max(len(r.prompt) for r in self.queue)
+        # joint feasibility before anything is admitted: every queued
+        # request was individually accepted against its own prompt length,
+        # but they must all fit slots of the SHARED width — fail fast here
+        # (nothing is in flight yet and the queue is intact) rather than
+        # mid-stream at some later admission
+        worst = max(r.n_new for r in self.queue)
+        if width + worst > self.engine.max_len:
+            raise ValueError(
+                f"queued requests are jointly infeasible: pool width would "
+                f"lock to {width} (longest prompt) but a request with "
+                f"n_new={worst} then exceeds max_len={self.engine.max_len};"
+                f" pass an explicit prefill_len or split the traffic")
+        self.prefill_len = width
+
+    def _admit(self):
+        """Fill free slots from the queue: solo prefill -> row scatter."""
+        eng = self.engine
+        for slot in range(self.n):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            self._lock_prefill_len()
+            head = self.queue[0]  # validate before popping: a rejected
+            P = len(head.prompt)  # request must not vanish mid-admission
+            if P > self.prefill_len:
+                raise ValueError(
+                    f"prompt of {P} tokens exceeds the pool's pinned "
+                    f"prefill_len={self.prefill_len}")
+            if self.prefill_len + head.n_new > eng.max_len:
+                # possible when the pool width locked to a longer prompt
+                # than this request was submitted against
+                raise ValueError(
+                    f"pinned prefill_len={self.prefill_len} + "
+                    f"n_new={head.n_new} exceeds the engine's "
+                    f"max_len={eng.max_len}")
+            req = self.queue.popleft()
+            pad = self.prefill_len - P
+            prompt = np.full((1, self.prefill_len), self.pad_id, np.int32)
+            prompt[0, pad:] = req.prompt
+            # one pinned (1, prefill_len) prefill executable serves every
+            # admission; pad_lens always rides (0 included) so the trace
+            # never forks on the pad structure
+            row_cache = eng.model.init_cache(1, eng.max_len)
+            logits, row_cache = eng._prefill(
+                eng.params, jnp.asarray(prompt), row_cache,
+                pad_lens=jnp.asarray([pad], jnp.int32))
+            self.prefills += 1
+            if self.cache is None:
+                self.cache = eng.model.init_slot_cache(self.n, eng.max_len)
+            # the solo cache's scalar write indices become 1-vectors so the
+            # scatter sees the same structure the pool carries
+            from repro.models.model import map_cache_idx
+            row_cache = map_cache_idx(
+                row_cache, lambda a: jnp.asarray(a, jnp.int32)[..., None])
+            self.cache = _scatter_row_jit(self.cache, row_cache,
+                                          jnp.int32(slot))
+            self.rng, sub = jax.random.split(self.rng)
+            tok0 = int(np.asarray(eng._sample(logits[:, -1], sub))[0])
+            # length counts cache columns: the prompt is in, the first
+            # generated token is not — the next decode step writes it
+            st = _Slot(req=req, tokens=[tok0], pad=pad,
+                       length=self.prefill_len)
+            self.tokens_out += 1
+            self.tok[slot, 0] = tok0
+            self.slots[slot] = st
+            self._retire_if_done(slot)
+
+    def _retire_if_done(self, slot: int) -> bool:
+        st = self.slots[slot]
+        if st is None or len(st.tokens) < st.req.n_new:
+            return st is None
+        st.req.result = np.asarray(st.tokens[: st.req.n_new], np.int32)
+        self.done[st.req.rid] = st.req
+        self.slots[slot] = None
+        self.tok[slot, 0] = self.pad_id
+        return True
+
+    # ---------------------------------------------------------------- steps
+    def step(self) -> list[int]:
+        """Admit into free slots, then decode the pool once.
+
+        Returns the rids retired by this step (admission can retire
+        n_new=1 requests without a decode).
+        """
+        before = set(self.done)
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if active:
+            eng = self.engine
+            # per-slot lengths INCLUDING this step's write; 0 = empty slot
+            slot_lens = np.zeros(self.n, np.int32)
+            pad_lens = np.zeros(self.n, np.int32)
+            for i in active:
+                slot_lens[i] = self.slots[i].length + 1
+                pad_lens[i] = self.slots[i].pad
+            logits, self.cache = eng._decode(
+                eng.params, jnp.asarray(self.tok), self.cache,
+                jnp.asarray(pad_lens), jnp.int32(self.prefill_len),
+                jnp.asarray(slot_lens))
+            self.decode_steps += 1
+            self.rng, sub = jax.random.split(self.rng)
+            toks = np.asarray(eng._sample(logits[:, -1], sub))
+            for i in active:
+                st = self.slots[i]
+                st.length += 1
+                st.tokens.append(int(toks[i]))
+                self.tokens_out += 1
+                self.decode_tokens += 1
+                self.tok[i, 0] = int(toks[i])
+                self._retire_if_done(i)
+        return sorted(set(self.done) - before)
+
+    def run_all(self) -> dict[int, Request]:
+        while self.queue or any(s is not None for s in self.slots):
+            self.step()
+        return self.done

@@ -2,22 +2,27 @@
 
 `GenerationEngine` serves one batch bucket end-to-end (prefill then greedy /
 temperature sampling decode); `serve/batching.py` schedules request queues
-onto buckets. Operator dispatch goes through the engine's resolved
+onto buckets and `serve/continuous.py` runs slot-level continuous batching
+over the same jitted entry points (per-slot caches via
+`Model.init_slot_cache`, per-slot lengths via ``slot_lens`` on
+`Model.decode_step`). Operator dispatch goes through the engine's resolved
 `repro.exec.ExecPlan` (``engine.plan``, also ``engine.explain_plan()``) —
 the engine itself contains no execution-mode branches.
 
 With the serving default (``ExecConfig.serving()``), the plan resolves the
 ``attention_prefill`` slot to ``raceit_fused`` and ``attention_decode`` to
-``raceit_gqa_native`` for grouped-query configs (``n_kv_heads < n_heads``;
-MHA configs take ``raceit_fused``): both the jitted prefill and the jitted
+``raceit_gqa_rows`` for grouped-query configs (``n_kv_heads < n_heads``;
+MHA configs take ``raceit_fused_rows``): both the jitted prefill and the jitted
 per-token ``_decode`` step run the fused streaming Pallas kernel (one VMEM
 pass over the Fig.-12 pipeline, no (Sq, Sk) intermediates in HBM), and the
 GQA decode keeps the KV cache in its native (B, Smax, KV, hd) layout — the
 rep queries sharing a KV head ride one kernel tile, so cache codes are
 never repeated to H. The decode step attends the KV cache's valid prefix
-via a traced ``kv_len`` scalar — fixed buffer shapes, so the decode
-executable compiles once and is reused for every token; fully invalid key
-blocks are skipped via scalar-prefetched grid bounds. Every
+via a traced ``kv_len`` — a scalar for buckets, a *per-request vector* for
+slot pools (each row decodes at its own fill level) — over fixed buffer
+shapes, so the decode executable compiles once and is reused for every
+token; fully invalid key blocks are skipped via scalar-prefetched grid
+bounds, per group tile when lengths are per-row. Every
 ``softmax_mode`` ("pot", "pot_fine", "uniform") is covered; configs the
 kernels can't serve (``matmul_fidelity="acam"``) resolve to
 ``raceit_staged`` with the reason recorded on the plan (and a one-time

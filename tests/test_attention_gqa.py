@@ -118,12 +118,12 @@ def _plan(rep, **kw):
                         ExecConfig.serving(**kw))
 
 
-@pytest.mark.parametrize("rep", REPS[1:])  # rep=1 resolves to raceit_fused
+@pytest.mark.parametrize("rep", REPS[1:])  # rep=1 resolves to the flat family
 def test_layer_gqa_decode_bitexact_vs_fused_adapter(rng, rep):
     """The plan's default GQA decode == the flat fused adapter, bitwise —
     including per-row pad masks (left-padded buckets)."""
     plan = _plan(rep)
-    assert plan.backend("attention_decode") == "raceit_gqa_native"
+    assert plan.backend("attention_decode") == "raceit_gqa_rows"
     B, Smax, KV, hd = 3, 64, 2, 16
     H = KV * rep
     fill = 40
@@ -148,21 +148,26 @@ def test_layer_gqa_decode_bitexact_vs_fused_adapter(rng, rep):
 
 
 def test_resolution_gqa_vs_mha():
-    """serving() prefers the GQA-native decode exactly when KV heads are
-    shared; MHA degrades one step to raceit_fused with a recorded reason
-    and *no* warning (same dataflow, nothing lost)."""
+    """serving() prefers the per-row GQA-native decode exactly when KV
+    heads are shared; MHA degrades within the fused family to the per-row
+    flat kernel with a recorded reason and *no* warning (same dataflow,
+    nothing lost). The scalar-kv_len variants stay registered for pins."""
     import warnings
     gqa = resolve_plan(_gqa_cfg(4), ExecConfig.serving())
-    assert gqa.backend("attention_decode") == "raceit_gqa_native"
+    assert gqa.backend("attention_decode") == "raceit_gqa_rows"
     assert gqa.op("attention_decode").reason is None
     with warnings.catch_warnings():
         warnings.simplefilter("error")  # any RuntimeWarning fails the test
         mha = resolve_plan(_gqa_cfg(1), ExecConfig.serving())
     op = mha.op("attention_decode")
-    assert op.backend == "raceit_fused"
-    assert op.requested == "raceit_gqa_native"
+    assert op.backend == "raceit_fused_rows"
+    assert op.requested == "raceit_gqa_rows"
     assert "KV-head sharing" in op.reason
-    assert "raceit_gqa_native" in mha.explain()
+    assert "raceit_gqa_rows" in mha.explain()
+    # the pre-rows backends remain pinnable for A/B
+    pinned = resolve_plan(_gqa_cfg(4), ExecConfig.serving().with_ops(
+        attention_decode="raceit_gqa_native"))
+    assert pinned.backend("attention_decode") == "raceit_gqa_native"
 
 
 def test_gqa_native_not_used_without_fused_attention():

@@ -1,0 +1,255 @@
+"""Per-row kv_len decode: every row at its own fill level, bit-exactly.
+
+The tentpole contract of the per-row decode kernels
+(`acam_attention_decode_codes` / `acam_attention_decode_gqa_codes` with a
+kv_len *vector*): each batch row attends exactly the first ``kv_len[b]``
+cache columns — keys past a row's own fill level are *nonexistent* for
+that row (no exp weight, no PROB-max contribution, no matmul-2 term, no
+quantizer-scale contribution), a zero-length row outputs exact zeros (the
+empty-slot case, riding the PR 4 fully-masked-row semantics), and the
+shared int8 scales reduce over the *union* of the rows' valid prefixes
+(the batched-raceit quantizer granularity).
+
+Oracles:
+
+* a **per-row staged oracle** built from the same core stages
+  (`quantize_tensor` / `masked_prefix_quantize` / `acam_softmax`) with the
+  per-row probability rows computed on each row's own slice and one shared
+  PROB re-quantization across rows — exactly the Fig.-12 pipeline with
+  per-request lengths;
+* the **flat kernel at the max fill** with each row's tail masked out via
+  the pad-mask operand — bit-identical when the buffers carry zeros past
+  each row's fill (the masked-to-LOGIT-min exp weight is exactly 0), which
+  is also the `raceit_fused`/`raceit_gqa_native` backends' degrade path
+  for vector kv_len.
+"""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ExecConfig, ModelConfig
+from repro.core.ops import PROB_FMT
+from repro.core.quant import quantize_tensor
+from repro.core.softmax import acam_softmax
+from repro.exec import resolve_plan
+from repro.kernels.ops import (masked_prefix_quantize,
+                               raceit_attention_decode_fused,
+                               raceit_attention_decode_gqa)
+from repro.models import layers
+
+LENS = (96, 33, 1, 0)  # one full, one partial, one single-key, one EMPTY row
+
+
+def _assert_parity(got, want, v):
+    """Bit-exact, with the <=1 PROB ulp acceptance bound as the hard floor
+    (the jitted wrappers' final descale multiply may fuse differently than
+    the eagerly-evaluated oracle — same bound as tests/test_attention_gqa)."""
+    got, want = np.asarray(got), np.asarray(want)
+    if np.array_equal(got, want):
+        return
+    ulp = PROB_FMT.scale * float(jnp.max(jnp.abs(v)))
+    np.testing.assert_allclose(got, want, atol=ulp, rtol=0)
+
+
+def _case(rng, rep, B=4, KV=2, Smax=96, D=16, lens=LENS, std=1.5):
+    """Native-layout decode case with per-request fills, zeroed tails."""
+    H = KV * rep
+    mk = lambda s: jnp.asarray(rng.normal(0, std, s), jnp.float32)
+    q = mk((B, H, 1, D))
+    k = jnp.zeros((B, KV, Smax, D), jnp.float32)
+    v = jnp.zeros((B, KV, Smax, D), jnp.float32)
+    for b, ln in enumerate(lens):
+        k = k.at[b, :, :ln].set(mk((KV, ln, D)))
+        v = v.at[b, :, :ln].set(mk((KV, ln, D)))
+    return q, k, v, jnp.asarray(lens, jnp.int32)
+
+
+def _perrow_staged_oracle(q, k, v, lens, mode):
+    """The Fig.-12 stages with per-row lengths and shared quantizers.
+
+    q (B, H, 1, D); k/v (B, H, Smax, D) with zeroed tails. Probabilities
+    are computed per row on its own slice (keys past the row's fill do
+    not exist), then re-quantized with ONE tensor-wide scale — the exact
+    contract the per-row kernel implements online.
+    """
+    B, H, _, D = q.shape
+    Smax = k.shape[2]
+    qq = quantize_tensor(q, bits=8)
+    k_codes, k_scale = masked_prefix_quantize(k, lens, axis=2)
+    v_codes, v_scale = masked_prefix_quantize(v, lens, axis=2)
+    s = jnp.einsum("bhqd,bhcd->bhqc", qq.codes.astype(jnp.int32),
+                   k_codes.astype(jnp.int32)).astype(jnp.float32)
+    logits = s * (qq.scale * k_scale) / jnp.sqrt(jnp.float32(D))
+    probs = jnp.zeros((B, H, 1, Smax), jnp.float32)
+    for b, ln in enumerate(np.asarray(lens)):
+        if ln == 0:
+            continue  # no keys exist: the row's probabilities are empty
+        pr = acam_softmax(logits[b:b + 1, :, :, :int(ln)], axis=-1, mode=mode)
+        probs = probs.at[b:b + 1, :, :, :int(ln)].set(pr)
+    pq = quantize_tensor(probs, bits=8)  # shared scale; zero rows stay zero
+    out = jnp.einsum("bhqc,bhcd->bhqd", pq.codes.astype(jnp.int32),
+                     v_codes.astype(jnp.int32)).astype(jnp.float32)
+    return out * (pq.scale * v_scale)
+
+
+# ---------------------------------------------------------------------------
+# kernel wrappers: per-row == per-row staged oracle == flat-at-max + mask
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rep", (1, 4))
+@pytest.mark.parametrize("mode", ["pot", "pot_fine", "uniform"])
+def test_perrow_matrix_bitexact_vs_staged_oracle(rng, mode, rep):
+    q, k, v, lens = _case(rng, rep)
+    kf, vf = (jnp.repeat(a, rep, axis=1) for a in (k, v))
+    want = _perrow_staged_oracle(q, kf, vf, lens, mode)
+    got_flat = raceit_attention_decode_fused(q, kf, vf, lens,
+                                             softmax_mode=mode, block_k=32)
+    _assert_parity(got_flat, want, vf)
+    got_gqa = raceit_attention_decode_gqa(q, k, v, lens, softmax_mode=mode,
+                                          block_k=32)
+    np.testing.assert_array_equal(np.asarray(got_gqa), np.asarray(got_flat))
+
+
+def test_perrow_empty_row_outputs_zeros(rng):
+    """kv_len 0 = an empty slot: defined-zero output, and the dead row must
+    not pollute the shared PROB re-quantization of the live rows.
+
+    The dead row's *query* is zeroed first: queries are a live activation
+    tensor whose whole-tensor int8 scale spans every row (the documented
+    batched-raceit coupling); per-row kv_len removes the dead row's
+    *cache* and *probability* contributions, which is what is tested."""
+    q, k, v, lens = _case(rng, rep=4)
+    q = q.at[3].set(0.0)
+    out = raceit_attention_decode_gqa(q, k, v, lens, block_k=32)
+    np.testing.assert_array_equal(np.asarray(out[3]), 0.0)
+    # live rows match the dead row being absent entirely (different batch
+    # shape -> different executable, so the <=1-ulp descale bound applies)
+    sub = raceit_attention_decode_gqa(q[:3], k[:3], v[:3], lens[:3],
+                                      block_k=32)
+    _assert_parity(out[:3], sub, v[:3])
+
+
+@pytest.mark.parametrize("rep", (1, 2))
+def test_perrow_bitexact_vs_flat_kernel_at_max_fill(rng, rep):
+    """With zeroed tails, per-row kv_len == the flat kernel at the shared
+    max fill with each row's tail pad-masked (the degrade path the
+    scalar backends serve a vector through) — masked keys carry exactly
+    zero exp weight, so 'masked' and 'nonexistent' coincide here."""
+    lens = (96, 33, 17, 1)  # the flat+mask path needs >= 1 live key per row
+    q, k, v, lv = _case(rng, rep, lens=lens)
+    plan = resolve_plan(_gqa_cfg(rep), ExecConfig.serving())
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    ql = q.transpose(0, 2, 1, 3)   # (B, 1, H, hd) layer layout
+    kl = k.transpose(0, 2, 1, 3)   # (B, Smax, KV, hd)
+    vl = v.transpose(0, 2, 1, 3)
+    Smax = kl.shape[1]
+    tail_mask = jnp.arange(Smax)[None, :] < lv[:, None]  # (B, Smax)
+    got = layers._raceit_fused_decode(ql, kl, vl, lv, scale, plan)
+    # masked_prefix_quantize at max fill sweeps stale tails into the scale
+    # window; the tails are zeroed here, so the scales coincide and the
+    # comparison is exact
+    want = layers._raceit_fused_decode(ql, kl, vl, jnp.max(lv), scale, plan,
+                                       pad_valid=tail_mask)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_perrow_ignores_stale_tails(rng):
+    """Garbage past each row's own fill level must touch nothing — not the
+    outputs, not the shared quantizer scales (the flat-at-max degrade
+    cannot promise the latter; the per-row kernels do)."""
+    q, k, v, lens = _case(rng, rep=2, lens=(96, 33, 17, 5))
+    out_clean = raceit_attention_decode_gqa(q, k, v, lens, block_k=32)
+    k_dirty = k.at[1, :, 33:].set(1e4).at[3, :, 5:].set(-1e4)
+    v_dirty = v.at[1, :, 33:].set(-1e4).at[3, :, 5:].set(1e4)
+    out_dirty = raceit_attention_decode_gqa(q, k_dirty, v_dirty, lens,
+                                            block_k=32)
+    np.testing.assert_array_equal(np.asarray(out_clean), np.asarray(out_dirty))
+
+
+def test_perrow_uniform_vector_equals_scalar(rng):
+    """A constant vector is the scalar path, bitwise (flat callers degrade
+    cleanly through the per-row backends)."""
+    q, k, v, _ = _case(rng, rep=2, lens=(33, 33, 33, 33))
+    kf, vf = (jnp.repeat(a, 2, axis=1) for a in (k, v))
+    vec = jnp.full((4,), 33, jnp.int32)
+    got = raceit_attention_decode_fused(q, kf, vf, vec, block_k=32)
+    want = raceit_attention_decode_fused(q, kf, vf, jnp.int32(33), block_k=32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_perrow_kv_len_is_traced_one_compile(rng):
+    """One executable serves every per-row fill pattern."""
+    q, k, v, lens = _case(rng, rep=2)
+    fn = lambda lv: raceit_attention_decode_gqa(q, k, v, lv, block_k=32)
+    fn(lens)
+    traces = raceit_attention_decode_gqa._cache_size()
+    fn(jnp.asarray((5, 96, 0, 12), jnp.int32))
+    assert raceit_attention_decode_gqa._cache_size() == traces
+
+
+# ---------------------------------------------------------------------------
+# layer adapters + plan dispatch
+# ---------------------------------------------------------------------------
+
+def _gqa_cfg(rep, kv=2):
+    return ModelConfig(name=f"pr{rep}", n_layers=1, d_model=kv * rep * 16,
+                       n_heads=kv * rep, n_kv_heads=kv, d_ff=64,
+                       vocab_size=64, head_dim=16, param_dtype="float32",
+                       compute_dtype="float32")
+
+
+def test_layer_adapters_perrow_bitexact_and_plan_dispatch(rng):
+    """The rows backends dispatch through the plan with a vector kv_len and
+    match the flat backends' max-fill degrade bitwise (zeroed tails)."""
+    rep, B, Smax, KV, hd = 4, 4, 64, 2, 16
+    plan = resolve_plan(_gqa_cfg(rep), ExecConfig.serving())
+    assert plan.backend("attention_decode") == "raceit_gqa_rows"
+    H = KV * rep
+    scale = 1.0 / math.sqrt(hd)
+    lens = jnp.asarray((64, 20, 7, 0), jnp.int32)
+    mk = lambda s: jnp.asarray(rng.normal(0, 1, s), jnp.float32)
+    q = mk((B, 1, H, hd))
+    k = jnp.zeros((B, Smax, KV, hd), jnp.float32)
+    v = jnp.zeros((B, Smax, KV, hd), jnp.float32)
+    for b, ln in enumerate(np.asarray(lens)):
+        k = k.at[b, :int(ln)].set(mk((int(ln), KV, hd)))
+        v = v.at[b, :int(ln)].set(mk((int(ln), KV, hd)))
+    got = plan.attention_decode(q, k, v, kv_len=lens, scale=scale)
+    rows_flat = layers._raceit_fused_decode(q, k, v, lens, scale, plan)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(rows_flat))
+    # the scalar backends' degrade (max fill + per-row mask) agrees on
+    # zeroed tails — pin them explicitly and dispatch the same call
+    for pin in ("raceit_gqa_native", "raceit_fused", "raceit_staged",
+                "digital"):
+        p2 = resolve_plan(_gqa_cfg(rep),
+                          ExecConfig.serving().with_ops(attention_decode=pin))
+        assert p2.backend("attention_decode") == pin
+        out = p2.attention_decode(q, k, v, kv_len=lens, scale=scale)
+        if pin.startswith("raceit_gqa") or pin == "raceit_fused":
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(got))
+        else:  # float-score paths: per-row masks, different numerics
+            assert np.asarray(out).shape == np.asarray(got).shape
+    # empty slot row through the plan default is exact zeros
+    np.testing.assert_array_equal(np.asarray(got[3]), 0.0)
+
+
+def test_digital_and_staged_backends_accept_vector_kv_len(rng):
+    """The float decode paths are per-row-native: a vector kv_len masks
+    each row at its own fill, matching per-row slicing."""
+    B, Smax, KV, hd, H = 3, 32, 2, 8, 4
+    plan = resolve_plan(_gqa_cfg(2, kv=2).replace(head_dim=hd,
+                                                  d_model=H * hd),
+                        ExecConfig())
+    scale = 1.0 / math.sqrt(hd)
+    lens = jnp.asarray((32, 11, 4), jnp.int32)
+    mk = lambda s: jnp.asarray(rng.normal(0, 1, s), jnp.float32)
+    q, k, v = mk((B, 1, H, hd)), mk((B, Smax, KV, hd)), mk((B, Smax, KV, hd))
+    out = plan.attention_decode(q, k, v, kv_len=lens, scale=scale)
+    for b, ln in enumerate(np.asarray(lens)):
+        ref = plan.attention_decode(q[b:b + 1], k[b:b + 1, :int(ln)],
+                                    v[b:b + 1, :int(ln)],
+                                    kv_len=jnp.int32(int(ln)), scale=scale)
+        np.testing.assert_allclose(np.asarray(out[b]), np.asarray(ref[0]),
+                                   rtol=1e-5, atol=1e-6)
