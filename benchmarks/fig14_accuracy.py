@@ -6,16 +6,28 @@ RACE-IT inference path with (a) PoT-quantized exp (paper config), (b) our
 beyond-paper fractional PoT, (c) straightforward uniform quantization — the
 paper reports ~0.2% loss for (a) and catastrophic (~47%) loss for (c).
 Metric: next-token top-1 accuracy on held-out batches.
+
+`run_sweep` extends the same harness along the *device-variation* axis
+(`repro.hw.noise`): the trained model is evaluated through the
+``raceit_noisy_*`` backends at sigma scales of the nominal noise profile
+(0 = ideal devices, 1 = nominal, 4 = worst_case), emitting
+``accuracy_noise/`` BENCH rows as error-% (lower is better, floored at
+0.1 so the trend gate's ratio stays finite). Two hard in-bench gates,
+both SystemExit on violation: sigma=0 must be *bit-identical* to the
+clean raceit path (full-logits comparison, not accuracy), and error must
+be monotone non-decreasing in sigma up to a 2pp eval-noise tolerance.
 """
 from __future__ import annotations
 
 import time
 
 
-def run(steps: int = 300) -> list[tuple]:
+def _train(steps: int):
+    """Train the Fig.-14 tiny LM once; returns (cfg, params, accuracy_fn,
+    train_us_per_step, final_metrics). ``accuracy_fn(exec_cfg, n_eval)``
+    is held-out next-token top-1 through that ExecConfig."""
     import jax
     import jax.numpy as jnp
-    import numpy as np
 
     from repro.configs import get_config
     from repro.configs.base import ExecConfig
@@ -57,6 +69,13 @@ def run(steps: int = 300) -> list[tuple]:
             tot += pred.size
         return hits / tot
 
+    return cfg, params, accuracy, train_us / steps, m
+
+
+def run(steps: int = 300) -> list[tuple]:
+    from repro.configs.base import ExecConfig
+
+    cfg, params, accuracy, train_us, m = _train(steps)
     results = {
         "fp32": accuracy(ExecConfig(mode="digital")),
         "raceit_pot": accuracy(ExecConfig(mode="raceit", softmax_mode="pot")),
@@ -72,7 +91,91 @@ def run(steps: int = 300) -> list[tuple]:
     drop_uni = results["fp32"] - results["raceit_uniform"]
     print(f"  PoT drop {drop_pot*100:.2f}pp (paper ~0.2pp) | uniform drop "
           f"{drop_uni*100:.2f}pp (paper ~47pp collapse)")
-    return [("fig14/train", train_us / steps, f"loss={float(m['loss']):.3f}"),
+    return [("fig14/train", train_us, f"loss={float(m['loss']):.3f}"),
             ("fig14/acc_pot", 0.0, f"{results['raceit_pot']*100:.2f}%"),
             ("fig14/acc_uniform", 0.0,
              f"{results['raceit_uniform']*100:.2f}%")]
+
+
+def run_sweep(steps: int = 300, sigmas=(0.0, 0.5, 1.0, 2.0, 4.0),
+              n_eval: int = 4) -> list[tuple]:
+    """Accuracy-under-device-noise sweep on the raceit_noisy_* backends.
+
+    ``sigmas`` are scales of the nominal noise profile
+    (`repro.hw.noise.NoiseConfig.scaled`). Emits one
+    ``accuracy_noise/err_pct_sigma<s>`` row per point (error-%, lower is
+    better) and enforces the two structural gates documented in the
+    module docstring with SystemExit — a CI failure, not a drifting
+    number.
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import ExecConfig
+    from repro.data import SyntheticLM
+    from repro.hw.noise import NoiseConfig
+    from repro.models import Model
+
+    cfg, params, accuracy, _, _ = _train(steps)
+    base = ExecConfig(mode="raceit", softmax_mode="pot")
+
+    # gate 1: sigma=0 noisy plan is BIT-identical to the clean raceit plan
+    # (full logits, one eval batch — stronger than matching accuracy)
+    ev_clean = Model(cfg, base)
+    ev_zero = Model(cfg, dataclasses.replace(base,
+                                             noise=NoiseConfig.scaled(0.0)))
+    b = {k: jnp.asarray(v) for k, v in
+         SyntheticLM(vocab_size=128, seq_len=64, global_batch=16,
+                     seed=999).next_batch().items()}
+    lg_clean = np.asarray(jax.jit(
+        lambda p, bt: ev_clean.forward(p, bt, use_remat=False))(params, b))
+    lg_zero = np.asarray(jax.jit(
+        lambda p, bt: ev_zero.forward(p, bt, use_remat=False))(params, b))
+    if not np.array_equal(lg_clean, lg_zero):
+        raise SystemExit(
+            "accuracy_noise: sigma=0 raceit_noisy_* logits are NOT "
+            "bit-identical to the clean raceit path — the zero-noise "
+            "no-op contract of repro.exec.noisy is broken")
+    print("# accuracy-vs-noise sweep (sigma = scale of the nominal profile)")
+    print("  sigma=0 bit-parity vs clean raceit path: OK")
+
+    rows, prev_err = [], 0.0
+    for lam in sigmas:
+        ec = dataclasses.replace(base, noise=NoiseConfig.scaled(float(lam)))
+        acc = accuracy(ec, n_eval=n_eval)
+        err = (1.0 - acc) * 100.0
+        print(f"  sigma {lam:>4g}x nominal: acc {acc*100:6.2f}%  "
+              f"err {err:6.2f}%")
+        # gate 2: more device noise must not (meaningfully) help — error
+        # is monotone non-decreasing up to a 2pp eval-noise tolerance
+        # against the running max
+        if err < prev_err - 2.0:
+            raise SystemExit(
+                f"accuracy_noise: error DROPPED by "
+                f"{prev_err - err:.2f}pp at sigma={lam:g} — "
+                f"accuracy-vs-noise should be monotone (±2pp tolerance); "
+                f"the injection is likely not reaching the compute path")
+        prev_err = max(prev_err, err)
+        # BENCH value is error-% (lower is better, matching the trend
+        # gate's direction), floored at 0.1 so a perfect score can never
+        # poison the gate's prev/cur ratio with a zero
+        rows.append((f"accuracy_noise/err_pct_sigma{lam:g}",
+                     max(err, 0.1), f"acc_{acc*100:.2f}pct"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--sweep", action="store_true",
+                    help="run the accuracy-vs-device-noise sweep instead of "
+                         "the Fig. 14 quantization comparison")
+    args = ap.parse_args()
+    out = run_sweep(steps=args.steps) if args.sweep else run(steps=args.steps)
+    for name, val, extra in out:
+        print(f"BENCH {name} {val:.3f} {extra}")

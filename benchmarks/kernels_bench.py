@@ -317,6 +317,26 @@ def _serving_occupancy_rows():
     ]
 
 
+def _noise_sweep_rows():
+    """Fast accuracy-under-device-noise smoke (the CI noise gate).
+
+    Delegates to `benchmarks.fig14_accuracy.run_sweep` at a reduced
+    (steps, sigma-grid, eval) budget: a 3-point sweep over the nominal
+    noise profile. The sweep's own SystemExit gates do the hard checking
+    — sigma=0 must be bit-identical to the clean raceit path and error
+    must be monotone non-decreasing in sigma — so a broken zero-noise
+    contract or an injection that misses the compute path fails the bench
+    outright; the emitted ``accuracy_noise/`` rows (error-%, lower is
+    better) ride the artifact for cross-PR trend visibility.
+    """
+    try:  # benchmarks/ is a namespace dir: script runs see it as sys.path[0]
+        from benchmarks import fig14_accuracy
+    except ImportError:
+        import fig14_accuracy
+    return fig14_accuracy.run_sweep(steps=120, sigmas=(0.0, 1.0, 4.0),
+                                    n_eval=2)
+
+
 def run() -> list[tuple]:
     import jax.numpy as jnp
     import numpy as np
@@ -346,6 +366,7 @@ def run() -> list[tuple]:
     rows.extend(_decode_gqa_rows(rng))
     rows.extend(_decode_perrow_rows(rng))
     rows.extend(_serving_occupancy_rows())
+    rows.extend(_noise_sweep_rows())
 
     for name, us, derived in rows:
         print(f"  {name}: {us:.0f} us/call ({derived})")
@@ -356,11 +377,12 @@ def write_artifact(rows, path: Path = ARTIFACT) -> None:
     """name -> value for every tracked row (machine-readable across PRs).
 
     ``kernel/`` rows are us/call; ``serve/`` rows are deterministic
-    scheduler-occupancy counters (decode steps per 1000 tokens) — both
+    scheduler-occupancy counters (decode steps per 1000 tokens);
+    ``accuracy_noise/`` rows are held-out error-% under device noise — all
     lower-is-better, so one trend gate covers the board.
     """
     payload = {name: round(us, 1) for name, us, _ in rows
-               if name.startswith(("kernel/", "serve/"))}
+               if name.startswith(("kernel/", "serve/", "accuracy_noise/"))}
     path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
     print(f"  wrote {path.name}: {len(payload)} rows")
 

@@ -32,8 +32,16 @@ def main():
                     help="pin raceit op slots to named backends, e.g. "
                          "--exec-plan attention_decode=raceit_staged "
                          "(see repro.exec.registry.OP_SLOTS)")
+    ap.add_argument("--noise", default=None, metavar="PRESET|SIGMA",
+                    help="run the raceit arm on device-varied arrays: a "
+                         "repro.hw.noise preset (clean/nominal/worst_case) "
+                         "or a float scale of the nominal profile")
     args = ap.parse_args()
     overrides = parse_exec_plan(args.exec_plan)
+    noise = None
+    if args.noise is not None:
+        from repro.hw.noise import NoiseConfig
+        noise = NoiseConfig.parse(args.noise)
 
     cfg = get_config("gpt2-large").replace(
         name="serve-demo", n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
@@ -65,7 +73,8 @@ def main():
     # decode steps; --exec-plan pins slots to other named backends
     for mode, ec in (("digital", ExecConfig()),
                      ("raceit", ExecConfig.serving(softmax_mode="pot",
-                                                   op_overrides=overrides))):
+                                                   op_overrides=overrides,
+                                                   noise=noise))):
         eng = GenerationEngine(cfg, params, exec_cfg=ec, max_len=64)
         print(f"      {mode} plan: " + "; ".join(
             f"{op.slot}={op.backend}" for op in eng.plan.ops

@@ -142,6 +142,17 @@ class ExecConfig:
     # ("lm_head", "raceit_q8"), ...). Unsupported or unknown names degrade
     # (never raise) and show up in plan.explain(). Use .with_ops() sugar.
     op_overrides: tuple = ()
+    # device-variation injection: a frozen `repro.hw.noise.NoiseConfig`
+    # (None = ideal devices). Typed as object to keep this module free of
+    # hw imports; being a field of this frozen dataclass puts it in the
+    # resolve_plan lru-cache key, so two configs differing only in noise
+    # resolve to distinct plans and distinct jit closures. In raceit mode
+    # a non-None noise routes the matmul/activation/softmax/attention
+    # slots to the `raceit_noisy_*` backends; the fused kernels model
+    # ideal devices and degrade to the noisy staged path with the reason
+    # recorded on the plan. Launchers parse `--noise <preset|sigma>` into
+    # this field.
+    noise: Optional[object] = None
 
     def with_ops(self, **slot_backends: str) -> "ExecConfig":
         """Pin op slots to named backends: ``ec.with_ops(lm_head="raceit_q8")``.

@@ -26,11 +26,40 @@ from .quant import FixedPointFormat, PoTFormat, ScaledFormat
 
 Format = Union[FixedPointFormat, ScaledFormat, PoTFormat]
 
-__all__ = ["RangeArrays", "RectArrays", "AcamFunction", "Acam2VarFunction"]
+__all__ = ["RangeArrays", "RectArrays", "AcamFunction", "Acam2VarFunction",
+           "jitter_codes"]
 
 
 def _fmt_num_codes(fmt: Format) -> int:
     return fmt.num_codes
+
+
+def _fmt_code_bounds(fmt: Format) -> tuple:
+    """Clip bounds for jittered codes of this format (signed domain for
+    fixed-point/scaled formats, [0, num_codes) for value-ordered PoT)."""
+    if isinstance(fmt, PoTFormat):
+        return 0, fmt.num_codes - 1
+    return fmt.code_min, fmt.code_max
+
+
+def jitter_codes(codes: jax.Array, sigma: float, key: jax.Array,
+                 code_min: int, code_max: int) -> jax.Array:
+    """Additive integer Gaussian jitter on stored/searched codes.
+
+    The input-referred form of ACAM threshold-voltage variation: shifting a
+    searched position by -e is equivalent to shifting every stored window
+    edge by +e, so one rounded N(0, sigma) draw per element models the
+    aggregate edge drift of the cells that element hits. Accumulation is in
+    int32 (an int8 code + jitter must saturate at the clip, not wrap), and
+    ``sigma <= 0`` returns the input unchanged — zero-noise paths stay
+    bit-identical to the clean ones at zero cost.
+    """
+    if sigma <= 0.0:
+        return codes
+    n = jnp.round(sigma * jax.random.normal(key, jnp.shape(codes)))
+    out = jnp.clip(codes.astype(jnp.int32) + n.astype(jnp.int32),
+                   code_min, code_max)
+    return out.astype(codes.dtype)
 
 
 def _fmt_to_position(fmt: Format, codes):
@@ -78,6 +107,24 @@ class RangeArrays:
         if self.encoded:
             out = gray_decode(out, self.out_bits)
         return out
+
+    def jittered(self, sigma: float, key: jax.Array) -> "RangeArrays":
+        """Per-cell Gaussian jitter on the compiled match-window bounds.
+
+        The direct (per-edge) form of threshold-voltage variation: every
+        stored [lo, hi) edge moves independently by round(N(0, sigma))
+        positions. Windows whose jittered edges cross (lo >= hi) simply
+        never match — a cell whose window collapsed, which is exactly the
+        analog failure mode. ``sigma <= 0`` returns self unchanged.
+        """
+        if sigma <= 0.0:
+            return self
+        kl, kh = jax.random.split(key)
+        dlo = np.asarray(jnp.round(sigma * jax.random.normal(
+            kl, self.lo.shape)), np.int32)
+        dhi = np.asarray(jnp.round(sigma * jax.random.normal(
+            kh, self.hi.shape)), np.int32)
+        return dataclasses.replace(self, lo=self.lo + dlo, hi=self.hi + dhi)
 
 
 @dataclasses.dataclass
@@ -175,6 +222,27 @@ class AcamFunction:
                 return _fmt_from_position(self.out_fmt, pattern)
             return pattern
         return jnp.take(jnp.asarray(self._lut), pos, axis=0)
+
+    def apply_codes_noisy(self, codes: jax.Array, key: jax.Array,
+                          in_sigma: float = 0.0,
+                          out_sigma: float = 0.0) -> jax.Array:
+        """`apply_codes` under device variation.
+
+        ``in_sigma`` is the input-referred threshold jitter (the aggregate
+        of per-edge `RangeArrays.jittered` drift), applied in the
+        value-ordered position domain; ``out_sigma`` is readout/sense
+        noise on the produced output codes, clipped to the output format.
+        Bit-identical to `apply_codes` when both sigmas are zero.
+        """
+        if in_sigma <= 0.0 and out_sigma <= 0.0:
+            return self.apply_codes(codes)
+        kin, kout = jax.random.split(key)
+        pos = _fmt_to_position(self.in_fmt, codes)
+        pos = jitter_codes(pos, in_sigma, kin, 0,
+                           _fmt_num_codes(self.in_fmt) - 1)
+        out = jnp.take(jnp.asarray(self._lut), pos, axis=0)
+        return jitter_codes(out, out_sigma, kout,
+                            *_fmt_code_bounds(self.out_fmt))
 
     # ---- float-domain convenience (quantize -> LUT -> dequantize) ----
     def __call__(self, x: jax.Array, hw: bool = False) -> jax.Array:

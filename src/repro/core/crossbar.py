@@ -26,7 +26,8 @@ import jax.numpy as jnp
 
 from .quant import QuantizedTensor, quantize_tensor
 
-__all__ = ["CrossbarConfig", "bit_sliced_matmul", "crossbar_linear"]
+__all__ = ["CrossbarConfig", "bit_sliced_matmul", "crossbar_linear",
+           "noisy_crossbar_linear"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,3 +125,24 @@ def crossbar_linear(
     if bias is not None:
         yf = yf + bias
     return yf
+
+
+def noisy_crossbar_linear(
+    x: jax.Array,
+    wq: QuantizedTensor,
+    noise,
+    key: jax.Array,
+    bias: jax.Array | None = None,
+    cfg: CrossbarConfig = CrossbarConfig(),
+) -> jax.Array:
+    """`crossbar_linear` on a device-varied array: the stored weight codes
+    are perturbed by conductance spread + stuck-at cells in the ISAAC
+    unsigned domain the array actually programs
+    (`repro.hw.noise.perturb_weight_codes`), then the bit-sliced MVM runs
+    unchanged — the variation lives in the conductances, not the dataflow.
+    Bit-identical to `crossbar_linear` when the noise knobs are zero.
+    """
+    from repro.hw.noise import perturb_weight_codes
+    codes = perturb_weight_codes(wq.codes, noise, key, bits=cfg.weight_bits)
+    return crossbar_linear(x, QuantizedTensor(codes, wq.scale, wq.bits),
+                           bias, cfg)

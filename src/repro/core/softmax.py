@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from . import ops
 from .ops import LOGIT_FMT, LOG_OUT_FMT
 
-__all__ = ["acam_softmax", "softmax_reference"]
+__all__ = ["acam_softmax", "noisy_acam_softmax", "softmax_reference"]
 
 
 def softmax_reference(x: jax.Array, axis: int = -1) -> jax.Array:
@@ -54,4 +54,41 @@ def acam_softmax(x: jax.Array, axis: int = -1, mode: str = "pot", hw: bool = Fal
     d = xc - (L << (LOGIT_FMT.frac_bits - LOG_OUT_FMT.frac_bits))
     d = jnp.clip(d, LOGIT_FMT.code_min, LOGIT_FMT.code_max)
     p = final_op.apply_codes(d, hw=hw)  # step 5
+    return final_op.out_fmt.decode(p)
+
+
+def noisy_acam_softmax(x: jax.Array, axis: int = -1, mode: str = "pot",
+                       noise=None, key=None) -> jax.Array:
+    """`acam_softmax` under ACAM device variation — same Fig. 8 dataflow,
+    with the three ACAM stages (EXP, LOG, final EXP) evaluated through
+    `AcamFunction.apply_codes_noisy`: ``noise.acam_sigma`` of
+    input-referred threshold jitter and ``noise.readout_sigma`` of output
+    readout noise each (the CMOS adder lanes of steps 2 and 4 stay exact —
+    they are digital). ``noise`` is a `repro.hw.noise.NoiseConfig`;
+    ``key`` the injection site's derived key. Delegates to the clean
+    (jitted) `acam_softmax` when both sigmas are zero, so zero-noise
+    outputs are bit-identical.
+    """
+    if noise is None or (noise.acam_sigma <= 0.0
+                         and noise.readout_sigma <= 0.0):
+        return acam_softmax(x, axis=axis, mode=mode)
+    exp_name = {"pot": "exp_pot", "pot_fine": "exp_pot_fine",
+                "uniform": "exp_uniform"}[mode]
+    exp_op = ops.get_op(exp_name)
+    log_op = ops.get_op("log_fine" if mode == "pot_fine" else "log")
+    final_op = ops.get_op("exp_prob")
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    xc = LOGIT_FMT.encode(x)
+    e_codes = exp_op.apply_codes_noisy(xc, k1, noise.acam_sigma,
+                                       noise.readout_sigma)
+    e_vals = exp_op.out_fmt.decode(e_codes)
+    S = jnp.sum(e_vals, axis=axis, keepdims=True)
+    s_codes = log_op.in_fmt.encode(S)
+    L = log_op.apply_codes_noisy(s_codes, k2, noise.acam_sigma,
+                                 noise.readout_sigma)
+    d = xc - (L << (LOGIT_FMT.frac_bits - LOG_OUT_FMT.frac_bits))
+    d = jnp.clip(d, LOGIT_FMT.code_min, LOGIT_FMT.code_max)
+    p = final_op.apply_codes_noisy(d, k3, noise.acam_sigma,
+                                   noise.readout_sigma)
     return final_op.out_fmt.decode(p)

@@ -42,6 +42,14 @@ _SEQ_NOTE = (f"falls back to the digital path beyond "
 
 
 def _fused_supported(model_cfg, exec_cfg):
+    if exec_cfg.noise is not None:
+        # the streaming Pallas kernels model ideal devices; device-noise
+        # injection rides the staged raceit_noisy_* path, so a fused
+        # request under an active NoiseConfig degrades with this reason
+        # recorded on the plan (and the one-time warning)
+        return ("device-noise injection active (ExecConfig.noise); fused "
+                "kernels model ideal devices — noise rides the staged "
+                "raceit_noisy_* path")
     return fused_attention_supported(fidelity=exec_cfg.matmul_fidelity,
                                      softmax_mode=exec_cfg.softmax_mode)
 
@@ -402,3 +410,11 @@ def _lm_head_raceit_q8(plan, x, w):
     if isinstance(w, QuantizedWeight):
         return _resident_matmul(plan, x, w, None).astype(jnp.float32)
     return _matmul_raceit_int(plan, x, w, None).astype(jnp.float32)
+
+
+# the raceit_noisy_* family registers itself against the same slots; it
+# lives in its own module but is part of the built-in registry surface,
+# and its impls reuse the staged helpers above — importing it here (after
+# every helper is defined) keeps `_ensure_backends_loaded` the single
+# load point.
+from . import noisy  # noqa: E402,F401

@@ -1,0 +1,207 @@
+"""The ``raceit_noisy_*`` backend family: device variation behind the plan.
+
+Every backend here is its clean ``raceit_*`` counterpart evaluated on
+*varied* devices, with the variation drawn from the frozen
+`repro.hw.noise.NoiseConfig` riding on ``ExecConfig.noise``:
+
+  slot              backend               injection sites
+  ----------------  --------------------  ---------------------------------
+  matmul            raceit_noisy_int      stored weight codes (conductance
+                                          spread + stuck cells, ISAAC
+                                          unsigned domain)
+  activation        raceit_noisy_lut      ACAM LUT in/out codes (threshold
+                                          jitter + readout noise)
+  softmax           raceit_noisy_acam     the three ACAM stages of the
+                                          Fig. 8 dataflow
+  attention_prefill raceit_noisy_staged   q/k/v/prob codes + ACAM softmax,
+                                          optional per-row faults
+  attention_decode  raceit_noisy_staged   decode softmax + per-row faults
+
+Determinism: every site derives its key as ``site_key(noise, tag, shape)``
+— no ambient RNG, no key threading — so one (seed, NoiseConfig) pair
+reproduces bit-identical noisy outputs across runs, and the draws
+constant-fold under jit into a *static* per-executable fault map (a real
+chip's variation does not re-roll between inferences).
+
+Zero-noise contract: with all knobs at zero every helper below is a
+Python-level no-op, so a ``NoiseConfig()`` plan is bit-identical to the
+clean backends (tests/test_exec_noise.py enumerates the registry and
+asserts it). The fused Pallas kernels model ideal devices; under an
+active NoiseConfig they degrade here with the reason recorded on the
+plan.
+
+``fault_rate`` (zero in every preset) NaNs out whole batch rows in the
+noisy attention backends — the hook the fail-safe serving path
+(`repro.serve.continuous`) detects and retires per-slot.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops as acam_ops
+from repro.core.ops import LOGIT_FMT
+from repro.core.quant import quantize_tensor
+from repro.core.softmax import noisy_acam_softmax
+from repro.hw.noise import (fault_rows, jitter_codes, perturb_weight_codes,
+                            site_key)
+from repro.models.layers import QuantizedWeight, _attn_quantize
+
+from .backends import (RACEIT_ATTENTION_MAX_KEYS, _SEQ_NOTE, _decode_combine,
+                       _decode_scores, _decode_valid, _mask_array,
+                       _prefill_digital, _resident_matmul)
+from .registry import register
+
+# int8 code-domain clip bounds for jittered operand codes (symmetric
+# max-abs quantization emits [-127, 127]; the clip only has to contain it)
+_I8_LO, _I8_HI = -128, 127
+
+
+def _noise_supported(model_cfg, exec_cfg):
+    if exec_cfg.noise is None:
+        return ("no NoiseConfig on ExecConfig.noise (ideal devices) — the "
+                "clean raceit_* backends are the same numerics without the "
+                "injection plumbing")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# matmul — crossbar DPE lane on a device-varied array
+# ---------------------------------------------------------------------------
+
+@register("matmul", "raceit_noisy_int", supported=_noise_supported,
+          notes="raceit_int on perturbed stored weights (conductance "
+                "spread + stuck cells); bit-identical at zero noise")
+def _matmul_noisy_int(plan, x, w, bias):
+    nz = plan.exec_cfg.noise
+    ec = plan.exec_cfg
+    if isinstance(w, QuantizedWeight):
+        # resident int8 crossbar weight: the codes ARE the programmed
+        # conductances — perturb them, keep the calibration scale
+        codes = perturb_weight_codes(
+            w.codes, nz, site_key(nz, "matmul_resident", w.codes.shape),
+            bits=8)
+        return _resident_matmul(plan, x, QuantizedWeight(codes, w.scale,
+                                                         w.shape), bias)
+    k = w.shape[0]
+    w2 = w.reshape(k, -1)
+    xq = quantize_tensor(x.astype(jnp.float32), bits=ec.act_bits)
+    wq = quantize_tensor(w2.astype(jnp.float32), bits=ec.weight_bits, axis=1)
+    codes = perturb_weight_codes(wq.codes, nz,
+                                 site_key(nz, "matmul_w", w2.shape),
+                                 bits=ec.weight_bits)
+    y32 = jax.lax.dot(xq.codes.reshape(-1, k).astype(jnp.int32),
+                      codes.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+    y = y32.astype(jnp.float32) * (xq.scale * wq.scale)
+    y = y.reshape(*x.shape[:-1], *w.shape[1:]).astype(x.dtype)
+    if bias is not None:
+        y = y + bias.reshape(w.shape[1:]).astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# activation — Compute-ACAM LUT under threshold/readout noise
+# ---------------------------------------------------------------------------
+
+@register("activation", "raceit_noisy_lut", supported=_noise_supported,
+          notes="raceit_lut through AcamFunction.apply_codes_noisy")
+def _activation_noisy_lut(plan, x, name=None):
+    nz = plan.exec_cfg.noise
+    name = name or plan.model_cfg.activation
+    op = acam_ops.get_op(name if name in ("gelu", "silu") else "gelu")
+    xf = x.astype(jnp.float32)
+    out = op.apply_codes_noisy(
+        op.in_fmt.encode(xf),
+        site_key(nz, f"activation_{op.name}", xf.shape),
+        nz.acam_sigma, nz.readout_sigma)
+    return op.out_fmt.decode(out).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# softmax — Fig. 8 dataflow with noisy ACAM stages
+# ---------------------------------------------------------------------------
+
+@register("softmax", "raceit_noisy_acam", supported=_noise_supported,
+          notes="raceit_acam with the three ACAM stages under variation "
+                "(the CMOS adder lanes stay exact)")
+def _softmax_noisy_acam(plan, logits, axis):
+    nz = plan.exec_cfg.noise
+    return noisy_acam_softmax(logits, axis=axis,
+                              mode=plan.exec_cfg.softmax_mode, noise=nz,
+                              key=site_key(nz, "softmax", logits.shape))
+
+
+# ---------------------------------------------------------------------------
+# attention — staged Fig. 12 pipeline on varied devices (+ row faults)
+# ---------------------------------------------------------------------------
+
+def _noisy_staged_attention(q, k, v, mask, scale, plan):
+    """`layers._raceit_staged_attention` with ACAM threshold jitter on the
+    quantized operand codes and the noisy Fig. 8 softmax. Stage-for-stage
+    identical at zero sigma (every injection helper early-returns)."""
+    nz = plan.exec_cfg.noise
+    sig = nz.acam_sigma
+    qq, kq, vq = _attn_quantize(q, k, v, scale)
+    qc = jitter_codes(qq.codes, sig, site_key(nz, "attn_q", qq.codes.shape),
+                      _I8_LO, _I8_HI)
+    kc = jitter_codes(kq.codes, sig, site_key(nz, "attn_k", kq.codes.shape),
+                      _I8_LO, _I8_HI)
+    vc = jitter_codes(vq.codes, sig, site_key(nz, "attn_v", vq.codes.shape),
+                      _I8_LO, _I8_HI)
+    s32 = plan.dd_matmul(qc.transpose(0, 2, 1, 3),            # (B,H,Sq,hd)
+                         kc.transpose(0, 2, 3, 1))            # (B,H,hd,Sk)
+    logits = s32.astype(jnp.float32) * (qq.scale * kq.scale)
+    logits = jnp.where(mask[:, None], logits, LOGIT_FMT.min_value)
+    probs = noisy_acam_softmax(logits, axis=-1,
+                               mode=plan.exec_cfg.softmax_mode, noise=nz,
+                               key=site_key(nz, "attn_softmax", logits.shape))
+    pq = quantize_tensor(probs, bits=8)
+    pc = jitter_codes(pq.codes, sig, site_key(nz, "attn_p", pq.codes.shape),
+                      _I8_LO, _I8_HI)
+    o32 = plan.dd_matmul(pc,                                  # (B,H,Sq,Sk)
+                         vc.transpose(0, 2, 1, 3))            # (B,H,Sk,hd)
+    out = o32.astype(jnp.float32) * (pq.scale * vq.scale)
+    return out.transpose(0, 2, 1, 3)                          # (B,Sq,H,hd)
+
+
+def _inject_row_faults(out, nz, tag):
+    # per-row catastrophic faults: NaN the whole row. The site key hangs
+    # off (seed, tag, batch) alone, so the fail-safe tests can recompute
+    # the exact fault map from the slot count without model dims.
+    rows = fault_rows(nz, site_key(nz, tag, (out.shape[0],)), out.shape[0])
+    if rows is None:
+        return out
+    return jnp.where(rows[:, None, None, None], jnp.nan, out)
+
+
+@register("attention_prefill", "raceit_noisy_staged",
+          supported=_noise_supported, notes=_SEQ_NOTE)
+def _prefill_noisy_staged(plan, q, k, v, *, scale, q_offset, kind, window,
+                          chunk, probs_dtype=None, pad_lens=None):
+    nz = plan.exec_cfg.noise
+    sk = k.shape[1]
+    if sk > RACEIT_ATTENTION_MAX_KEYS:
+        return _prefill_digital(plan, q, k, v, scale=scale, q_offset=q_offset,
+                                kind=kind, window=window, chunk=chunk,
+                                probs_dtype=probs_dtype, pad_lens=pad_lens)
+    mask = _mask_array(kind, q.shape[0], q.shape[1], sk, q_offset, window,
+                       pad_lens)
+    out = _noisy_staged_attention(q, k, v, mask, scale, plan)
+    return _inject_row_faults(out, nz, "prefill_fault")
+
+
+@register("attention_decode", "raceit_noisy_staged",
+          supported=_noise_supported,
+          notes="float scores + noisy ACAM softmax; fully row-independent, "
+                "so injected faults stay bitwise-confined to their row")
+def _decode_noisy_staged(plan, q, k, v, *, kv_len, scale, pad_valid=None):
+    nz = plan.exec_cfg.noise
+    s = _decode_scores(q, k, k.shape[2], scale)
+    valid = _decode_valid(k, kv_len, pad_valid)
+    s = jnp.where(valid[:, None, None, None], s, LOGIT_FMT.min_value)
+    pr = noisy_acam_softmax(s, axis=-1, mode=plan.exec_cfg.softmax_mode,
+                            noise=nz, key=site_key(nz, "decode_softmax",
+                                                   s.shape))
+    out = _decode_combine(pr, v)
+    return _inject_row_faults(out, nz, "decode_fault")

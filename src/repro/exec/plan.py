@@ -173,8 +173,18 @@ def _default_chain(slot: str, exec_cfg: ExecConfig) -> tuple[str, ...]:
     """Preference order for a slot under this ExecConfig (head = requested)."""
     if exec_cfg.mode != "raceit":  # digital baseline (and unknown modes,
         return _BASELINE[slot]     # which degrade below with a reason)
+    noisy = exec_cfg.noise is not None
     fused_first = ("raceit_fused", "raceit_staged", "digital")
     staged_first = ("raceit_staged", "digital")
+    if noisy:
+        # device-noise injection rides the staged path: the noisy backends
+        # head the chains, and a fused_attention=True request keeps the
+        # fused names at the head so the degrade (the fused kernels model
+        # ideal devices) is *recorded* on the plan — plus the one-time
+        # warning below, via the existing machinery.
+        staged_first = ("raceit_noisy_staged",) + staged_first
+        fused_first = ("raceit_fused", "raceit_noisy_staged",
+                       "raceit_staged", "digital")
     # decode prefers the per-row GQA-native kernel: per-request kv_len
     # vectors (slot-level continuous batching) decode each row at its own
     # fill level, and scalar-kv_len callers pass through unchanged. The
@@ -185,9 +195,12 @@ def _default_chain(slot: str, exec_cfg: ExecConfig) -> tuple[str, ...]:
     gqa_first = ("raceit_gqa_rows", "raceit_gqa_native",
                  "raceit_fused_rows") + fused_first
     return {
-        "matmul": ("raceit_int",),
-        "activation": ("raceit_lut",),
-        "softmax": ("raceit_acam",),
+        "matmul": (("raceit_noisy_int", "raceit_int") if noisy
+                   else ("raceit_int",)),
+        "activation": (("raceit_noisy_lut", "raceit_lut") if noisy
+                       else ("raceit_lut",)),
+        "softmax": (("raceit_noisy_acam", "raceit_acam") if noisy
+                    else ("raceit_acam",)),
         "dd_matmul": (("acam", "int") if exec_cfg.matmul_fidelity == "acam"
                       else ("int",)),
         "attention_prefill": (fused_first if exec_cfg.fused_attention

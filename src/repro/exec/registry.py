@@ -87,7 +87,13 @@ def get_backend(slot: str, name: str) -> Optional[BackendSpec]:
 
 
 def list_backends(slot: Optional[str] = None) -> dict:
-    """slot -> {name: BackendSpec} (or one slot's mapping)."""
+    """slot -> {name: BackendSpec} (or one slot's mapping).
+
+    Forces the lazy backend import first: callers enumerating the registry
+    (tests, plan error messages) must see the full population even when no
+    plan has been resolved yet in the process.
+    """
+    from . import backends  # noqa: F401
     if slot is not None:
         return dict(_BACKENDS[slot])
     return {s: dict(b) for s, b in _BACKENDS.items()}

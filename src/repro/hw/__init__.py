@@ -1,1 +1,2 @@
-from . import area, gce, params, simulator  # noqa: F401
+from . import area, gce, noise, params, simulator  # noqa: F401
+from .noise import NoiseConfig  # noqa: F401

@@ -1,0 +1,179 @@
+"""Device-variation noise models for the RACE-IT analog substrate.
+
+Every ``raceit_*`` backend so far models *ideal* devices; this module is
+the fidelity layer behind the ``raceit_noisy_*`` backend family
+(`repro.exec.noisy`): a frozen `NoiseConfig` carried on
+``ExecConfig.noise`` names how far the simulated devices deviate from the
+compiled programs, per physical mechanism:
+
+  acam_sigma          ACAM threshold-voltage variation, in input-code LSBs.
+                      A stored match window's edges drift, which is
+                      equivalent (input-referred) to jittering the searched
+                      code — `repro.core.acam.jitter_codes` /
+                      ``AcamFunction.apply_codes_noisy`` apply it; the
+                      per-cell form is ``RangeArrays.jittered``.
+  conductance_sigma   Crossbar cell-conductance variation for the MVM path,
+                      as a fraction of the full conductance range. Applied
+                      to stored weight codes in the ISAAC unsigned offset
+                      domain (`perturb_weight_codes`).
+  stuck_rate          Fraction of crossbar cells stuck at G_min/G_max
+                      (half each), same unsigned domain.
+  readout_sigma       ACAM output/readout noise, in output-code LSBs (the
+                      match-line sense path), applied to produced codes.
+  fault_rate          Per-row catastrophic-fault probability on the noisy
+                      attention backends — rows go non-finite. Zero in all
+                      presets; it exists to drive the fail-safe serving
+                      path (`repro.serve.continuous`) and its tests.
+
+Determinism contract: injection sites never draw from an ambient RNG.
+Each derives its key as ``site_key(noise, tag, shape)`` — a pure function
+of (``NoiseConfig.seed``, a site tag string, the operand shape) — so the
+same seed + config reproduces bit-identical noisy outputs across runs,
+and under jit the draws constant-fold into the executable: a given
+device's fault map is *static* across calls, which is the physics (a
+chip's variation does not re-roll between inferences). Two same-shape
+call sites with the same tag share a fault map — a documented
+simplification (the simulated arrays are reused across layers, as the
+paper's pipelined cores are).
+
+Every helper is a Python-level no-op when its knobs are zero, so a
+zero-sigma ``NoiseConfig`` is bit-identical to the clean backends
+(tests/test_exec_noise.py asserts this for every registered noisy
+backend).
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.acam import jitter_codes  # noqa: F401  (re-export: the
+#   input-referred ACAM jitter primitive lives with the ACAM semantics)
+
+__all__ = ["NoiseConfig", "site_key", "jitter_codes",
+           "perturb_weight_codes", "fault_rows", "PRESETS"]
+
+# the "nominal" device-variation profile; worst_case = 4x nominal. The
+# magnitudes are plausible for ReRAM ACAM/crossbar arrays (sub-LSB
+# threshold jitter, ~1% conductance spread, ~0.1% stuck cells) — they are
+# sweep anchors for Fig.-14-style accuracy-vs-noise curves, not measured
+# silicon data.
+_NOMINAL = dict(acam_sigma=0.5, conductance_sigma=0.01,
+                stuck_rate=0.001, readout_sigma=0.5)
+PRESETS = {
+    "clean": {k: 0.0 for k in _NOMINAL},
+    "nominal": dict(_NOMINAL),
+    "worst_case": {k: 4.0 * v for k, v in _NOMINAL.items()},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseConfig:
+    """Frozen (hashable) device-noise knobs; rides on ``ExecConfig.noise``.
+
+    Being frozen matters: `repro.exec.plan.resolve_plan` is lru-cached
+    over the full ExecConfig, so two configs differing only in noise
+    resolve to distinct plans (and distinct jit closures).
+    """
+
+    acam_sigma: float = 0.0         # input-code LSBs
+    conductance_sigma: float = 0.0  # fraction of the full code range
+    stuck_rate: float = 0.0         # fraction of cells (half off, half on)
+    readout_sigma: float = 0.0      # output-code LSBs
+    fault_rate: float = 0.0         # per-row catastrophic decode faults
+    seed: int = 0
+
+    @property
+    def is_clean(self) -> bool:
+        return (self.acam_sigma <= 0.0 and self.conductance_sigma <= 0.0
+                and self.stuck_rate <= 0.0 and self.readout_sigma <= 0.0
+                and self.fault_rate <= 0.0)
+
+    @classmethod
+    def preset(cls, name: str, seed: int = 0) -> "NoiseConfig":
+        return cls(seed=seed, **PRESETS[name])
+
+    @classmethod
+    def scaled(cls, lam: float, seed: int = 0) -> "NoiseConfig":
+        """``lam`` x the nominal profile — the sweep axis of the
+        accuracy-vs-noise benchmarks (0 = clean, 1 = nominal, 4 =
+        worst_case)."""
+        return cls(seed=seed, **{k: lam * v for k, v in _NOMINAL.items()})
+
+    @classmethod
+    def parse(cls, spec, seed: int = 0) -> "NoiseConfig":
+        """``--noise`` surface: a preset name or a float sigma scale."""
+        if isinstance(spec, (int, float)) and not isinstance(spec, bool):
+            return cls.scaled(float(spec), seed=seed)
+        s = str(spec).strip().lower()
+        if s in PRESETS:
+            return cls.preset(s, seed=seed)
+        try:
+            lam = float(s)
+        except ValueError:
+            raise ValueError(
+                f"unknown noise spec {spec!r}: expected a preset "
+                f"({sorted(PRESETS)}) or a float scale of the nominal "
+                f"profile") from None
+        return cls.scaled(lam, seed=seed)
+
+
+def site_key(noise: NoiseConfig, tag: str, shape: tuple = ()) -> jax.Array:
+    """Deterministic per-injection-site PRNG key.
+
+    Pure in (seed, tag, shape): the tag names the physical site ("matmul_w",
+    "decode_softmax", ...), the static shape dims distinguish differently
+    sized arrays at the same site. No global state, no key threading — a
+    noisy run is exactly reproducible from its NoiseConfig alone.
+    """
+    key = jax.random.PRNGKey(noise.seed)
+    key = jax.random.fold_in(key, zlib.crc32(tag.encode()) & 0x7FFFFFFF)
+    for dim in shape:
+        key = jax.random.fold_in(key, int(dim))
+    return key
+
+
+def perturb_weight_codes(codes: jax.Array, noise: NoiseConfig,
+                         key: jax.Array, bits: int = 8) -> jax.Array:
+    """Crossbar conductance variation + stuck-at cells on stored weights.
+
+    Works in the ISAAC unsigned offset domain the crossbar actually
+    programs (`repro.core.crossbar` stores ``code + 2^(bits-1)`` as a
+    conductance): Gaussian conductance spread of
+    ``conductance_sigma * full_range`` codes, then ``stuck_rate`` of the
+    cells pinned to G_min (stuck-off) or G_max (stuck-on), half each.
+    Returns the perturbed signed codes; a no-op when both knobs are zero.
+    """
+    if noise.conductance_sigma <= 0.0 and noise.stuck_rate <= 0.0:
+        return codes
+    off = 1 << (bits - 1)
+    top = (1 << bits) - 1
+    u = codes.astype(jnp.int32) + off  # unsigned conductance domain
+    kg, ks = jax.random.split(key)
+    if noise.conductance_sigma > 0.0:
+        g = jnp.round(noise.conductance_sigma * top
+                      * jax.random.normal(kg, u.shape)).astype(jnp.int32)
+        u = jnp.clip(u + g, 0, top)
+    if noise.stuck_rate > 0.0:
+        r = jax.random.uniform(ks, u.shape)
+        u = jnp.where(r < noise.stuck_rate / 2, 0, u)  # stuck-off (G_min)
+        u = jnp.where((r >= noise.stuck_rate / 2)
+                      & (r < noise.stuck_rate), top, u)  # stuck-on (G_max)
+    return (u - off).astype(codes.dtype)
+
+
+def fault_rows(noise: NoiseConfig, key: jax.Array,
+               n_rows: int) -> Optional[jax.Array]:
+    """(n_rows,) bool mask of catastrophically faulted batch rows.
+
+    Deterministic Bernoulli(``fault_rate``) per row; None when the rate is
+    zero (the common case — presets never set it). The noisy attention
+    decode backend NaNs out faulted rows, which is what the fail-safe
+    serving path detects and retires.
+    """
+    if noise.fault_rate <= 0.0:
+        return None
+    return jax.random.uniform(key, (n_rows,)) < noise.fault_rate

@@ -119,7 +119,28 @@ def _row_ns(w: Workload, arch: str) -> tuple[float, dict]:
     raise KeyError(arch)
 
 
+def _validate_workload(w: Workload) -> None:
+    """Reject degenerate workloads with a named error instead of letting
+    them surface as a ZeroDivisionError at the tops_per_w division (or a
+    TypeError inside macs_per_token when d_ff is None)."""
+    if w.n_layers is None or w.n_layers <= 0:
+        raise ValueError(f"workload {w.name!r}: n_layers={w.n_layers} — the "
+                         f"simulator models >= 1 transformer layer")
+    if not w.d_model or w.d_model <= 0:
+        raise ValueError(f"workload {w.name!r}: d_model={w.d_model} must be "
+                         f"positive")
+    if not w.d_ff or w.d_ff <= 0:
+        raise ValueError(f"workload {w.name!r}: d_ff={w.d_ff} must be "
+                         f"positive (Workload.from_config defaults it to "
+                         f"4*d_model)")
+    if w.seq_len is None or w.seq_len <= 0:
+        raise ValueError(f"workload {w.name!r}: seq_len={w.seq_len} — the "
+                         f"row-granularity pipeline model needs >= 1 "
+                         f"computing sequence")
+
+
 def simulate(w: Workload, arch: str = "raceit") -> dict:
+    _validate_workload(w)
     chips = _chips_needed(w)
     base_ns, st = _row_ns(w, arch)
     row_ns = base_ns / PARALLELISM[arch]
@@ -143,6 +164,15 @@ def simulate(w: Workload, arch: str = "raceit") -> dict:
 def gpu_reference(raceit_result: dict) -> dict:
     """P100/H100 reference points anchored on the paper's measured ratios
     (no CUDA in this container; anchoring documented in EXPERIMENTS.md)."""
+    tps = raceit_result.get("tokens_per_s")
+    if not tps or tps <= 0:
+        raise ValueError(
+            f"gpu_reference needs a simulate() result with a positive "
+            f"tokens_per_s, got {tps!r} — the GPU points are ratios off the "
+            f"RACE-IT throughput, so a zero/missing anchor is meaningless")
+    if "energy_per_token_uj" not in raceit_result:
+        raise ValueError("gpu_reference needs 'energy_per_token_uj' in the "
+                         "simulate() result (P100 energy is anchored on it)")
     return {
         "p100_tokens_per_s":
             raceit_result["tokens_per_s"] / PAPER_CLAIMS["speedup_vs_p100"],

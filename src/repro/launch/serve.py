@@ -51,6 +51,15 @@ def main():
                     help="pin op slots to named backends (see "
                          "repro.exec.registry.OP_SLOTS); unsupported combos "
                          "degrade and the startup plan table says why")
+    ap.add_argument("--noise", default=None, metavar="PRESET|SIGMA",
+                    help="serve on device-varied analog arrays: a "
+                         "repro.hw.noise preset (clean/nominal/worst_case) "
+                         "or a float scale of the nominal profile; routes "
+                         "the raceit slots to the raceit_noisy_* backends "
+                         "(fused kernels degrade, reason in the plan table)")
+    ap.add_argument("--noise-seed", type=int, default=0,
+                    help="device-variation seed (--noise); one seed = one "
+                         "simulated chip, reproducibly")
     ap.add_argument("--set", nargs="*", default=[])
     args = ap.parse_args()
 
@@ -82,10 +91,16 @@ def main():
     # serving defaults to the fused streaming attention kernel on both the
     # prefill and decode paths (ExecConfig.serving); --exec-plan pins
     # individual op slots to named backends on top of that
+    noise = None
+    if args.noise is not None:
+        from repro.hw.noise import NoiseConfig
+        noise = NoiseConfig.parse(args.noise, seed=args.noise_seed)
+        print(f"[serve] device noise: {noise}")
     exec_cfg = ExecConfig.serving(
         mode="raceit" if args.mode.startswith("raceit") else "digital",
         fused_attention=not args.staged_attention,
-        op_overrides=parse_exec_plan(args.exec_plan))
+        op_overrides=parse_exec_plan(args.exec_plan),
+        noise=noise)
     if args.mode == "raceit_q8":
         params = quantize_model_params(params)
         print("[serve] weights quantized to resident int8 crossbar codes")
@@ -104,7 +119,12 @@ def main():
                              n_new=args.n_new))
     done = sched.run_all()
     for rid in sorted(done):
-        print(f"[serve] req{rid}: {done[rid].result.tolist()}")
+        r = done[rid]
+        if r.error is not None:  # fail-safe retirement (structured error)
+            print(f"[serve] req{rid}: FAILED at {r.error.stage} "
+                  f"step {r.error.step}: {r.error.reason}")
+        else:
+            print(f"[serve] req{rid}: {r.result.tolist()}")
     if args.continuous:
         occ = (sched.decode_tokens / sched.decode_steps
                if sched.decode_steps else float("nan"))

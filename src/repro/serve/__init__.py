@@ -1,3 +1,3 @@
 from .engine import GenerationEngine  # noqa: F401
-from .batching import BatchScheduler, Request  # noqa: F401
+from .batching import BatchScheduler, Request, RequestError  # noqa: F401
 from .continuous import ContinuousBatcher  # noqa: F401

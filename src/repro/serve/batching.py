@@ -41,7 +41,25 @@ import numpy as np
 
 from .engine import GenerationEngine
 
-__all__ = ["Request", "BatchScheduler"]
+__all__ = ["Request", "RequestError", "BatchScheduler"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestError:
+    """Structured per-request failure record (fail-safe serving).
+
+    Attached to ``Request.error`` when the serving path retires a request
+    without a result — e.g. the continuous batcher detecting non-finite
+    logits on a device-faulted slot (`repro.serve.continuous`). ``stage``
+    names where it died: "prefill" (admission prefill), "decode" (a decode
+    step; ``step`` is the number of tokens already generated), or "admit"
+    (never ran — every slot was quarantined).
+    """
+
+    rid: int
+    stage: str   # "prefill" | "decode" | "admit"
+    step: int    # tokens generated before the failure
+    reason: str
 
 
 @dataclasses.dataclass
@@ -50,6 +68,7 @@ class Request:
     prompt: np.ndarray  # (P,) int32
     n_new: int
     result: Optional[np.ndarray] = None
+    error: Optional[RequestError] = None
 
 
 class BatchScheduler:

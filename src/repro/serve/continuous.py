@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .batching import Request
+from .batching import Request, RequestError
 from .engine import GenerationEngine
 
 __all__ = ["ContinuousBatcher"]
@@ -113,6 +113,12 @@ class ContinuousBatcher:
         self.queue: deque[Request] = deque()
         self.done: dict[int, Request] = {}
         self.slots: list[Optional[_Slot]] = [None] * n_slots
+        # slots quarantined by decode-step faults: the injected fault maps
+        # are static per executable (see repro.hw.noise), so a slot row
+        # that produced non-finite logits once will again — never re-admit
+        # into it. Admission-prefill faults do NOT quarantine (the solo
+        # (1, P) prefill executable is not tied to any slot row).
+        self.dead_slots: set[int] = set()
         self.cache = None  # slot-pool cache, built at first admission
         self.tok = np.full((n_slots, 1), pad_id, np.int32)
         self.decode_steps = 0
@@ -127,6 +133,11 @@ class ContinuousBatcher:
         return self.decode_steps + self.prefills
 
     def submit(self, req: Request):
+        if len(req.prompt) == 0:
+            raise ValueError(
+                f"request {req.rid}: empty prompt — the first token is "
+                f"sampled from the prompt's last position, so there is "
+                f"nothing to prefill")
         if self.prefill_len is not None and len(req.prompt) > self.prefill_len:
             raise ValueError(
                 f"prompt of {len(req.prompt)} tokens exceeds the pool's "
@@ -164,7 +175,8 @@ class ContinuousBatcher:
         """Fill free slots from the queue: solo prefill -> row scatter."""
         eng = self.engine
         for slot in range(self.n):
-            if self.slots[slot] is not None or not self.queue:
+            if (slot in self.dead_slots or self.slots[slot] is not None
+                    or not self.queue):
                 continue
             self._lock_prefill_len()
             head = self.queue[0]  # validate before popping: a rejected
@@ -192,6 +204,16 @@ class ContinuousBatcher:
                 eng.params, jnp.asarray(prompt), row_cache,
                 pad_lens=jnp.asarray([pad], jnp.int32))
             self.prefills += 1
+            if bool(eng.nonfinite_rows(logits[:, -1])[0]):
+                # fail-safe: retire the request with a structured error
+                # before its row touches the pool cache; the slot stays
+                # free (the solo prefill executable is not slot-bound, so
+                # nothing is learned about this row)
+                req.error = RequestError(
+                    rid=req.rid, stage="prefill", step=0,
+                    reason="non-finite logits from the admission prefill")
+                self.done[req.rid] = req
+                continue
             if self.cache is None:
                 self.cache = eng.model.init_slot_cache(self.n, eng.max_len)
             # the solo cache's scalar write indices become 1-vectors so the
@@ -231,6 +253,16 @@ class ContinuousBatcher:
         """
         before = set(self.done)
         self._admit()
+        if self.queue and len(self.dead_slots) >= self.n:
+            # every slot is quarantined: fail the remaining queue with
+            # structured errors rather than spinning forever (run_all
+            # would otherwise loop on a queue no slot can serve)
+            while self.queue:
+                req = self.queue.popleft()
+                req.error = RequestError(
+                    rid=req.rid, stage="admit", step=0,
+                    reason="all slots quarantined by decode-step faults")
+                self.done[req.rid] = req
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if active:
             eng = self.engine
@@ -246,9 +278,25 @@ class ContinuousBatcher:
                 jnp.asarray(slot_lens))
             self.decode_steps += 1
             self.rng, sub = jax.random.split(self.rng)
+            bad = eng.nonfinite_rows(logits[:, -1])
             toks = np.asarray(eng._sample(logits[:, -1], sub))
             for i in active:
                 st = self.slots[i]
+                if bad[i]:
+                    # fail-safe: a non-finite decode row retires ONLY this
+                    # request (the decode paths are row-independent — see
+                    # the raceit_noisy_staged notes — so neighbours'
+                    # logits are untouched) and quarantines the slot: the
+                    # fault map is static per executable, so this row
+                    # would fault every future step too
+                    st.req.error = RequestError(
+                        rid=st.req.rid, stage="decode", step=len(st.tokens),
+                        reason="non-finite logits at the decode step")
+                    self.done[st.req.rid] = st.req
+                    self.slots[i] = None
+                    self.tok[i, 0] = self.pad_id
+                    self.dead_slots.add(i)
+                    continue
                 st.length += 1
                 st.tokens.append(int(toks[i]))
                 self.tokens_out += 1

@@ -114,6 +114,22 @@ class GenerationEngine:
         """The resolved slot -> backend table this engine serves with."""
         return self.plan.explain()
 
+    @staticmethod
+    def nonfinite_rows(logits: jax.Array) -> np.ndarray:
+        """(B,) bool host mask: rows whose logits contain NaN/Inf.
+
+        The fail-safe serving check — a device-faulted row (e.g. the
+        ``fault_rate`` knob of `repro.hw.noise.NoiseConfig` on the noisy
+        attention backends) surfaces as non-finite logits; schedulers call
+        this on the step's last-position logits and retire the affected
+        rows with a structured `repro.serve.batching.RequestError` instead
+        of sampling garbage (argmax over NaN logits returns token 0 with
+        no error signal at all).
+        """
+        finite = jnp.isfinite(logits).all(
+            axis=tuple(range(1, jnp.ndim(logits))))
+        return np.asarray(~finite)
+
     def _sample(self, logits: jax.Array, rng) -> jax.Array:
         if self.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)

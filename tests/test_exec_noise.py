@@ -1,0 +1,255 @@
+"""Device-variation injection behind the ExecPlan (`repro.hw.noise` +
+`repro.exec.noisy`).
+
+The three contracts under test:
+
+  zero-noise no-op   every ``raceit_noisy_*`` backend at an all-zero
+                     NoiseConfig is BIT-identical to its clean counterpart
+                     — enumerated from the registry, not a hand-kept list,
+                     so a new noisy backend is auto-covered (or a missing
+                     one is caught);
+  determinism        one (seed, NoiseConfig) pair reproduces identical
+                     noisy outputs across calls; a different seed is a
+                     different simulated chip;
+  cache identity     ``noise`` participates in the resolve_plan lru-cache
+                     key — configs differing only in noise (or only in
+                     noise *seed*) resolve to distinct plans.
+
+Plus the `repro.hw.simulator` degenerate-workload guards (same ISSUE).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ExecConfig
+from repro.exec import OP_SLOTS, list_backends, resolve_plan
+from repro.hw.noise import NoiseConfig, fault_rows, site_key
+
+from conftest import tiny_config
+
+CFG = tiny_config(get_config("gpt2-large"))
+CLEAN = ExecConfig(mode="raceit")
+ZERO = ExecConfig(mode="raceit", noise=NoiseConfig())
+NOMINAL = ExecConfig(mode="raceit", noise=NoiseConfig.preset("nominal"))
+
+
+def _slot_args(rng, slot):
+    """Representative call for each op slot (shapes carry the head counts;
+    q has H=4 over KV=2 so the staged paths exercise the GQA repeat)."""
+    f32 = lambda *s: jnp.asarray(rng.standard_normal(s), jnp.float32)
+    if slot == "matmul":
+        return (f32(2, 16), f32(16, 8), None), {}
+    if slot == "activation":
+        return (f32(4, 16),), {}
+    if slot == "softmax":
+        return (f32(2, 8), -1), {}
+    if slot == "attention_prefill":
+        return ((f32(1, 8, 4, 8), f32(1, 8, 2, 8), f32(1, 8, 2, 8)),
+                dict(scale=0.35, q_offset=0, kind="causal", window=4,
+                     chunk=8))
+    if slot == "attention_decode":
+        return ((f32(2, 1, 4, 8), f32(2, 16, 2, 8), f32(2, 16, 2, 8)),
+                dict(kv_len=jnp.int32(12), scale=0.35))
+    if slot == "dd_matmul":
+        i8 = lambda *s: jnp.asarray(rng.integers(-127, 128, s), jnp.int8)
+        return (i8(2, 4, 8), i8(2, 8, 4)), {}
+    if slot == "lm_head":
+        return (f32(1, 4, 16), f32(16, 32)), {}
+    raise KeyError(slot)
+
+
+# ---------------------------------------------------------------------------
+# registry-derived zero-noise parity (satellite 1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("slot", OP_SLOTS)
+def test_noisy_backends_zero_sigma_bit_parity(slot, rng):
+    """Enumerate the registry: every noisy-named backend, pinned via
+    op_overrides under an all-zero NoiseConfig, must produce outputs
+    bit-identical to its clean counterpart (name minus 'noisy_', falling
+    back to raceit_staged)."""
+    names = list_backends(slot)
+    noisy_names = sorted(n for n in names if "noisy" in n)
+    if slot in ("dd_matmul", "lm_head"):
+        # no noisy form by design: dd_matmul noise is injected on its
+        # operand codes inside the noisy attention backends, and the lm
+        # head defaults to full precision (resident-int8 noise rides the
+        # matmul slot)
+        assert not noisy_names
+        return
+    assert noisy_names, f"slot {slot!r} has no raceit_noisy_* backend"
+    args, kwargs = _slot_args(rng, slot)
+    for name in noisy_names:
+        ref = name.replace("noisy_", "")
+        if ref not in names:
+            ref = "raceit_staged"
+        p_noisy = resolve_plan(CFG, ZERO.with_ops(**{slot: name}))
+        p_clean = resolve_plan(CFG, CLEAN.with_ops(**{slot: ref}))
+        assert p_noisy.backend(slot) == name
+        assert p_clean.backend(slot) == ref
+        got = np.asarray(getattr(p_noisy, slot)(*args, **kwargs))
+        want = np.asarray(getattr(p_clean, slot)(*args, **kwargs))
+        np.testing.assert_array_equal(got, want,
+                                      err_msg=f"{slot}/{name} vs {ref}")
+
+
+@pytest.mark.parametrize("mode", ["pot", "pot_fine", "uniform"])
+@pytest.mark.parametrize("fill", [4, 16])
+def test_zero_noise_attention_parity_matrix(mode, fill, rng):
+    """Default-chain resolution (no pins): a zero-noise raceit plan routes
+    attention to raceit_noisy_staged and stays bit-identical to the clean
+    plan across softmax modes and decode fill levels (incl. a per-row
+    kv_len vector)."""
+    clean = resolve_plan(CFG, ExecConfig(mode="raceit", softmax_mode=mode))
+    zero = resolve_plan(CFG, ExecConfig(mode="raceit", softmax_mode=mode,
+                                        noise=NoiseConfig()))
+    assert zero.backend("attention_decode") == "raceit_noisy_staged"
+    f32 = lambda *s: jnp.asarray(rng.standard_normal(s), jnp.float32)
+    q, k, v = f32(2, 1, 4, 8), f32(2, 16, 2, 8), f32(2, 16, 2, 8)
+    kv = jnp.asarray([fill, max(fill // 2, 1)], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(clean.attention_decode(q, k, v, kv_len=kv, scale=0.3)),
+        np.asarray(zero.attention_decode(q, k, v, kv_len=kv, scale=0.3)))
+    qp, kp, vp = f32(1, 8, 4, 8), f32(1, 8, 2, 8), f32(1, 8, 2, 8)
+    kw = dict(scale=0.3, q_offset=0, kind="causal", window=4, chunk=8)
+    np.testing.assert_array_equal(
+        np.asarray(clean.attention_prefill(qp, kp, vp, **kw)),
+        np.asarray(zero.attention_prefill(qp, kp, vp, **kw)))
+
+
+# ---------------------------------------------------------------------------
+# determinism + actual effect
+# ---------------------------------------------------------------------------
+
+def test_noisy_outputs_reproducible_and_seed_dependent(rng):
+    pA = resolve_plan(CFG, NOMINAL)
+    pB = resolve_plan(CFG, ExecConfig(
+        mode="raceit", noise=NoiseConfig.preset("nominal", seed=1)))
+    p0 = resolve_plan(CFG, CLEAN)
+    x = jnp.asarray(rng.standard_normal((2, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    y1 = np.asarray(pA.matmul(x, w, None))
+    # same seed + config -> bit-identical across calls
+    np.testing.assert_array_equal(y1, np.asarray(pA.matmul(x, w, None)))
+    # a different seed is a different chip; any noise differs from clean
+    assert not np.array_equal(y1, np.asarray(pB.matmul(x, w, None)))
+    assert not np.array_equal(y1, np.asarray(p0.matmul(x, w, None)))
+    lg = jnp.asarray(2.0 * rng.standard_normal((2, 8)), jnp.float32)
+    s1 = np.asarray(pA.softmax(lg, -1))
+    np.testing.assert_array_equal(s1, np.asarray(pA.softmax(lg, -1)))
+
+
+def test_fault_rows_deterministic_and_off_by_default():
+    nz = dataclasses.replace(NoiseConfig.preset("worst_case"),
+                             fault_rate=0.5)
+    assert fault_rows(NoiseConfig.preset("worst_case"),
+                      site_key(NoiseConfig(), "decode_fault", (4,)), 4) is None
+    m1 = np.asarray(fault_rows(nz, site_key(nz, "decode_fault", (4,)), 4))
+    m2 = np.asarray(fault_rows(nz, site_key(nz, "decode_fault", (4,)), 4))
+    np.testing.assert_array_equal(m1, m2)
+
+
+# ---------------------------------------------------------------------------
+# plan-cache identity (satellite 3)
+# ---------------------------------------------------------------------------
+
+def test_noise_participates_in_plan_cache_key():
+    p_clean = resolve_plan(CFG, ExecConfig(mode="raceit"))
+    p_zero = resolve_plan(CFG, ExecConfig(mode="raceit",
+                                          noise=NoiseConfig()))
+    p_seed1 = resolve_plan(CFG, ExecConfig(mode="raceit",
+                                           noise=NoiseConfig(seed=1)))
+    # configs differing only in noise (even only in SEED) are distinct
+    # plans — the frozen NoiseConfig rides the lru-cache key
+    assert p_clean is not p_zero
+    assert p_zero is not p_seed1
+    assert p_clean.backend("softmax") == "raceit_acam"
+    assert p_zero.backend("softmax") == "raceit_noisy_acam"
+    # and an equal config hits the cache
+    assert resolve_plan(CFG, ExecConfig(mode="raceit",
+                                        noise=NoiseConfig())) is p_zero
+
+
+@pytest.mark.filterwarnings(
+    "ignore:fused_attention=True requested:RuntimeWarning")
+def test_fused_request_degrades_to_noisy_staged_with_reason():
+    plan = resolve_plan(CFG, ExecConfig.serving(noise=NoiseConfig.preset(
+        "nominal", seed=7)))
+    assert plan.backend("attention_prefill") == "raceit_noisy_staged"
+    assert plan.backend("attention_decode") == "raceit_noisy_staged"
+    reasons = [d.reason for d in plan.degrades
+               if d.slot.startswith("attention")]
+    assert reasons and all("noise" in r for r in reasons)
+
+
+# ---------------------------------------------------------------------------
+# NoiseConfig surface + ACAM primitives
+# ---------------------------------------------------------------------------
+
+def test_noise_config_parse_and_presets():
+    assert NoiseConfig.parse("clean").is_clean
+    nom = NoiseConfig.parse("nominal")
+    worst = NoiseConfig.parse("worst_case")
+    assert worst.acam_sigma == 4 * nom.acam_sigma
+    assert worst.stuck_rate == 4 * nom.stuck_rate
+    assert NoiseConfig.parse("2.5") == NoiseConfig.scaled(2.5)
+    assert NoiseConfig.parse(1.0) == nom
+    assert NoiseConfig.parse("0").is_clean
+    assert nom.fault_rate == 0.0  # faults are never a preset default
+    with pytest.raises(ValueError, match="unknown noise spec"):
+        NoiseConfig.parse("bogus")
+
+
+def test_rangearrays_jittered(key):
+    from repro.core import ops as acam_ops
+    op = acam_ops.get_op("gelu")
+    hw = op._hw
+    assert hw.jittered(0.0, key) is hw  # zero sigma: the same object
+    j1, j2 = hw.jittered(2.0, key), hw.jittered(2.0, key)
+    np.testing.assert_array_equal(j1.lo, j2.lo)
+    np.testing.assert_array_equal(j1.hi, j2.hi)
+    assert not (np.array_equal(j1.lo, hw.lo) and np.array_equal(j1.hi, hw.hi))
+    pos = jnp.arange(op.in_fmt.num_codes)
+    assert not np.array_equal(np.asarray(j1(pos)), np.asarray(hw(pos)))
+
+
+def test_apply_codes_noisy_zero_sigma_identity(key):
+    from repro.core import ops as acam_ops
+    op = acam_ops.get_op("gelu")
+    codes = op.in_fmt.encode(jnp.linspace(-3.0, 3.0, 64))
+    np.testing.assert_array_equal(
+        np.asarray(op.apply_codes_noisy(codes, key, 0.0, 0.0)),
+        np.asarray(op.apply_codes(codes)))
+    n1 = np.asarray(op.apply_codes_noisy(codes, key, 2.0, 1.0))
+    n2 = np.asarray(op.apply_codes_noisy(codes, key, 2.0, 1.0))
+    np.testing.assert_array_equal(n1, n2)
+    assert not np.array_equal(n1, np.asarray(op.apply_codes(codes)))
+
+
+# ---------------------------------------------------------------------------
+# hw.simulator degenerate-workload guards (satellite 6)
+# ---------------------------------------------------------------------------
+
+def test_simulator_rejects_degenerate_workloads():
+    from repro.hw.simulator import Workload, gpu_reference, simulate
+    good = Workload("w", n_layers=2, d_model=64, d_ff=128, seq_len=16)
+    res = simulate(good)
+    assert res["tops_per_w"] > 0
+    with pytest.raises(ValueError, match="n_layers"):
+        simulate(Workload("w", 0, 64, 128, 16))
+    with pytest.raises(ValueError, match="seq_len"):
+        simulate(Workload("w", 2, 64, 128, 0))
+    with pytest.raises(ValueError, match="d_ff"):
+        simulate(Workload("w", 2, 64, None, 16))
+    with pytest.raises(ValueError, match="d_model"):
+        simulate(Workload("w", 2, 0, 128, 16))
+    with pytest.raises(ValueError, match="tokens_per_s"):
+        gpu_reference({})
+    with pytest.raises(ValueError, match="tokens_per_s"):
+        gpu_reference({"tokens_per_s": 0.0, "energy_per_token_uj": 1.0})
+    with pytest.raises(ValueError, match="energy_per_token_uj"):
+        gpu_reference({"tokens_per_s": 10.0})
+    assert gpu_reference(res)["p100_tokens_per_s"] > 0
