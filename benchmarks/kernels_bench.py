@@ -258,6 +258,147 @@ def _decode_perrow_rows(rng, reps=8):
     ]
 
 
+def _decode_paged_rows(rng, reps=8):
+    """Block-paged decode vs the contiguous per-row kernel, same content.
+
+    The mixed-fill serving batch of `_decode_perrow_rows`, with the KV
+    cache scattered into a shuffled page pool ((n_pages, page_size, KV, D)
+    + per-row block table) instead of contiguous (B, ., Smax, D) rows.
+    The paged kernel follows the table's indirection per key block
+    in-kernel — the row tracks what that indirection costs next to the
+    contiguous partner (outputs are bit-identical under page permutation:
+    tests/test_attention_paged.py). The GQA row does the same on the
+    KV-native layout the paged serving default resolves to
+    (``raceit_gqa_paged``)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.ops import (raceit_attention_decode_fused,
+                                   raceit_attention_decode_gqa,
+                                   raceit_attention_decode_gqa_paged,
+                                   raceit_attention_decode_paged)
+
+    B, H, Smax, D = 4, 2, 2048, 64
+    ps = 256
+    mp = Smax // ps
+    fills = (2048, 512, 256, 128)
+    lens = jnp.asarray(fills, jnp.int32)
+    rows = []
+    for tag, KV in (("", H), ("gqa_", 1)):  # flat MHA + 2:1-grouped GQA
+        n_pages = 1 + B * mp
+        q = jnp.asarray(rng.normal(0, 1, (B, H, 1, D)), jnp.float32)
+        kn = np.zeros((B, KV, Smax, D), np.float32)
+        vn = np.zeros((B, KV, Smax, D), np.float32)
+        for b, f in enumerate(fills):
+            kn[b, :, :f] = rng.normal(0, 1, (KV, f, D))
+            vn[b, :, :f] = rng.normal(0, 1, (KV, f, D))
+        # scatter the same content into a page pool with shuffled physical
+        # pages (page 0 stays the trash page)
+        bt = np.asarray(rng.permutation(np.arange(1, n_pages)),
+                        np.int32).reshape(B, mp)
+        k_pool = np.zeros((n_pages, ps, KV, D), np.float32)
+        v_pool = np.zeros((n_pages, ps, KV, D), np.float32)
+        for b in range(B):
+            for p in range(mp):
+                sl = slice(p * ps, (p + 1) * ps)
+                k_pool[bt[b, p]] = kn[b, :, sl].transpose(1, 0, 2)
+                v_pool[bt[b, p]] = vn[b, :, sl].transpose(1, 0, 2)
+        k_pool, v_pool = jnp.asarray(k_pool), jnp.asarray(v_pool)
+        btj = jnp.asarray(bt)
+        if KV == H:
+            kf, vf = jnp.asarray(kn), jnp.asarray(vn)
+            contig = lambda: raceit_attention_decode_fused(q, kf, vf, lens,
+                                                           block_g=2)
+            paged = lambda: raceit_attention_decode_paged(q, k_pool, v_pool,
+                                                          lens, btj)
+        else:
+            kf, vf = jnp.asarray(kn), jnp.asarray(vn)
+            contig = lambda: raceit_attention_decode_gqa(q, kf, vf, lens)
+            paged = lambda: raceit_attention_decode_gqa_paged(
+                q, k_pool, v_pool, lens, btj)
+        best = {}
+        cands = {"contig": contig, "paged": paged}
+        for fn in cands.values():
+            fn()  # compile all before interleaved timing
+        for _ in range(reps):
+            for name, fn in cands.items():
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                best[name] = min(best.get(name, float("inf")),
+                                 time.perf_counter() - t0)
+        shape = f"{B * H}x1x{Smax}x{D}"
+        rows.append(
+            (f"kernel/attention_decode_paged_{tag}{shape}_ps{ps}",
+             best["paged"] * 1e6,
+             f"page_table_indirection_"
+             f"{best['contig'] / best['paged']:.2f}x_vs_contig"))
+    return rows
+
+
+def _serving_longprompt_rows():
+    """Chunked prefill-into-slot on long prompts + the page-pool memory win.
+
+    Prompts up to 4x the prefill chunk — longer than any width the
+    contiguous admission path could pin without resizing every slot —
+    stream through `ContinuousBatcher`'s paged default. Deterministic
+    counter rows (zero run-to-run noise, lower is better):
+
+    * ``calls_per_ktok``  — model executions (chunk + decode) per 1000
+      emitted tokens: the long-prompt serving cost the chunk width tunes;
+    * ``peak_kv_pct``     — peak pages-in-use x page_size as a percentage
+      of the contiguous pool's ``n_slots x max_len`` columns: the
+      footprint the block-paged pool actually touches vs what a
+      contiguous slot pool must reserve up front.
+    """
+    import jax
+    import numpy as np
+
+    from repro.configs.base import ExecConfig, ModelConfig
+    from repro.models import Model
+    from repro.serve import ContinuousBatcher, GenerationEngine, Request
+
+    cfg = ModelConfig(name="longp", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_ff=128, vocab_size=256, head_dim=16,
+                      param_dtype="float32", compute_dtype="float32")
+    model = Model(cfg, ExecConfig())
+    params = model.init(jax.random.PRNGKey(0))
+    eng = GenerationEngine(cfg, params, exec_cfg=ExecConfig(), max_len=128)
+    ps = 16
+    cb = ContinuousBatcher(eng, n_slots=4, page_size=ps)
+    assert cb.paged, "paged serving must be the default on this model"
+    rng = np.random.default_rng(0)
+    lens_nnew = ((48, 4), (17, 2), (33, 3), (8, 6), (64, 2), (21, 4),
+                 (48, 1), (9, 3))
+    for i, (ln, nn) in enumerate(lens_nnew):
+        cb.submit(Request(i, rng.integers(0, 255, ln).astype(np.int32),
+                          n_new=nn))
+    peak = 0
+    while cb.queue or any(s is not None for s in cb.slots):
+        cb.step()
+        peak = max(peak, cb.allocator.pages_in_use)
+    if any(r.error is not None for r in cb.done.values()):
+        raise SystemExit("long-prompt paged serving trace failed a request")
+    longest = max(ln for ln, _ in lens_nnew)
+    if longest < 4 * cb.prefill_chunk:
+        raise SystemExit("trace no longer exercises multi-chunk prefill")
+    baseline_cols = cb.n * eng.max_len  # contiguous slot-pool reservation
+    peak_cols = peak * ps
+    if peak_cols >= baseline_cols:
+        raise SystemExit(
+            f"paged pool peaked at {peak_cols} KV columns — no footprint "
+            f"win over the {baseline_cols}-column contiguous reservation")
+    calls_per_ktok = 1000.0 * cb.model_calls / cb.tokens_out
+    return [
+        ("serve/continuous_longprompt_calls_per_ktok", calls_per_ktok,
+         f"{cb.chunk_calls}chunks_{cb.decode_steps}decodes_"
+         f"longest{longest}_chunk{cb.prefill_chunk}"),
+        ("serve/continuous_longprompt_peak_kv_pct",
+         100.0 * peak_cols / baseline_cols,
+         f"peak_{peak}pages_x{ps}_vs_{baseline_cols}cols_contiguous"),
+    ]
+
+
 def _serving_occupancy_rows():
     """Decode-engine occupancy: slot-level continuous batching vs buckets.
 
@@ -365,7 +506,9 @@ def run() -> list[tuple]:
     rows.extend(_decode_attention_rows(rng))
     rows.extend(_decode_gqa_rows(rng))
     rows.extend(_decode_perrow_rows(rng))
+    rows.extend(_decode_paged_rows(rng))
     rows.extend(_serving_occupancy_rows())
+    rows.extend(_serving_longprompt_rows())
     rows.extend(_noise_sweep_rows())
 
     for name, us, derived in rows:

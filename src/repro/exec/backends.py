@@ -280,7 +280,9 @@ def _decode_combine(pr, v):
 
 
 def _decode_valid(k, kv_len, pad_valid):
-    """(B, Smax) or (1, Smax) key-validity mask for the float decode paths.
+    """Key-validity mask for the float decode paths: (B, Smax), or
+    (B, Sq, Smax) when ``pad_valid`` carries a per-query mask (the chunked
+    prefill step's intra-chunk causality).
 
     ``kv_len`` may be a scalar or a (B,) per-row vector — the float paths
     are per-row-native either way (the mask is already per row).
@@ -288,8 +290,16 @@ def _decode_valid(k, kv_len, pad_valid):
     valid = (jnp.arange(k.shape[1])[None, :]
              < jnp.reshape(jnp.asarray(kv_len), (-1, 1)))
     if pad_valid is not None:
-        valid = valid & pad_valid
+        valid = (valid[:, None, :] & pad_valid if pad_valid.ndim == 3
+                 else valid & pad_valid)
     return valid
+
+
+def _decode_mask_scores(s, valid, sentinel):
+    """Apply a `_decode_valid` mask to grouped scores (B, KV, G, Sq, Smax)."""
+    vm = (valid[:, None, None, None] if valid.ndim == 2
+          else valid[:, None, None])  # (B, Sq, Smax) -> (B, 1, 1, Sq, Smax)
+    return jnp.where(vm, s, sentinel)
 
 
 def _flatten_row_lens(k, kv_len, pad_valid):
@@ -308,6 +318,8 @@ def _flatten_row_lens(k, kv_len, pad_valid):
     if jnp.ndim(kv_len) == 0:
         return kv_len, pad_valid
     valid = jnp.arange(k.shape[1])[None, :] < kv_len[:, None]
+    if pad_valid is not None and pad_valid.ndim == 3:  # per-query chunk mask
+        return jnp.max(kv_len), valid[:, None, :] & pad_valid
     return jnp.max(kv_len), (valid if pad_valid is None
                              else valid & pad_valid)
 
@@ -316,7 +328,7 @@ def _flatten_row_lens(k, kv_len, pad_valid):
 def _decode_digital(plan, q, k, v, *, kv_len, scale, pad_valid=None):
     s = _decode_scores(q, k, k.shape[2], scale)
     valid = _decode_valid(k, kv_len, pad_valid)
-    s = jnp.where(valid[:, None, None, None], s, NEG_INF)
+    s = _decode_mask_scores(s, valid, NEG_INF)
     return _decode_combine(jax.nn.softmax(s, axis=-1), v)
 
 
@@ -325,7 +337,7 @@ def _decode_digital(plan, q, k, v, *, kv_len, scale, pad_valid=None):
 def _decode_raceit_staged(plan, q, k, v, *, kv_len, scale, pad_valid=None):
     s = _decode_scores(q, k, k.shape[2], scale)
     valid = _decode_valid(k, kv_len, pad_valid)
-    s = jnp.where(valid[:, None, None, None], s, LOGIT_FMT.min_value)
+    s = _decode_mask_scores(s, valid, LOGIT_FMT.min_value)
     pr = acam_softmax(s, axis=-1, mode=plan.exec_cfg.softmax_mode)
     return _decode_combine(pr, v)
 
@@ -387,6 +399,46 @@ def _decode_raceit_gqa_rows(plan, q, k, v, *, kv_len, scale, pad_valid=None):
     # the rep sharing queries (see layers._raceit_gqa_decode)
     return layers._raceit_gqa_decode(q, k, v, kv_len, scale, plan,
                                      pad_valid=pad_valid)
+
+
+@register("attention_decode", "raceit_fused_paged",
+          supported=_fused_supported, paged=True,
+          notes="block-paged KV pool (block_table/page_size); contiguous "
+                "callers are served on the per-row flat kernel unchanged")
+def _decode_raceit_fused_paged(plan, q, k, v, *, kv_len, scale,
+                               pad_valid=None, block_table=None,
+                               page_size=None):
+    # the paged serving decode: k/v are the (n_pages, page_size, KV, hd)
+    # page pool, block_table (B, max_pages) names each row's pages (0 = the
+    # trash page), and the per-page quantizer reduces each page's scale over
+    # the union of its live entries — bit-identical to raceit_fused_rows on
+    # the gathered contiguous layout (tests/test_attention_paged.py)
+    if block_table is None:
+        return layers._raceit_fused_decode(q, k, v, kv_len, scale, plan,
+                                           pad_valid=pad_valid)
+    return layers._raceit_paged_decode(q, k, v, kv_len, scale, plan,
+                                       pad_valid=pad_valid,
+                                       block_table=block_table, gqa=False)
+
+
+@register("attention_decode", "raceit_gqa_paged",
+          supported=_gqa_native_supported, paged=True,
+          notes="block-paged KV pool on the GQA-native layout — the paged "
+                "serving default for grouped-query configs")
+def _decode_raceit_gqa_paged(plan, q, k, v, *, kv_len, scale,
+                             pad_valid=None, block_table=None,
+                             page_size=None):
+    if block_table is None:
+        return layers._raceit_gqa_decode(q, k, v, kv_len, scale, plan,
+                                         pad_valid=pad_valid)
+    # chunked-prefill steps (Sq > 1) ride the flat paged entry — same
+    # rationale as _raceit_gqa_decode's Sq>1 delegate: the GQA grid's row
+    # dimension carries the rep sharing queries, which a chunk needs for
+    # its Sq positions; bit-identical either way
+    return layers._raceit_paged_decode(q, k, v, kv_len, scale, plan,
+                                       pad_valid=pad_valid,
+                                       block_table=block_table,
+                                       gqa=q.shape[1] == 1)
 
 
 # ---------------------------------------------------------------------------

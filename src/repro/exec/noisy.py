@@ -48,8 +48,8 @@ from repro.hw.noise import (fault_rows, jitter_codes, perturb_weight_codes,
 from repro.models.layers import QuantizedWeight, _attn_quantize
 
 from .backends import (RACEIT_ATTENTION_MAX_KEYS, _SEQ_NOTE, _decode_combine,
-                       _decode_scores, _decode_valid, _mask_array,
-                       _prefill_digital, _resident_matmul)
+                       _decode_mask_scores, _decode_scores, _decode_valid,
+                       _mask_array, _prefill_digital, _resident_matmul)
 from .registry import register
 
 # int8 code-domain clip bounds for jittered operand codes (symmetric
@@ -199,7 +199,7 @@ def _decode_noisy_staged(plan, q, k, v, *, kv_len, scale, pad_valid=None):
     nz = plan.exec_cfg.noise
     s = _decode_scores(q, k, k.shape[2], scale)
     valid = _decode_valid(k, kv_len, pad_valid)
-    s = jnp.where(valid[:, None, None, None], s, LOGIT_FMT.min_value)
+    s = _decode_mask_scores(s, valid, LOGIT_FMT.min_value)
     pr = noisy_acam_softmax(s, axis=-1, mode=plan.exec_cfg.softmax_mode,
                             noise=nz, key=site_key(nz, "decode_softmax",
                                                    s.shape))

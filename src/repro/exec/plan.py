@@ -114,14 +114,26 @@ class ExecPlan:
             window=window, chunk=chunk, probs_dtype=probs_dtype,
             pad_lens=pad_lens)
 
-    def attention_decode(self, q, k, v, *, kv_len, scale, pad_valid=None):
-        """Sq=1 decode vs a fixed-shape cache valid to ``kv_len``.
+    def attention_decode(self, q, k, v, *, kv_len, scale, pad_valid=None,
+                         block_table=None, page_size=None):
+        """Decode step (Sq=1, or an Sq=C chunked-prefill step) vs a
+        fixed-shape cache valid to ``kv_len``.
 
         ``pad_valid`` (B, Smax) bool further restricts each row's
-        attendable slots inside the prefix (left-padded buckets).
+        attendable slots inside the prefix (left-padded buckets); a
+        (B, Sq, Smax) form carries the chunk step's per-query causal mask.
+        ``block_table``/``page_size`` hand a block-paged KV pool to a
+        paged-capable backend (`BackendSpec.paged`) — callers check the
+        flag and gather pages to contiguous rows first for non-paged
+        backends, so the kwargs are only forwarded when actually paged.
         """
-        return self.op("attention_decode").spec.impl(
-            self, q, k, v, kv_len=kv_len, scale=scale, pad_valid=pad_valid)
+        spec = self.op("attention_decode").spec
+        if block_table is None:  # contiguous callers: unchanged interface
+            return spec.impl(self, q, k, v, kv_len=kv_len, scale=scale,
+                             pad_valid=pad_valid)
+        return spec.impl(self, q, k, v, kv_len=kv_len, scale=scale,
+                         pad_valid=pad_valid, block_table=block_table,
+                         page_size=page_size)
 
     def dd_matmul(self, a_codes, b_codes):
         """Data-dependent matmul on int8 codes -> int32."""
@@ -192,8 +204,14 @@ def _default_chain(slot: str, exec_cfg: ExecConfig) -> tuple[str, ...]:
     # (n_kv_heads < n_heads), so MHA configs degrade within the fused
     # family to the per-row flat kernel with the reason recorded — same
     # dataflow there, nothing to warn about.
-    gqa_first = ("raceit_gqa_rows", "raceit_gqa_native",
-                 "raceit_fused_rows") + fused_first
+    # ... and, ahead of both row families, their paged twins: the paged
+    # backends serve contiguous callers unchanged (block_table=None
+    # delegates to the same row/flat adapters) and additionally accept the
+    # block-paged KV pool of `repro.serve.continuous`'s paged mode, so
+    # resolving them by default costs nothing and makes every serving
+    # config paged-capable without an override.
+    gqa_first = ("raceit_gqa_paged", "raceit_gqa_rows", "raceit_gqa_native",
+                 "raceit_fused_paged", "raceit_fused_rows") + fused_first
     return {
         "matmul": (("raceit_noisy_int", "raceit_int") if noisy
                    else ("raceit_int",)),
@@ -284,7 +302,8 @@ def resolve_plan(model_cfg: ModelConfig,
 
 
 _FUSED_FAMILY = ("raceit_fused", "raceit_gqa_native",
-                 "raceit_fused_rows", "raceit_gqa_rows")
+                 "raceit_fused_rows", "raceit_gqa_rows",
+                 "raceit_fused_paged", "raceit_gqa_paged")
 
 
 def _warn_fused_degrades(plan: ExecPlan) -> None:

@@ -49,6 +49,14 @@ class BackendSpec:
     convention as `repro.core.attention.fused_attention_supported`, which
     is exactly what the fused attention backends plug in here. ``notes``
     document runtime (shape-dependent) fallbacks the predicate cannot see.
+
+    ``paged`` marks attention_decode backends that accept block-paged KV
+    operands (``block_table``/``page_size`` kwargs — a page pool instead
+    of contiguous per-slot cache rows). Callers holding a paged cache
+    check it to decide between handing the pool straight to the backend
+    and gathering pages back to the contiguous layout first
+    (`models.layers.attention`), so pinning a non-paged backend under a
+    paged serving cache degrades to a gather, recorded not raised.
     """
 
     slot: str
@@ -56,19 +64,22 @@ class BackendSpec:
     impl: Callable
     supported: Callable[[object, object], Optional[str]]
     notes: str = ""
+    paged: bool = False
 
 
 _BACKENDS: dict[str, dict[str, BackendSpec]] = {s: {} for s in OP_SLOTS}
 
 
 def register(slot: str, name: str, *,
-             supported: Optional[Callable] = None, notes: str = ""):
+             supported: Optional[Callable] = None, notes: str = "",
+             paged: bool = False):
     """Decorator: register ``impl`` as backend ``name`` for ``slot``.
 
     ``impl`` is called as ``impl(plan, *args, **kwargs)`` — the resolved
     `ExecPlan` comes first so backends read knobs (act_bits, softmax_mode,
     probs dtype, ...) from one place instead of threading them through
-    every call site.
+    every call site. ``paged=True`` marks attention_decode backends that
+    take block-paged KV operands (see `BackendSpec.paged`).
     """
     if slot not in _BACKENDS:
         raise ValueError(f"unknown op slot {slot!r}; slots are {OP_SLOTS}")
@@ -76,7 +87,8 @@ def register(slot: str, name: str, *,
     def deco(impl: Callable) -> Callable:
         _BACKENDS[slot][name] = BackendSpec(
             slot=slot, name=name, impl=impl,
-            supported=supported or (lambda mcfg, ecfg: None), notes=notes)
+            supported=supported or (lambda mcfg, ecfg: None), notes=notes,
+            paged=paged)
         return impl
 
     return deco

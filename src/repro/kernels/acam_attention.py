@@ -59,7 +59,19 @@ Two entry points share the kernel bodies:
   loop along with rep x of its cache-read traffic. Same scalar-prefetched
   ``kv_len`` machinery (clamped index maps + `guard_live` gating).
 
-Both accept every softmax configuration of the staged path: "pot",
+Every entry additionally accepts a **block-paged** k/v layout: instead of
+one contiguous (Smax,) stripe per group, keys live in a pool of fixed-size
+pages — k/v arrive as ``(n_pages * groups_per_slot, page_size, D)`` and a
+per-slot ``block_table`` maps each slot's logical page index to a physical
+pool page. The table rides the same `PrefetchScalarGridSpec` as the kv_len
+operands (a third scalar-prefetch arg consumed *only* by the k/v index
+maps), so the kernel bodies are untouched: logical key coordinates —
+`key_valid`, the per-row frontier clamp, `guard_live` skipping — all work
+exactly as in the contiguous layout, and a shuffled block table is
+bit-identical to the contiguous stripe because only the DMA source of each
+tile moves, never its logical contents or the block visit order.
+
+All entries accept every softmax configuration of the staged path: "pot",
 "pot_fine", and the Fig.-14 "uniform" exp-quantization ablation — the LOG
 stage always consumes a PoT-encoded row sum, so only the exp gather table
 differs per mode (see `softmax_tables`).
@@ -67,6 +79,7 @@ differs per mode (see `softmax_tables`).
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
@@ -399,10 +412,11 @@ def _attn_kernel_single(kvlen_ref, kvmax_ref, s1_ref, qoff_ref, q_ref, k_ref,
 
 @functools.partial(
     jax.jit, static_argnames=("mode", "scale_by_sqrt_d", "causal",
-                              "block_q", "block_k", "block_g", "interpret"))
+                              "block_q", "block_k", "block_g", "interpret",
+                              "page_size", "groups_per_slot"))
 def acam_attention_codes(
     q_codes: jax.Array,   # (G, Sq, D) int8 — G folds batch x heads
-    k_codes: jax.Array,   # (G, Sk, D) int8
+    k_codes: jax.Array,   # (G, Sk, D) int8 — or the paged pool, see below
     v_codes: jax.Array,   # (G, Sk, D) int8
     logit_scale: jax.Array,          # () f32: s_q * s_k (div-add numerator)
     mask: Optional[jax.Array] = None,  # (G, Sq, Sk) bool; None => causal/full
@@ -415,6 +429,9 @@ def acam_attention_codes(
     block_k: int = DEFAULT_BLOCK_K,
     block_g: int = DEFAULT_BLOCK_G,
     interpret: Optional[bool] = None,
+    block_table: Optional[jax.Array] = None,  # (n_slots, max_pages) int32
+    page_size: Optional[int] = None,          # static: rows per pool page
+    groups_per_slot: Optional[int] = None,    # static: grid groups per slot
 ) -> tuple[jax.Array, jax.Array]:
     """Fused Fig.-12 attention on int8 codes.
 
@@ -435,27 +452,69 @@ def acam_attention_codes(
     streaming at their own fill level. ``mode`` accepts every staged
     softmax config: "pot", "pot_fine", "uniform" (the Fig.-14 ablation's
     uniform exp quantization).
+
+    **Paged k/v** (``block_table`` given): k/v are a page *pool* of shape
+    ``(n_pages * groups_per_slot, page_size, D)`` — physical page ``p``
+    stores the ``groups_per_slot`` group stripes of one logical page at
+    rows ``[p*gps, (p+1)*gps)`` — and ``block_table[slot, j]`` names the
+    physical page backing slot ``slot``'s logical page ``j``. The logical
+    key extent is ``max_pages * page_size``; ``kv_len`` must be a (G,)
+    per-group vector. The table rides as a third scalar-prefetch operand
+    consumed only by the k/v index maps; physical page 0 is the
+    conventional trash page dead/unmapped entries resolve to (its tiles
+    are fetched but fully masked/skipped). Output is bit-identical to the
+    contiguous layout holding the same logical contents — pages move the
+    DMA source of each key tile, never its logical coordinates or the
+    block visit order.
     """
     interpret = resolve_interpret(interpret)
     exp_val, log_lut, prob_lut, e_min, octave_step, frac_shift = \
         softmax_tables(mode)
 
+    paged = block_table is not None
     G, Sq, D = q_codes.shape
-    Sk = k_codes.shape[1]
-    bg = min(block_g, G)
+    if paged:
+        if page_size is None or groups_per_slot is None:
+            raise ValueError("paged attention needs static page_size and "
+                             "groups_per_slot alongside block_table")
+        if kv_len is None or jnp.ndim(kv_len) != 1:
+            raise ValueError("paged attention requires a per-group (G,) "
+                             "kv_len vector")
+        gps = groups_per_slot
+        n_slots, max_pages = block_table.shape
+        if G != n_slots * gps:
+            raise ValueError(f"paged G={G} != n_slots*groups_per_slot = "
+                             f"{n_slots}*{gps}")
+        if k_codes.shape[1] != page_size or k_codes.shape[0] % gps:
+            raise ValueError(f"paged k/v pool must be (n_pages*{gps}, "
+                             f"{page_size}, D), got {k_codes.shape}")
+        Sk = max_pages * page_size         # logical key extent
+        # group tiles must never straddle a slot (all bg groups share one
+        # block-table row), and key blocks must never straddle a page
+        bg = max(d for d in range(1, min(block_g, gps) + 1) if gps % d == 0)
+        bk = math.gcd(page_size, min(block_k, page_size))
+    else:
+        Sk = k_codes.shape[1]
+        bg = min(block_g, G)
+        bk = min(block_k, max(_LANES, Sk))
     bq = min(block_q, max(8, Sq))
-    bk = min(block_k, max(_LANES, Sk))
     pad_g, pad_q, pad_k = (-G) % bg, (-Sq) % bq, (-Sk) % bk
     # lane-align the head dim only when compiling for real hardware; in
     # interpret mode the padding would just double the MXU work
     pad_d = 0 if interpret else (-D) % _LANES
     pad3 = lambda a: jnp.pad(a, ((0, pad_g), (0, 0), (0, 0)))
     qp = pad3(jnp.pad(q_codes, ((0, 0), (0, pad_q), (0, pad_d))))
-    kp = pad3(jnp.pad(k_codes, ((0, 0), (0, pad_k), (0, pad_d))))
-    vp = pad3(jnp.pad(v_codes, ((0, 0), (0, pad_k), (0, pad_d))))
+    if paged:  # pool rows are physical pages — only the head dim pads
+        kp = jnp.pad(k_codes, ((0, 0), (0, 0), (0, pad_d)))
+        vp = jnp.pad(v_codes, ((0, 0), (0, 0), (0, pad_d)))
+    else:
+        kp = pad3(jnp.pad(k_codes, ((0, 0), (0, pad_k), (0, pad_d))))
+        vp = pad3(jnp.pad(v_codes, ((0, 0), (0, pad_k), (0, pad_d))))
     Gp, Sqp, Skp, Dp = G + pad_g, Sq + pad_q, Sk + pad_k, D + pad_d
     ng, nq, nk = Gp // bg, Sqp // bq, Skp // bk
-    one_tile = ng == nq == nk == 1  # whole problem fits a single VMEM tile
+    # whole problem fits a single VMEM tile (paged always streams: even one
+    # key block needs the block-table indirection in its index map)
+    one_tile = ng == nq == nk == 1 and not paged
 
     sqrt_d = float(np.sqrt(np.float32(scale_by_sqrt_d), dtype=np.float32)) \
         if scale_by_sqrt_d is not None else None
@@ -496,19 +555,35 @@ def acam_attention_codes(
     # grids (prefill, and single-tile decode, where there is no whole
     # block to skip) keep both as plain operands and pay none of the
     # prefetch machinery; the kernels see identical refs either way.
-    use_prefetch = dyn_len and nk > 1
+    use_prefetch = (dyn_len and nk > 1) or paged
 
     def _im(f):
         """Index map with the right arity: scalar-prefetch index maps
-        receive the prefetched refs as trailing arguments."""
+        receive the prefetched refs as trailing arguments (the paged grid
+        prefetches a third operand, the block table)."""
         if use_prefetch:
+            if paged:
+                return lambda p, g, i, k, kvl, kvm, bt: f(p, g, i, k, kvl, kvm)
             return lambda p, g, i, k, kvl, kvm: f(p, g, i, k, kvl, kvm)
         return lambda p, g, i, k: f(p, g, i, k, None, None)
 
     spec_scalar = pl.BlockSpec((1, 1), _im(lambda p, g, i, k, kvl, kvm: (0, 0)))
     spec_lut = pl.BlockSpec((256,), _im(lambda p, g, i, k, kvl, kvm: (0,)))
 
-    if use_prefetch:
+    if paged:
+        spb = page_size // bk  # key blocks per page
+
+        def kv_index(p, g, i, k, kvl, kvm, bt):
+            # same per-tile frontier clamp as the contiguous prefetch path,
+            # then translate the logical key block through the slot's
+            # block-table row: logical page kc//spb -> physical pool page,
+            # whose bg-group stripe for this tile starts at row
+            # page*gps + (g*bg) % gps (bg divides gps, so it is block-aligned)
+            last_live = jnp.maximum((kvm[g] + bk - 1) // bk - 1, 0)
+            kc = jnp.minimum(k, last_live)
+            page = bt[(g * bg) // gps, kc // spb]
+            return ((page * gps + (g * bg) % gps) // bg, kc % spb, 0)
+    elif use_prefetch:
         def kv_index(p, g, i, k, kvl, kvm):
             last_live = jnp.maximum((kvm[g] + bk - 1) // bk - 1, 0)
             return (g, jnp.minimum(k, last_live), 0)
@@ -523,8 +598,12 @@ def acam_attention_codes(
         pl.BlockSpec((bg, bk, Dp), kv_index),                       # v
     ]
     operands = [
-        kv_len_val,    # first two: scalar-prefetch args / plain operands
+        kv_len_val,    # leading: scalar-prefetch args / plain operands
         kv_blockmax,
+    ]
+    if paged:      # third prefetched scalar: the block table (index-map only)
+        operands.append(jnp.asarray(block_table, jnp.int32))
+    operands += [
         logit_scale.reshape(1, 1),
         jnp.asarray(q_offset, jnp.int32).reshape(1, 1),
         qp, kp, vp,
@@ -569,11 +648,17 @@ def acam_attention_codes(
                               _im(lambda p, g, i, k, kvl, kvm: (g, i, 0))),
                  spec_scalar)
     if use_prefetch:
+        if paged:
+            # the kernel bodies never read the block table (it exists for
+            # the k/v index maps alone) — drop its ref before dispatch
+            inner = kernel
+            kernel = lambda kvl, kvm, bt, *rest: inner(kvl, kvm, *rest)
         call = pl.pallas_call(
             kernel, out_shape=out_shape,
             grid_spec=pltpu.PrefetchScalarGridSpec(
-                num_scalar_prefetch=2, grid=grid, in_specs=in_specs,
-                out_specs=out_specs, scratch_shapes=scratch),
+                num_scalar_prefetch=3 if paged else 2, grid=grid,
+                in_specs=in_specs, out_specs=out_specs,
+                scratch_shapes=scratch),
             interpret=interpret)
     else:
         kvlen_spec = pl.BlockSpec(
@@ -601,6 +686,9 @@ def acam_attention_decode_codes(
     block_k: int = DEFAULT_BLOCK_K,
     block_g: int = DEFAULT_BLOCK_G,
     interpret: Optional[bool] = None,
+    block_table: Optional[jax.Array] = None,
+    page_size: Optional[int] = None,
+    groups_per_slot: Optional[int] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Decode-mode fused attention: Sq=1 queries against a KV cache.
 
@@ -630,13 +718,25 @@ def acam_attention_decode_codes(
     never-filled slot), and the dead-block skip clamps per group tile, so
     a short request stops streaming where *its* cache ends, not at the
     batch max.
+
+    With ``block_table``/``page_size``, k/v are the paged pool
+    ``(n_pages * groups_per_slot, page_size, D)`` — ``groups_per_slot``
+    defaults to G // n_slots (the flat layout folds every query head of a
+    slot into its group stripe). See `acam_attention_codes` for the paged
+    contract; decode is its hot consumer (slot-level continuous batching
+    hands each slot a block-table row instead of a contiguous cache
+    stripe).
     """
     if q_codes.shape[1] != 1:
         raise ValueError(f"decode path expects Sq=1, got {q_codes.shape[1]}")
+    if block_table is not None and groups_per_slot is None:
+        groups_per_slot = q_codes.shape[0] // block_table.shape[0]
     return acam_attention_codes(
         q_codes, k_codes, v_codes, logit_scale, mask, kv_len=kv_len,
         mode=mode, scale_by_sqrt_d=scale_by_sqrt_d,
-        block_k=block_k, block_g=block_g, interpret=interpret)
+        block_k=block_k, block_g=block_g, interpret=interpret,
+        block_table=block_table, page_size=page_size,
+        groups_per_slot=groups_per_slot)
 
 
 def acam_attention_decode_gqa_codes(
@@ -651,6 +751,9 @@ def acam_attention_decode_gqa_codes(
     block_k: int = DEFAULT_BLOCK_K,
     block_g: int = DEFAULT_BLOCK_G,
     interpret: Optional[bool] = None,
+    block_table: Optional[jax.Array] = None,
+    page_size: Optional[int] = None,
+    groups_per_slot: Optional[int] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """GQA-native decode: k/v in their (B*KV, Smax, D) cache layout.
 
@@ -677,12 +780,23 @@ def acam_attention_decode_gqa_codes(
     group's length, which is exactly the per-request semantics (a
     request's heads all see the same cache fill). See
     `acam_attention_decode_codes` for the per-row contract.
+
+    With ``block_table``/``page_size``, k/v are the paged pool
+    ``(n_pages * groups_per_slot, page_size, D)`` with
+    ``groups_per_slot = KV`` (each pool page holds one logical page for
+    every KV head of its slot); the pool's group-dim divisibility replaces
+    the contiguous entry's shared-group-dim check.
     """
-    if k_codes.shape[0] != q_codes.shape[0]:
+    if block_table is not None:
+        if groups_per_slot is None:
+            raise ValueError("GQA paged decode needs groups_per_slot (=KV)")
+    elif k_codes.shape[0] != q_codes.shape[0]:
         raise ValueError(
             f"GQA decode expects q and k/v to share the group dim "
             f"(B*KV): got q {q_codes.shape} vs k {k_codes.shape}")
     return acam_attention_codes(
         q_codes, k_codes, v_codes, logit_scale, mask, kv_len=kv_len,
         mode=mode, scale_by_sqrt_d=scale_by_sqrt_d,
-        block_k=block_k, block_g=block_g, interpret=interpret)
+        block_k=block_k, block_g=block_g, interpret=interpret,
+        block_table=block_table, page_size=page_size,
+        groups_per_slot=groups_per_slot)

@@ -130,6 +130,47 @@ def masked_prefix_quantize(x: jax.Array, kv_len: jax.Array, axis: int = 2):
     return jnp.where(valid, codes, 0), scale
 
 
+def page_valid_lengths(block_table: jax.Array, kv_len: jax.Array,
+                       n_pages: int, page_size: int) -> jax.Array:
+    """Per-physical-page valid entry counts for a paged KV pool.
+
+    Slot ``b``'s logical page ``j`` holds ``clip(kv_len[b] - j*page_size,
+    0, page_size)`` live entries; scatter-maxing those through the block
+    table yields, for every physical page, how many of its rows hold live
+    cache data. Unmapped pages (never named by any table row with a live
+    extent) come out 0, and physical page 0 — the conventional trash page
+    dead/unmapped table entries resolve to — is forced to 0 so garbage
+    routed there can never look valid.
+    """
+    bt = jnp.asarray(block_table, jnp.int32)
+    kvl = jnp.asarray(kv_len, jnp.int32)
+    live = jnp.clip(kvl[:, None] - jnp.arange(bt.shape[1], dtype=jnp.int32)
+                    * page_size, 0, page_size)
+    pv = jnp.zeros((n_pages,), jnp.int32).at[bt].max(live)
+    return pv.at[0].set(0)
+
+
+def masked_page_quantize(x: jax.Array, page_valid: jax.Array):
+    """`masked_prefix_quantize` for a page pool: (n_pages, page_size, ...).
+
+    Same f32 op sequence (max of |x| over valid entries padded with zeros,
+    ``max(amax, 1e-12)/127``, elementwise round/clip) with validity given
+    per page row by ``page_valid`` (`page_valid_lengths`). Because the pool
+    holds exactly the live prefixes' values — scattered into pages — and
+    f32 max is order-free, the scale is *bit-identical* to what
+    `masked_prefix_quantize` computes on the contiguous layout of the same
+    logical contents, and so are the codes on every valid entry. Invalid
+    entries (stale pages, tails past each slot's fill, the trash page) are
+    zeroed and can never perturb the quantizer.
+    """
+    idx = jnp.reshape(jnp.arange(x.shape[1]), (1, -1) + (1,) * (x.ndim - 2))
+    valid = idx < jnp.reshape(page_valid, (-1,) + (1,) * (x.ndim - 1))
+    amax = jnp.max(jnp.where(valid, jnp.abs(x), 0.0))
+    scale = (jnp.maximum(amax, 1e-12) / 127).astype(jnp.float32)
+    codes = jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+    return jnp.where(valid, codes, 0), scale
+
+
 def expand_row_lens(kv_len: jax.Array, rep: int) -> jax.Array:
     """Per-request lengths (B,) -> per-group lengths (B*rep,), b-major.
 
@@ -203,6 +244,137 @@ def raceit_attention_decode_fused(
         scale_by_sqrt_d=None if fold_scale else D,
         block_k=block_k or DEFAULT_BLOCK_K, block_g=block_g or DEFAULT_BLOCK_G,
         interpret=interpret)
+    p_scale = prob_requant_scale(cmax)
+    return (out32.astype(jnp.float32) * (p_scale * v_scale)
+            ).reshape(B, H, Sq, D)
+
+
+def _paged_quantize_operands(q, k_pool, v_pool, block_table, kv_len):
+    """Paged decode-wrapper prolog: q whole-tensor int8, pooled k/v per-page
+    int8 with scales over the union of live page entries — bit-identical to
+    `_decode_quantize_operands` on the contiguous gather of the same table
+    (the paged wrappers' parity contract starts here)."""
+    pv = page_valid_lengths(block_table, kv_len,
+                            k_pool.shape[0], k_pool.shape[1])
+    return (quantize_tensor(q, bits=8), masked_page_quantize(k_pool, pv),
+            masked_page_quantize(v_pool, pv))
+
+
+@partial(jax.jit, static_argnames=("softmax_mode", "fold_scale",
+                                   "block_k", "block_g", "interpret"))
+def raceit_attention_decode_paged(
+    q: jax.Array,       # (B, H, Sq, D) float — Sq=1 decode or Sq=C chunk
+    k_pool: jax.Array,  # (n_pages, page_size, KV, D) float — the page pool
+    v_pool: jax.Array,  # (n_pages, page_size, KV, D) float
+    kv_len: jax.Array,              # (B,) int32 per-slot fill levels
+    block_table: jax.Array,         # (B, max_pages) int32; 0 = trash page
+    mask: Optional[jax.Array] = None,  # (B, Sq, max_pages*page_size) bool
+    softmax_mode: str = "pot",
+    fold_scale: bool = False,
+    block_k: int | None = None,
+    block_g: int | None = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused attention over a block-paged KV pool, float in/out.
+
+    The paged twin of `raceit_attention_decode_fused`: instead of one
+    contiguous ``(B, H, Smax, D)`` cache buffer, k/v live in a shared page
+    *pool* — ``n_pages`` pages of ``page_size`` cache rows each, stored
+    once per KV head — and ``block_table[b, j]`` names the physical page
+    backing slot ``b``'s logical page ``j``. The kernel reads tiles
+    through the table (a third scalar-prefetch operand consumed only by
+    the k/v index maps), so the logical key extent is
+    ``max_pages * page_size`` and memory scales with pages *allocated*,
+    not ``Smax x slots``. Bit-identical to the contiguous wrapper on the
+    gathered layout of the same table: per-page quantizer scales reduce
+    over the same union of live prefixes (`masked_page_quantize`), and
+    page indirection moves only the DMA source of each key tile.
+
+    ``Sq > 1`` is the *chunked-prefill* call: the ``Sq`` queries of a
+    prompt chunk attend the slot's pages through the same executable, with
+    ``mask`` carrying the intra-chunk causal rule (query row ``j`` sees
+    columns ``< chunk_off + j + 1``); rows masked to nothing output zeros.
+    KV heads are repeated to H in int8 codes (the flat grid layout); the
+    decode hot loop should prefer `raceit_attention_decode_gqa_paged` when
+    ``n_kv_heads < n_heads``.
+    """
+    from .acam_attention import DEFAULT_BLOCK_G, DEFAULT_BLOCK_K
+    B, H, Sq, D = q.shape
+    n_pages, ps, KV, hd = k_pool.shape
+    rep = H // KV
+    qq, (k_codes, k_scale), (v_codes, v_scale) = \
+        _paged_quantize_operands(q, k_pool, v_pool, block_table, kv_len)
+    # flat grid layout: groups are query heads, so each physical page's
+    # stripe row page*H + h holds KV head h//rep (codes repeated, pool not)
+    to_rows = lambda c: jnp.repeat(c, rep, axis=2).transpose(0, 2, 1, 3) \
+        .reshape(n_pages * H, ps, hd)
+    if mask is not None:
+        Sk = block_table.shape[1] * ps
+        mask = jnp.broadcast_to(mask[:, None], (B, H, Sq, Sk)) \
+            .reshape(B * H, Sq, Sk)
+    out32, cmax = acam_attention_codes(
+        qq.codes.reshape(B * H, Sq, D), to_rows(k_codes), to_rows(v_codes),
+        qq.scale * k_scale, mask, kv_len=expand_row_lens(kv_len, H),
+        mode=softmax_mode, scale_by_sqrt_d=None if fold_scale else D,
+        block_k=block_k or DEFAULT_BLOCK_K, block_g=block_g or DEFAULT_BLOCK_G,
+        interpret=interpret, block_table=block_table, page_size=ps,
+        groups_per_slot=H)
+    p_scale = prob_requant_scale(cmax)
+    return (out32.astype(jnp.float32) * (p_scale * v_scale)
+            ).reshape(B, H, Sq, D)
+
+
+@partial(jax.jit, static_argnames=("softmax_mode", "fold_scale",
+                                   "block_k", "block_g", "interpret"))
+def raceit_attention_decode_gqa_paged(
+    q: jax.Array,       # (B, H, 1, D) float — the new token's queries
+    k_pool: jax.Array,  # (n_pages, page_size, KV, D) float — the page pool
+    v_pool: jax.Array,  # (n_pages, page_size, KV, D) float
+    kv_len: jax.Array,              # (B,) int32 per-slot fill levels
+    block_table: jax.Array,         # (B, max_pages) int32; 0 = trash page
+    mask: Optional[jax.Array] = None,  # (B, 1, max_pages*page_size) bool
+    softmax_mode: str = "pot",
+    fold_scale: bool = False,
+    block_k: int | None = None,
+    block_g: int | None = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """GQA-native fused decode over a block-paged KV pool, float in/out.
+
+    `raceit_attention_decode_gqa` with page-table indirection: the pool
+    keeps KV heads native (never repeated, as floats or codes — each
+    physical page's stripe row ``page*KV + kvh`` is KV head ``kvh``), the
+    grid's group dimension iterates B*KV KV-head groups with the ``rep``
+    sharing queries riding the tile's row dim, and the block table routes
+    each logical key tile to its physical page. Bit-identical to
+    `raceit_attention_decode_paged` on the same pool (repeat commutes with
+    everything after quantization) and hence to the contiguous wrappers on
+    the gathered layout. Decode-only (Sq=1): chunk calls take the flat
+    paged entry, whose row dim is free for chunk positions.
+    """
+    from .acam_attention import DEFAULT_BLOCK_G, DEFAULT_BLOCK_K
+    B, H, Sq, D = q.shape
+    n_pages, ps, KV, hd = k_pool.shape
+    if Sq != 1:
+        raise ValueError(f"decode path expects Sq=1, got {Sq}")
+    if H % KV:
+        raise ValueError(f"n_heads={H} not a multiple of n_kv_heads={KV}")
+    rep = H // KV
+    qq, (k_codes, k_scale), (v_codes, v_scale) = \
+        _paged_quantize_operands(q, k_pool, v_pool, block_table, kv_len)
+    to_rows = lambda c: c.transpose(0, 2, 1, 3).reshape(n_pages * KV, ps, hd)
+    if mask is not None:
+        Sk = block_table.shape[1] * ps
+        mask = jnp.broadcast_to(mask[:, None], (B, KV, rep, Sk)) \
+            .reshape(B * KV, rep, Sk)
+    out32, cmax = acam_attention_decode_gqa_codes(
+        qq.codes.reshape(B, KV, rep, D).reshape(B * KV, rep, D),
+        to_rows(k_codes), to_rows(v_codes), qq.scale * k_scale,
+        expand_row_lens(kv_len, KV), mask=mask,
+        mode=softmax_mode, scale_by_sqrt_d=None if fold_scale else D,
+        block_k=block_k or DEFAULT_BLOCK_K, block_g=block_g or DEFAULT_BLOCK_G,
+        interpret=interpret, block_table=block_table, page_size=ps,
+        groups_per_slot=KV)
     p_scale = prob_requant_scale(cmax)
     return (out32.astype(jnp.float32) * (p_scale * v_scale)
             ).reshape(B, H, Sq, D)

@@ -43,6 +43,19 @@ def main():
                          "the bucketed scheduler")
     ap.add_argument("--slots", type=int, default=4,
                     help="slot-pool size (--continuous) / bucket size")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="KV page granularity for block-paged continuous "
+                         "serving (the --continuous default on decoder-only "
+                         "all-attention models): the slot pool becomes a "
+                         "page pool and prompts stream into their slot in "
+                         "chunks instead of one pinned-width prefill")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="tokens streamed per slot per step while a prompt "
+                         "is mid-prefill (paged mode; default: --page-size)")
+    ap.add_argument("--prefill-len", type=int, default=None,
+                    help="pin the contiguous admission-prefill width "
+                         "(opts OUT of paged serving; prompts are then "
+                         "capped at this width)")
     ap.add_argument("--staged-attention", action="store_true",
                     help="opt out of the fused-attention serving default "
                          "(sugar for --exec-plan attention_prefill="
@@ -109,7 +122,15 @@ def main():
     print("[serve] resolved execution plan:")
     print("\n".join("  " + l for l in eng.explain_plan().splitlines()))
     if args.continuous:
-        sched = ContinuousBatcher(eng, n_slots=args.slots)
+        sched = ContinuousBatcher(eng, n_slots=args.slots,
+                                  prefill_len=args.prefill_len,
+                                  page_size=args.page_size,
+                                  prefill_chunk=args.prefill_chunk)
+        if sched.paged:
+            print(f"[serve] block-paged KV: page_size={sched.page_size}, "
+                  f"prefill_chunk={sched.prefill_chunk}, "
+                  f"{sched.n_pages} pages "
+                  f"({sched.n_pages - 1} allocatable + trash)")
     else:
         sched = BatchScheduler(eng, bucket_size=args.slots)
     rng = np.random.default_rng(0)
@@ -128,7 +149,8 @@ def main():
     if args.continuous:
         occ = (sched.decode_tokens / sched.decode_steps
                if sched.decode_steps else float("nan"))
-        print(f"[serve] continuous: {sched.prefills} prefills, "
+        extra = (f", {sched.chunk_calls} chunk calls" if sched.paged else "")
+        print(f"[serve] continuous: {sched.prefills} prefills{extra}, "
               f"{sched.decode_steps} decode steps, "
               f"{occ:.2f} tokens/step occupancy")
 

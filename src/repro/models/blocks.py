@@ -63,6 +63,9 @@ def apply_layer(p: Params, x: jax.Array, *, cfg: ModelConfig,
                 pad_lens: Optional[jax.Array] = None,
                 pad_prompt_len: Optional[jax.Array] = None,
                 slot_lens: Optional[jax.Array] = None,
+                block_table: Optional[jax.Array] = None,
+                page_size: Optional[int] = None,
+                chunk_offs: Optional[jax.Array] = None,
                 ) -> tuple[jax.Array, Any]:
     plan = as_plan(cfg, plan)
     h = layers.apply_norm(p["norm1"], x, cfg)
@@ -71,7 +74,9 @@ def apply_layer(p: Params, x: jax.Array, *, cfg: ModelConfig,
             p["attn"], h, cfg=cfg, plan=plan, positions=positions,
             local=(mixer == "attn_local"),
             cache=cache.get("attn") if cache else None, pad_lens=pad_lens,
-            pad_prompt_len=pad_prompt_len, slot_lens=slot_lens)
+            pad_prompt_len=pad_prompt_len, slot_lens=slot_lens,
+            block_table=block_table, page_size=page_size,
+            chunk_offs=chunk_offs)
         if cache is not None:
             new_cache = {"attn": new_cache}
     elif mixer == "mamba":
@@ -107,7 +112,35 @@ def apply_layer(p: Params, x: jax.Array, *, cfg: ModelConfig,
 # --------------------------------------------------------------------------
 
 def init_layer_cache(cfg: ModelConfig, mixer: str, batch: int, max_len: int,
-                     dtype) -> Optional[Params]:
+                     dtype, page_size: Optional[int] = None,
+                     n_pages: Optional[int] = None) -> Optional[Params]:
+    """One layer's decode cache; ``page_size``/``n_pages`` switch attention
+    layers to the block-paged pool form.
+
+    Paged caches store a page *pool* shared by every slot — k/v are
+    (n_pages, page_size, KV, hd) and a slot's logical columns are resolved
+    through the block table the caller threads alongside (one table for the
+    whole stack: every layer's pool uses the same page assignments, so the
+    table is serving state, not cache state). ``idx`` becomes a (batch,)
+    per-slot fill vector mirroring the serving layer's slot_lens. Physical
+    page 0 is the trash page and is never handed to a slot.
+    """
+    if page_size is not None:
+        if mixer == "attn":
+            hd = cfg.resolved_head_dim
+            if n_pages is None:
+                raise ValueError("paged caches need n_pages")
+            return {"attn": {
+                "k": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, hd),
+                               dtype),
+                "v": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, hd),
+                               dtype),
+                "idx": jnp.zeros((batch,), jnp.int32),
+            }}
+        raise NotImplementedError(
+            f"block-paged caches cover global attention layers only; "
+            f"mixer {mixer!r} keeps its own state layout (serve contiguous "
+            f"for this config)")
     if mixer in ("attn", "attn_local"):
         hd = cfg.resolved_head_dim
         # local layers keep a ring buffer of window size (DESIGN.md §4)
@@ -163,7 +196,9 @@ def init_stack(key, cfg: ModelConfig, dtype, n_layers: Optional[int] = None,
 
 
 def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
-                     n_layers: Optional[int] = None) -> Params:
+                     n_layers: Optional[int] = None,
+                     page_size: Optional[int] = None,
+                     n_pages: Optional[int] = None) -> Params:
     P, n_full, specs = layer_plan(cfg, n_layers)
 
     def stack_tree(tree, n):
@@ -174,12 +209,15 @@ def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
         if n_full == 0:
             break
         mixer, _ = specs[j]
-        c = init_layer_cache(cfg, mixer, batch, max_len, dtype)
+        c = init_layer_cache(cfg, mixer, batch, max_len, dtype,
+                             page_size=page_size, n_pages=n_pages)
         scan_caches.append(stack_tree(c, n_full) if c is not None else {})
     tail_caches = []
     for i in range(n_full * P, len(specs)):
         mixer, _ = specs[i]
-        tail_caches.append(init_layer_cache(cfg, mixer, batch, max_len, dtype) or {})
+        tail_caches.append(init_layer_cache(cfg, mixer, batch, max_len, dtype,
+                                            page_size=page_size,
+                                            n_pages=n_pages) or {})
     return {"scan": scan_caches, "tail": tail_caches}
 
 
@@ -201,6 +239,9 @@ def apply_stack(params: Params, x: jax.Array, *, cfg: ModelConfig,
                 pad_lens: Optional[jax.Array] = None,
                 pad_prompt_len: Optional[jax.Array] = None,
                 slot_lens: Optional[jax.Array] = None,
+                block_table: Optional[jax.Array] = None,
+                page_size: Optional[int] = None,
+                chunk_offs: Optional[jax.Array] = None,
                 ) -> tuple[jax.Array, Optional[Params]]:
     """Run the stack. caches is the pytree from init_stack_cache (or None).
 
@@ -211,6 +252,13 @@ def apply_stack(params: Params, x: jax.Array, *, cfg: ModelConfig,
     slot-pool caches (`repro.serve.continuous`): attention layers decode
     each row at its own fill level; SSM mixers ignore it (their state is
     overwritten whenever a slot is re-admitted).
+
+    ``block_table`` (B, max_pages) + static ``page_size`` mark the caches
+    as block-paged pools (see `init_layer_cache`); ONE table serves every
+    layer — each layer's pool uses the same page assignments, so the table
+    threads here as an argument, like slot_lens, not inside the cache
+    pytree. ``chunk_offs`` (B,) turns the step into a chunked-prefill call
+    (see `repro.models.layers.attention`).
     """
     plan = as_plan(cfg, plan)
     P, n_full, specs = layer_plan(cfg, n_layers)
@@ -229,7 +277,9 @@ def apply_stack(params: Params, x: jax.Array, *, cfg: ModelConfig,
                     ffn_kind=ffn_kind, positions=positions,
                     cache=(cache_j if cache_j else None), mesh_ctx=mesh_ctx,
                     enc_kv=None, pad_lens=pad_lens,
-                    pad_prompt_len=pad_prompt_len, slot_lens=slot_lens)
+                    pad_prompt_len=pad_prompt_len, slot_lens=slot_lens,
+                    block_table=block_table, page_size=page_size,
+                    chunk_offs=chunk_offs)
                 new_cs.append(nc if nc is not None else {})
             return x, tuple(new_cs)
 
@@ -251,7 +301,8 @@ def apply_stack(params: Params, x: jax.Array, *, cfg: ModelConfig,
             ffn_kind=ffn_kind, positions=positions,
             cache=(cache_t if cache_t else None), mesh_ctx=mesh_ctx,
             enc_kv=None, pad_lens=pad_lens, pad_prompt_len=pad_prompt_len,
-            slot_lens=slot_lens)
+            slot_lens=slot_lens, block_table=block_table,
+            page_size=page_size, chunk_offs=chunk_offs)
         new_tail.append(nc if nc is not None else {})
 
     new_caches = ({"scan": list(new_scan), "tail": new_tail} if has_cache else None)

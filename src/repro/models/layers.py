@@ -334,7 +334,9 @@ def _raceit_fused_decode(q, k, v, kv_len, scale, plan: ExecPlan,
     repeat entirely — this flat path stays registered as ``raceit_fused``
     (the MHA default and the GQA parity partner).
     """
-    from repro.kernels.ops import acam_attention_decode_codes, expand_row_lens
+    from repro.kernels.ops import (acam_attention_codes,
+                                   acam_attention_decode_codes,
+                                   expand_row_lens)
     b, sq, h, hd = q.shape
     smax, kv = k.shape[1], k.shape[2]
     rep = h // kv
@@ -344,15 +346,23 @@ def _raceit_fused_decode(q, k, v, kv_len, scale, plan: ExecPlan,
                                                           ).reshape(b * h,
                                                                     smax, hd)
     mask = None
-    if pad_valid is not None:  # (B, Smax) -> (B*H, 1, Smax)
-        mask = jnp.broadcast_to(pad_valid[:, None, None, :],
-                                (b, h, 1, smax)).reshape(b * h, 1, smax)
+    if pad_valid is not None:  # (B, Smax) or (B, Sq, Smax) -> (B*H, Sq, Smax)
+        pv = pad_valid[:, None, :] if pad_valid.ndim == 2 else pad_valid
+        mask = jnp.broadcast_to(pv[:, None], (b, h, sq, smax)
+                                ).reshape(b * h, sq, smax)
     kvl = expand_row_lens(kv_len, h)
-    out32, cmax = acam_attention_decode_codes(
-        qq.codes.transpose(0, 2, 1, 3).reshape(b * h, sq, hd),
-        fold(k_codes), fold(v_codes), qq.scale * k_scale,
-        kvl, mask=mask,
-        mode=plan.exec_cfg.softmax_mode)
+    qc = qq.codes.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    if sq == 1:
+        out32, cmax = acam_attention_decode_codes(
+            qc, fold(k_codes), fold(v_codes), qq.scale * k_scale,
+            kvl, mask=mask, mode=plan.exec_cfg.softmax_mode)
+    else:
+        # Sq > 1 is the chunked-prefill step (a prompt chunk's queries vs
+        # the same cache contract, causality carried by ``mask``); it takes
+        # the general entry — the decode entry is its Sq=1 specialization
+        out32, cmax = acam_attention_codes(
+            qc, fold(k_codes), fold(v_codes), qq.scale * k_scale,
+            mask, kv_len=kvl, mode=plan.exec_cfg.softmax_mode)
     return _decode_descale(out32, cmax, v_scale, (b, h, sq, hd)
                            ).transpose(0, 2, 1, 3)
 
@@ -376,6 +386,12 @@ def _raceit_gqa_decode(q, k, v, kv_len, scale, plan: ExecPlan,
     b, sq, h, hd = q.shape
     smax, kv = k.shape[1], k.shape[2]
     rep = h // kv
+    if sq > 1:
+        # chunked-prefill steps ride the flat entry: the GQA grid's row dim
+        # carries the rep sharing queries, which a chunk needs for its Sq
+        # positions — bit-identical either way, this is a dataflow choice
+        return _raceit_fused_decode(q, k, v, kv_len, scale, plan,
+                                    pad_valid=pad_valid)
     qq, (k_codes, k_scale), (v_codes, v_scale) = _decode_quantize(
         q, k, v, kv_len, scale)
     to_groups = lambda c: c.transpose(0, 2, 1, 3).reshape(b * kv, smax, hd)
@@ -392,6 +408,36 @@ def _raceit_gqa_decode(q, k, v, kv_len, scale, plan: ExecPlan,
         mode=plan.exec_cfg.softmax_mode)
     # (b*kv, rep, hd) rows land in head order
     return _decode_descale(out32, cmax, v_scale, (b, sq, h, hd))
+
+
+def _raceit_paged_decode(q, k_pool, v_pool, kv_len, scale, plan: ExecPlan,
+                         pad_valid=None, block_table=None, gqa=False):
+    """Decode / chunk attention over a block-paged KV pool.
+
+    q: (B, Sq, H, hd) layer layout — Sq=1 for the decode hot loop, Sq=C
+    for chunked-prefill steps; k/v: the (n_pages, page_size, KV, hd) page
+    pool shared by all slots, with ``block_table`` (B, max_pages) naming
+    each slot's pages (0 = the trash page). Delegates to the jitted paged
+    wrappers (`repro.kernels.ops.raceit_attention_decode_paged` /
+    `_gqa_paged`), which quantize the pool per page with scales reduced
+    over the union of live page entries — bit-identical to
+    `_raceit_fused_decode` / `_raceit_gqa_decode` on the gathered
+    contiguous layout of the same table. ``pad_valid`` (B, Smax) or
+    (B, Sq, Smax) bool is the chunk path's intra-chunk causal mask.
+    """
+    from repro.kernels.ops import (raceit_attention_decode_gqa_paged,
+                                   raceit_attention_decode_paged)
+    b, sq, h, hd = q.shape
+    qh = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)  # (B,H,Sq,hd)
+    mask = pad_valid
+    if mask is not None and mask.ndim == 2:  # (B, Smax) -> (B, Sq, Smax)
+        mask = mask[:, None, :]
+    fn = (raceit_attention_decode_gqa_paged if gqa and sq == 1
+          else raceit_attention_decode_paged)
+    out = fn(qh, k_pool.astype(jnp.float32), v_pool.astype(jnp.float32),
+             kv_len, block_table, mask=mask,
+             softmax_mode=plan.exec_cfg.softmax_mode, fold_scale=True)
+    return out.transpose(0, 2, 1, 3)  # (B, Sq, H, hd)
 
 
 def _attn_quantize(q, k, v, scale):
@@ -474,12 +520,47 @@ def attention(
     pad_lens: Optional[jax.Array] = None,
     pad_prompt_len: Optional[jax.Array] = None,
     slot_lens: Optional[jax.Array] = None,
+    block_table: Optional[jax.Array] = None,
+    page_size: Optional[int] = None,
+    chunk_offs: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, Optional[Params]]:
     """Self- (or cross-) attention with optional KV cache.
 
     cache = {"k": (B, Smax, KV, hd), "v": ..., "idx": int32 scalar — or a
     (B,) vector of per-slot write indices for slot-pool caches}.
     prefill: x covers [0, S); decode: x is a single new token (Sq=1).
+
+    ``block_table`` (B, max_pages) int32 + ``page_size`` (static int) switch
+    the cache to its block-paged form: ``cache["k"]``/``"v"`` are a page
+    *pool* (n_pages, page_size, KV, hd) shared by every slot, and row b's
+    logical column c lives at pool position (block_table[b, c // page_size],
+    c % page_size). Physical page 0 is the trash page — a block-table row
+    full of zeros makes its slot's writes land harmlessly there, which is
+    how the serving layer fences non-participating rows out of a batched
+    call. Paged caches take ``slot_lens`` as their only length authority
+    (``cache["idx"]`` mirrors it post-call) and come in two step shapes:
+
+    * the Sq=1 decode step — the new k/v land at logical column
+      ``slot_lens[b] - 1`` through the table;
+    * the chunked-prefill step (``chunk_offs`` (B,) given) — row b streams
+      prompt tokens into logical columns [chunk_offs[b], slot_lens[b]), so
+      a long prompt enters its slot across several pinned-width calls
+      (one compiled executable) interleaved with other slots' decode
+      steps. Queries past a row's chunk (and all queries of rows with
+      slot_lens == chunk_offs) are garbage rows: their writes route to the
+      trash page and their outputs are the caller's to discard. Causality
+      inside the chunk is a per-query mask (query j attends logical
+      columns <= chunk_offs[b] + j), built here and carried through the
+      backend as a (B, Sq, Smax) ``pad_valid``.
+
+    Paged dispatch honors the resolved backend's `BackendSpec.paged` flag:
+    paged-capable backends get the pool + table directly (the Pallas
+    kernels follow the indirection per key block and skip dead pages);
+    anything else — the digital/staged baselines, a pinned contiguous
+    backend — is served by gathering the table's pages back to contiguous
+    (B, max_pages*page_size, KV, hd) rows first, a degrade, never an
+    error. Local/ring layers and left-padded buckets (``pad_lens``) are
+    out of the paged contract and raise.
 
     ``slot_lens`` (B,) int32 is the per-row decode length authority for
     slot-level continuous batching (`repro.serve.continuous`): row b's
@@ -540,8 +621,61 @@ def attention(
     else:
         k, v = cross_kv  # encoder keys/values, precomputed
 
+    paged = block_table is not None
+    if chunk_offs is not None and not paged:
+        raise ValueError("chunk_offs is the chunked-prefill surface of "
+                         "block-paged caches; pass block_table/page_size")
+    if paged:
+        if page_size is None:
+            raise ValueError("paged caches need a static page_size")
+        if local:
+            raise NotImplementedError(
+                "block-paged KV does not cover local/ring layers (a ring "
+                "overwrite would need page recycling inside a slot)")
+        if cache is None or cross_kv is not None:
+            raise ValueError("block_table requires a self-attention KV cache")
+        if slot_lens is None:
+            raise ValueError("paged caches take their per-slot lengths from "
+                             "slot_lens")
+        if pad_lens is not None:
+            raise ValueError("paged slots are never left-padded; pad_lens "
+                             "does not apply")
+
     new_cache = None
-    if cache is not None and cross_kv is None:
+    if paged:
+        ps = int(page_size)
+        lens = jnp.asarray(slot_lens, jnp.int32)
+        bt = jnp.asarray(block_table, jnp.int32)
+        rows = jnp.arange(b)
+        if chunk_offs is not None:
+            # chunked prefill: row b streams its chunk into logical columns
+            # [chunk_offs[b], lens[b]); positions past the row's feed (and
+            # whole rows with lens == chunk_offs) route to the trash page
+            offs = jnp.asarray(chunk_offs, jnp.int32)
+            cols = offs[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+            live = cols < lens[:, None]
+            pages = jnp.where(live, bt[rows[:, None],
+                                       jnp.minimum(cols // ps,
+                                                   bt.shape[1] - 1)], 0)
+            slot = jnp.where(live, cols % ps, 0)
+            ck = cache["k"].at[pages, slot].set(k.astype(cache["k"].dtype))
+            cv = cache["v"].at[pages, slot].set(v.astype(cache["v"].dtype))
+        else:
+            if sq != 1:
+                raise ValueError("paged caches take Sq=1 decode steps or "
+                                 "chunked prefill (chunk_offs); whole-prompt "
+                                 "prefill goes through Model.prefill_chunk")
+            # decode: the new token is logical column lens[b] - 1; empty
+            # slots (lens == 0) write to the trash page
+            pos = jnp.maximum(lens - 1, 0)
+            pages = jnp.where(lens > 0, bt[rows, pos // ps], 0)
+            ck = cache["k"].at[pages, pos % ps].set(
+                k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[pages, pos % ps].set(
+                v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": ck, "v": cv, "idx": lens}
+        k, v = ck, cv
+    elif cache is not None and cross_kv is None:
         idx = cache["idx"]
         per_slot = getattr(idx, "ndim", 0) == 1  # slot-pool cache
         L = cache["k"].shape[1]
@@ -575,7 +709,43 @@ def attention(
 
     scale = 1.0 / math.sqrt(hd)
 
-    if sq == 1 and cache is not None:
+    if paged:
+        # decode or chunk step against the page pool, lengths from
+        # slot_lens; kv_len is the logical fill, capped at table capacity
+        mp = bt.shape[1]
+        lk = mp * ps
+        kv_len = jnp.minimum(lens, lk)
+        pad_valid = None
+        if chunk_offs is not None:
+            # intra-chunk causality: query j of row b sits at absolute
+            # position chunk_offs[b] + j and attends logical columns <= it
+            qpos = (jnp.asarray(chunk_offs, jnp.int32)[:, None]
+                    + jnp.arange(sq, dtype=jnp.int32)[None, :])
+            pad_valid = (jnp.arange(lk, dtype=jnp.int32)[None, None, :]
+                         <= qpos[..., None])
+        if plan.op("attention_decode").spec.paged:
+            o = plan.attention_decode(q, k, v, kv_len=kv_len, scale=scale,
+                                      pad_valid=pad_valid, block_table=bt,
+                                      page_size=ps)
+        else:
+            # non-paged backend under a paged cache (digital/staged
+            # baselines, explicit contiguous pins): gather the table's
+            # pages back to contiguous rows — a degrade, never an error.
+            # Columns past each row's kv_len are zeroed to reproduce a
+            # contiguous cache's never-written tail exactly: a row's
+            # out-of-range columns gather the shared trash page, whose
+            # content is other rows' fenced garbage — left in place it
+            # would pollute whole-tensor quantizer scales in the staged
+            # raceit paths and, when a faulted row parked NaNs there,
+            # contaminate healthy rows through prob-0 * NaN
+            kvh, hdim = k.shape[2], k.shape[3]
+            live = (jnp.arange(lk, dtype=jnp.int32)[None, :]
+                    < kv_len[:, None])[:, :, None, None]
+            o = plan.attention_decode(
+                q, jnp.where(live, k[bt].reshape(b, lk, kvh, hdim), 0),
+                jnp.where(live, v[bt].reshape(b, lk, kvh, hdim), 0),
+                kv_len=kv_len, scale=scale, pad_valid=pad_valid)
+    elif sq == 1 and cache is not None:
         # decode: single query against the cache, masked by validity/window.
         # (ring buffers: every written slot is inside the window by design,
         # so validity is always a prefix of length min(idx, buffer_len))

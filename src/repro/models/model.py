@@ -173,7 +173,8 @@ class Model:
 
     def _trunk(self, params: Params, tokens, positions, caches, enc_feats,
                use_remat: bool, pad_lens=None, pad_prompt_len=None,
-               slot_lens=None):
+               slot_lens=None, block_table=None, page_size=None,
+               chunk_offs=None):
         cfg = self.cfg
         x = layers.embed(params["embed"], tokens,
                          positions if positions.ndim == 2 else positions[0], cfg)
@@ -206,7 +207,9 @@ class Model:
                 params["blocks"], x, cfg=cfg, plan=self.plan,
                 positions=positions, caches=caches, mesh_ctx=self.mesh_ctx,
                 use_remat=use_remat, pad_lens=pad_lens,
-                pad_prompt_len=pad_prompt_len, slot_lens=slot_lens)
+                pad_prompt_len=pad_prompt_len, slot_lens=slot_lens,
+                block_table=block_table, page_size=page_size,
+                chunk_offs=chunk_offs)
 
         x = layers.apply_norm(params["final_norm"], x, cfg)
         return x, new_caches
@@ -221,8 +224,9 @@ class Model:
                            batch.get("enc_feats"), use_remat)
         return layers.unembed(params["embed"], x, self.cfg, self.plan)
 
-    def init_slot_cache(self, n_slots: int, max_len: int,
-                        dtype=None) -> Params:
+    def init_slot_cache(self, n_slots: int, max_len: int, dtype=None,
+                        page_size: Optional[int] = None,
+                        n_pages: Optional[int] = None) -> Params:
         """A fixed-shape *slot-pool* cache for continuous batching.
 
         Identical buffers to `init_cache`, but every per-layer ``idx``
@@ -230,11 +234,28 @@ class Model:
         slot — so `decode_step` writes each row's new k/v at its own
         column and slots fill/retire independently
         (`repro.serve.continuous.ContinuousBatcher` owns the lifecycle).
+
+        ``page_size``/``n_pages`` switch every attention layer's buffers
+        to the block-paged pool form (`blocks.init_layer_cache`): k/v
+        become an (n_pages, page_size, KV, hd) page pool shared by all
+        slots, addressed through the (n_slots, max_pages) block table the
+        serving layer owns and threads into `decode_step` /
+        `prefill_chunk`. ``max_len`` then only documents intent — capacity
+        is ``(n_pages - 1) * page_size`` pooled across slots (page 0 is
+        the trash page), which is the point: memory follows actual fill,
+        not n_slots x max_len. Raises for stacks with non-attention or
+        local mixers (their state has no paged form).
         """
         if self.cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "slot-pool caches cover decoder-only stacks; encoder-"
                 "decoder serving stays on bucketed batching")
+        if page_size is not None:
+            # paged caches are born per-slot: idx is already (n_slots,)
+            return blocks.init_stack_cache(
+                self.cfg, n_slots, max_len,
+                dtype or _dtype(self.cfg.compute_dtype),
+                page_size=page_size, n_pages=n_pages)
         cache = self.init_cache(n_slots, max_len, dtype)
         vec = lambda a: jnp.broadcast_to(a[..., None],
                                          a.shape + (n_slots,)).copy()
@@ -283,7 +304,8 @@ class Model:
         return logits, new_cache
 
     def decode_step(self, params: Params, token: jax.Array, cache: Params,
-                    pad_lens=None, pad_prompt_len=None, slot_lens=None):
+                    pad_lens=None, pad_prompt_len=None, slot_lens=None,
+                    block_table=None, page_size=None):
         """token: (B, 1). Returns (logits (B,1,V), cache).
 
         Each attention layer's decode step runs whatever backend the plan
@@ -307,6 +329,14 @@ class Model:
         fill level against a per-slot-``idx`` cache
         (`Model.init_slot_cache`) and the pool's shapes — hence the
         compiled executable — never change as requests come and go.
+
+        ``block_table`` (B, max_pages) int32 + static ``page_size`` address
+        a block-paged slot cache (`init_slot_cache(page_size=..., ...)`):
+        row b's logical cache column c lives at pool page
+        ``block_table[b, c // page_size]`` — one table for the whole stack.
+        Requires ``slot_lens``; the paged decode backends
+        (``raceit_*_paged``) follow the indirection in-kernel, anything
+        else is served by gathering pages to contiguous rows.
         """
         if slot_lens is not None:
             # per-slot positions: the new token's index among the row's
@@ -323,8 +353,44 @@ class Model:
         x, new_cache = self._trunk(params, token, positions, cache, None,
                                    False, pad_lens=pad_lens,
                                    pad_prompt_len=pad_prompt_len,
-                                   slot_lens=slot_lens)
+                                   slot_lens=slot_lens,
+                                   block_table=block_table,
+                                   page_size=page_size)
         logits = layers.unembed(params["embed"], x, self.cfg, self.plan)
+        return logits, new_cache
+
+    def prefill_chunk(self, params: Params, tokens: jax.Array, cache: Params,
+                      chunk_offs, chunk_lens, block_table, page_size):
+        """Stream one prompt chunk per slot into a block-paged cache.
+
+        tokens: (B, C) — row b carries ``chunk_lens[b]`` prompt tokens
+        destined for logical cache columns [chunk_offs[b], chunk_offs[b] +
+        chunk_lens[b]); columns past the feed are garbage padding whose
+        cache writes route to the trash page. C is the *pinned* chunk
+        width: every admission streams through the same (B, C) call, so
+        chunked prefill adds exactly one compiled executable regardless of
+        prompt length (Sarathi-style prefill/decode interleave without
+        shape churn). A row with ``chunk_lens[b] == 0`` does not
+        participate (its block-table row should be all trash, its output
+        row is garbage).
+
+        Returns (logits (B, 1, V), cache): row b's logits are taken at its
+        last fed position — meaningful only for rows whose chunk completes
+        their prompt (they are that request's first-token logits, the
+        chunked analog of `prefill`'s last-column logits).
+        """
+        offs = jnp.asarray(chunk_offs, jnp.int32)
+        feed = jnp.asarray(chunk_lens, jnp.int32)
+        positions = offs[:, None] + jnp.broadcast_to(
+            jnp.arange(tokens.shape[1], dtype=jnp.int32), tokens.shape)
+        x, new_cache = self._trunk(params, tokens, positions, cache, None,
+                                   False, slot_lens=offs + feed,
+                                   block_table=block_table,
+                                   page_size=page_size, chunk_offs=offs)
+        last = jnp.maximum(feed - 1, 0)[:, None, None]
+        x_last = jnp.take_along_axis(x, jnp.broadcast_to(
+            last, (x.shape[0], 1, x.shape[2])), axis=1)
+        logits = layers.unembed(params["embed"], x_last, self.cfg, self.plan)
         return logits, new_cache
 
     def _cache_index(self, cache: Params):

@@ -35,6 +35,40 @@ through whole-tensor quantizer scales (per-row kv_len keeps every *stale*
 tail out of the scale window — only live prefixes couple), SSM layers scan
 through pads, and ring-window local layers are near-equal once a prompt
 overflows the window.
+
+**Paged mode** (the default whenever the model qualifies — decoder-only,
+all-global-attention — and no explicit ``prefill_len`` pins the
+contiguous path): the slot pool's KV cache becomes a block-paged page
+pool (`Model.init_slot_cache(page_size=..., n_pages=...)`) and admission
+prefill becomes *chunked prefill-into-slot*:
+
+    admit    reserve every page the request can ever need (prompt +
+             n_new - 1 tokens, `serve.paged.PageAllocator`) — all-or-
+             nothing, so a running request never stalls on allocation
+             and backpressure happens at admission, where the request
+             just stays queued;
+    chunk    one pinned (n_slots, prefill_chunk) `Model.prefill_chunk`
+             call per step streams every mid-prompt slot's next chunk
+             into its pages, interleaved with the pool's decode steps
+             (Sarathi-style) — the pinned prompt-width cap is gone,
+             prompts are bounded by table capacity (engine.max_len), not
+             by a shared admission width;
+    decode   the same single decode executable, now with the block table
+             riding as a traced operand — the paged ``raceit_*_paged``
+             backends follow the page indirection in-kernel.
+
+Per-call block tables fence non-participants: a decode call zeroes the
+rows of slots still mid-prompt (their pad-token decode writes route to
+the trash page instead of corrupting freshly streamed pages), and a chunk
+call zeroes the rows of decoding slots. Quarantined slots *leak* their
+pages (`PageAllocator.leak_slot`): a decode-fault map is static per
+executable, so the slot row is dead for the run and returning its pages
+to the free list would hand a live request pages a dead row still
+addresses. In digital greedy mode paged serving keeps token-level solo
+parity (tests/test_serve_paged.py fuzzes the lifecycle); raceit modes add
+one softening to the list above — chunked prefill quantizes k/v per page
+as it streams, while a solo prefill's quantizer sees the whole prompt at
+once, so admission-path logits may differ in the last quantization step.
 """
 from __future__ import annotations
 
@@ -48,6 +82,7 @@ import numpy as np
 
 from .batching import Request, RequestError
 from .engine import GenerationEngine
+from .paged import PageAllocator
 
 __all__ = ["ContinuousBatcher"]
 
@@ -84,53 +119,132 @@ class _Slot:
     tokens: list          # generated so far (python ints)
     pad: int              # left-pad columns in this slot's cache
     length: int           # valid cache columns (pad + real, incl. generated)
+    fed: int = 0          # prompt tokens streamed so far (paged mode; a
+                          # slot with fed < len(prompt) is mid-prefill and
+                          # joins chunk calls instead of decode calls)
 
 
 class ContinuousBatcher:
     """Continuous batching over a fixed slot pool.
 
-    Same submit/run_all surface as `BatchScheduler`. ``prefill_len`` pins
-    the admission-prefill width; when omitted it locks to the longest
-    prompt queued at the first admission (later prompts must fit —
-    submit-time checked once locked). ``n_slots`` fixes the decode batch.
+    Same submit/run_all surface as `BatchScheduler`. ``n_slots`` fixes the
+    decode batch. The cache comes in two forms:
+
+    * **paged** (the default when the model qualifies — see
+      `pageable_reason`): a block-paged page pool; prompts stream into
+      their slot across pinned-width `Model.prefill_chunk` calls
+      (``prefill_chunk`` tokens per slot per step, default
+      ``page_size``), so no shared admission width exists and a prompt is
+      bounded only by ``engine.max_len``. ``page_size`` sets the page
+      granularity and ``n_pages`` the pool size (default: full capacity,
+      ``1 + n_slots * ceil(max_len / page_size)`` — shrink it to trade
+      admission backpressure for memory).
+    * **contiguous** (``paged=False``, or an explicit ``prefill_len``,
+      or a non-qualifying model): admission is a solo left-padded
+      prefill at the pinned ``prefill_len`` width scattered into the
+      slot's cache row; when ``prefill_len`` is omitted it locks to the
+      longest prompt queued at the first admission.
 
     Occupancy counters (`decode_steps`, `decode_tokens`, `prefills`,
-    `tokens_out`, `model_calls`) feed the ``serve/continuous_occupancy``
-    benchmark row: decode tokens per decode step on a mixed-length trace
-    is the metric the bucketed scheduler loses to slot idling (prefill is
-    accounted separately — it is a different cost class, and admission
-    prefills here are per-request while bucket prefills are bucket-wide).
+    `chunk_calls`, `tokens_out`, `model_calls`) feed the
+    ``serve/continuous_occupancy`` benchmark rows: decode tokens per
+    decode step on a mixed-length trace is the metric the bucketed
+    scheduler loses to slot idling (prefill is accounted separately — it
+    is a different cost class; in paged mode ``prefills`` counts
+    per-request prompt *completions* and ``chunk_calls`` the pinned-shape
+    chunk executions that did the streaming).
     """
 
     def __init__(self, engine: GenerationEngine, n_slots: int = 4,
                  prefill_len: Optional[int] = None, pad_id: int = 0,
-                 rng: Optional[jax.Array] = None):
+                 rng: Optional[jax.Array] = None,
+                 paged: Optional[bool] = None, page_size: int = 64,
+                 prefill_chunk: Optional[int] = None,
+                 n_pages: Optional[int] = None):
         self.engine = engine
         self.n = n_slots
         self.prefill_len = prefill_len
         self.pad_id = pad_id
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        why = self.pageable_reason(engine)
+        if paged is None:
+            # paged by default when the model qualifies; an explicit
+            # prefill_len is the back-compat pin for the contiguous path
+            paged = prefill_len is None and why is None
+        elif paged:
+            if why is not None:
+                raise ValueError(f"paged serving unsupported: {why}")
+            if prefill_len is not None:
+                raise ValueError(
+                    "prefill_len pins the contiguous admission path; paged "
+                    "mode streams prompts in chunks — pass prefill_chunk "
+                    "to size the chunk instead")
+        self.paged = paged
+        if paged:
+            self.page_size = int(page_size)
+            self.prefill_chunk = int(prefill_chunk or page_size)
+            if self.page_size < 1 or self.prefill_chunk < 1:
+                raise ValueError("page_size and prefill_chunk must be >= 1")
+            self.max_pages = -(-engine.max_len // self.page_size)
+            self.n_pages = (int(n_pages) if n_pages is not None
+                            else 1 + n_slots * self.max_pages)
+            self.allocator = PageAllocator(self.n_pages)
+            self.block_table = np.zeros((n_slots, self.max_pages), np.int32)
         self.queue: deque[Request] = deque()
         self.done: dict[int, Request] = {}
         self.slots: list[Optional[_Slot]] = [None] * n_slots
         # slots quarantined by decode-step faults: the injected fault maps
         # are static per executable (see repro.hw.noise), so a slot row
         # that produced non-finite logits once will again — never re-admit
-        # into it. Admission-prefill faults do NOT quarantine (the solo
-        # (1, P) prefill executable is not tied to any slot row).
+        # into it. Contiguous admission-prefill faults do NOT quarantine
+        # (the solo (1, P) prefill executable is not tied to any slot
+        # row); paged chunk-call faults DO (the chunk call shares the
+        # pool's (n_slots,) row geometry).
         self.dead_slots: set[int] = set()
         self.cache = None  # slot-pool cache, built at first admission
         self.tok = np.full((n_slots, 1), pad_id, np.int32)
         self.decode_steps = 0
         self.decode_tokens = 0
         self.prefills = 0
+        self.chunk_calls = 0
         self.tokens_out = 0
 
     # ------------------------------------------------------------ lifecycle
+    @staticmethod
+    def pageable_reason(engine: GenerationEngine) -> Optional[str]:
+        """None when the model can serve block-paged, else the reason.
+
+        Mirrors the capability-predicate convention of
+        `repro.exec.registry.BackendSpec`. The *backend* never disqualifies
+        a model — non-paged decode backends are served by the gather
+        degrade in `repro.models.layers.attention` — only cache layouts
+        with no paged form do (ring buffers, SSM state).
+        """
+        cfg = engine.cfg
+        if cfg.is_encoder_decoder:
+            return "encoder-decoder stacks serve bucketed, not slot-pooled"
+        mixers = {cfg.layer_spec(i)[0] for i in range(cfg.n_layers)}
+        if mixers != {"attn"}:
+            return (f"mixers {sorted(mixers - {'attn'})} have no paged "
+                    f"cache form (local ring buffers / SSM state)")
+        return None
+
     @property
     def model_calls(self) -> int:
-        """Prefill + decode executions — the occupancy denominator."""
+        """Prefill + decode executions — the occupancy denominator.
+
+        Paged mode counts chunk *calls* (its prefill executions);
+        ``prefills`` there counts prompt completions, not calls.
+        """
+        if self.paged:
+            return self.decode_steps + self.chunk_calls
         return self.decode_steps + self.prefills
+
+    def _pages_needed(self, req: Request) -> int:
+        # every column the request can ever write: the prompt plus the
+        # n_new - 1 decode-step writes (the last sampled token is never
+        # written — the request retires first)
+        return -(-(len(req.prompt) + req.n_new - 1) // self.page_size)
 
     def submit(self, req: Request):
         if len(req.prompt) == 0:
@@ -138,6 +252,19 @@ class ContinuousBatcher:
                 f"request {req.rid}: empty prompt — the first token is "
                 f"sampled from the prompt's last position, so there is "
                 f"nothing to prefill")
+        if self.paged:
+            if len(req.prompt) + req.n_new > self.engine.max_len:
+                raise ValueError(
+                    f"prompt of {len(req.prompt)} tokens + "
+                    f"n_new={req.n_new} exceeds the block table's capacity "
+                    f"(engine max_len={self.engine.max_len})")
+            if self._pages_needed(req) > self.n_pages - 1:
+                raise ValueError(
+                    f"request needs {self._pages_needed(req)} pages but "
+                    f"the pool has {self.n_pages - 1} allocatable pages "
+                    f"(n_pages={self.n_pages} incl. the trash page)")
+            self.queue.append(req)
+            return
         if self.prefill_len is not None and len(req.prompt) > self.prefill_len:
             raise ValueError(
                 f"prompt of {len(req.prompt)} tokens exceeds the pool's "
@@ -172,7 +299,15 @@ class ContinuousBatcher:
         self.prefill_len = width
 
     def _admit(self):
-        """Fill free slots from the queue: solo prefill -> row scatter."""
+        """Fill free slots from the queue.
+
+        Contiguous: solo prefill -> row scatter. Paged: reserve pages +
+        map the block-table row; the prompt streams in over later
+        `_chunk_step` calls.
+        """
+        if self.paged:
+            self._admit_paged()
+            return
         eng = self.engine
         for slot in range(self.n):
             if (slot in self.dead_slots or self.slots[slot] is not None
@@ -234,6 +369,51 @@ class ContinuousBatcher:
             self.slots[slot] = st
             self._retire_if_done(slot)
 
+    def _admit_paged(self):
+        """Reserve pages + block-table rows for queued requests.
+
+        Whole-request, all-up-front reservation: a request is admitted
+        only with every page it can ever write already owned, so running
+        requests never stall on allocation. When the head doesn't fit,
+        admission stops entirely (``break``, not skip) — serving a later,
+        smaller request first would break FIFO completion order and can
+        starve the head indefinitely.
+        """
+        eng = self.engine
+        for slot in range(self.n):
+            if (slot in self.dead_slots or self.slots[slot] is not None
+                    or not self.queue):
+                continue
+            head = self.queue[0]
+            pages = self.allocator.alloc(slot, self._pages_needed(head))
+            if pages is None:
+                break  # backpressure: head stays queued, FIFO intact
+            req = self.queue.popleft()
+            if self.cache is None:
+                self.cache = eng.model.init_slot_cache(
+                    self.n, eng.max_len, page_size=self.page_size,
+                    n_pages=self.n_pages)
+            self.block_table[slot, :] = 0
+            self.block_table[slot, : len(pages)] = pages
+            # no tokens yet: the slot is mid-prefill (fed=0) and joins
+            # chunk calls until the whole prompt is streamed in
+            self.slots[slot] = _Slot(req=req, tokens=[], pad=0, length=0)
+
+    def _quarantine(self, slot: int):
+        """Retire a faulted slot row for the rest of the run.
+
+        The injected fault maps are static per executable (repro.hw.noise)
+        so the row would fault every future call too. Paged slots *leak*
+        their pages — see `PageAllocator.leak_slot` for why they never
+        return to the free list.
+        """
+        self.slots[slot] = None
+        self.tok[slot, 0] = self.pad_id
+        self.dead_slots.add(slot)
+        if self.paged:
+            self.allocator.leak_slot(slot)
+            self.block_table[slot, :] = 0
+
     def _retire_if_done(self, slot: int) -> bool:
         st = self.slots[slot]
         if st is None or len(st.tokens) < st.req.n_new:
@@ -242,14 +422,76 @@ class ContinuousBatcher:
         self.done[st.req.rid] = st.req
         self.slots[slot] = None
         self.tok[slot, 0] = self.pad_id
+        if self.paged:
+            self.allocator.free_slot(slot)
+            self.block_table[slot, :] = 0
         return True
+
+    def _chunk_step(self):
+        """One pinned (n_slots, prefill_chunk) chunk call: stream every
+        mid-prompt slot's next chunk into its pages.
+
+        The per-call block table zeroes non-participating rows, fencing
+        their (pad-token) writes to the trash page. A slot whose prompt
+        completes here samples its first token from the chunk's
+        last-position logits and joins the *same* step's decode call.
+        """
+        feeding = [i for i, s in enumerate(self.slots)
+                   if s is not None and s.fed < len(s.req.prompt)]
+        if not feeding:
+            return
+        eng = self.engine
+        C = self.prefill_chunk
+        toks = np.full((self.n, C), self.pad_id, np.int32)
+        offs = np.zeros(self.n, np.int32)
+        feeds = np.zeros(self.n, np.int32)
+        bt = np.zeros_like(self.block_table)
+        for i in feeding:
+            st = self.slots[i]
+            feed = min(C, len(st.req.prompt) - st.fed)
+            toks[i, :feed] = st.req.prompt[st.fed: st.fed + feed]
+            offs[i] = st.fed
+            feeds[i] = feed
+            bt[i] = self.block_table[i]
+        logits, self.cache = eng._prefill_chunk(
+            eng.params, jnp.asarray(toks), self.cache, jnp.asarray(offs),
+            jnp.asarray(feeds), jnp.asarray(bt), self.page_size)
+        self.chunk_calls += 1
+        bad = eng.nonfinite_rows(logits[:, -1])
+        self.rng, sub = jax.random.split(self.rng)
+        sampled = np.asarray(eng._sample(logits[:, -1], sub))
+        for i in feeding:
+            st = self.slots[i]
+            if bad[i]:
+                # unlike the contiguous solo admission prefill, the chunk
+                # call shares the pool's (n_slots,) row geometry — a
+                # faulted row is dead for the run exactly like a decode
+                # fault, so quarantine (and leak the pages)
+                st.req.error = RequestError(
+                    rid=st.req.rid, stage="prefill", step=st.fed,
+                    reason="non-finite logits from a prefill chunk")
+                self.done[st.req.rid] = st.req
+                self._quarantine(i)
+                continue
+            st.fed += int(feeds[i])
+            if st.fed == len(st.req.prompt):
+                # prompt complete: the chunk's last fed position IS the
+                # prompt's last position, so its logits seed generation
+                self.prefills += 1
+                tok0 = int(sampled[i])
+                st.tokens.append(tok0)
+                st.length = len(st.req.prompt)
+                self.tokens_out += 1
+                self.tok[i, 0] = tok0
+                self._retire_if_done(i)
 
     # ---------------------------------------------------------------- steps
     def step(self) -> list[int]:
-        """Admit into free slots, then decode the pool once.
+        """Admit into free slots, chunk mid-prompt slots (paged), then
+        decode the pool once.
 
-        Returns the rids retired by this step (admission can retire
-        n_new=1 requests without a decode).
+        Returns the rids retired by this step (admission / a completing
+        chunk can retire n_new=1 requests without a decode).
         """
         before = set(self.done)
         self._admit()
@@ -263,19 +505,54 @@ class ContinuousBatcher:
                     rid=req.rid, stage="admit", step=0,
                     reason="all slots quarantined by decode-step faults")
                 self.done[req.rid] = req
-        active = [i for i, s in enumerate(self.slots) if s is not None]
+        elif (self.paged and self.queue
+              and all(s is None for s in self.slots)
+              and self._pages_needed(self.queue[0]) > self.allocator.n_free):
+            # page-pool deadlock: nothing is running (so no retire will
+            # ever free a page — quarantine leaks shrank the pool for
+            # good) and the head can never be admitted. Fail it with a
+            # structured error; smaller queued requests get their chance
+            # next step, in FIFO order.
+            req = self.queue.popleft()
+            req.error = RequestError(
+                rid=req.rid, stage="admit", step=0,
+                reason=f"request needs {self._pages_needed(req)} pages but "
+                       f"only {self.allocator.n_free} remain allocatable "
+                       f"({self.allocator.n_leaked} leaked by quarantined "
+                       f"slots)")
+            self.done[req.rid] = req
+        if self.paged:
+            self._chunk_step()
+        # mid-prefill paged slots (fed < prompt) sit this decode out —
+        # their rows ride as empty (kv_len 0, block-table row zeroed)
+        active = [i for i, s in enumerate(self.slots)
+                  if s is not None
+                  and (not self.paged or s.fed == len(s.req.prompt))]
         if active:
             eng = self.engine
             # per-slot lengths INCLUDING this step's write; 0 = empty slot
             slot_lens = np.zeros(self.n, np.int32)
-            pad_lens = np.zeros(self.n, np.int32)
             for i in active:
                 slot_lens[i] = self.slots[i].length + 1
-                pad_lens[i] = self.slots[i].pad
-            logits, self.cache = eng._decode(
-                eng.params, jnp.asarray(self.tok), self.cache,
-                jnp.asarray(pad_lens), jnp.int32(self.prefill_len),
-                jnp.asarray(slot_lens))
+            if self.paged:
+                # per-call block table: only decoding rows keep their
+                # pages; everyone else (empty, dead, mid-prefill) writes
+                # to the trash page
+                bt = np.zeros_like(self.block_table)
+                for i in active:
+                    bt[i] = self.block_table[i]
+                logits, self.cache = eng._decode(
+                    eng.params, jnp.asarray(self.tok), self.cache,
+                    None, None, jnp.asarray(slot_lens), jnp.asarray(bt),
+                    page_size=self.page_size)
+            else:
+                pad_lens = np.zeros(self.n, np.int32)
+                for i in active:
+                    pad_lens[i] = self.slots[i].pad
+                logits, self.cache = eng._decode(
+                    eng.params, jnp.asarray(self.tok), self.cache,
+                    jnp.asarray(pad_lens), jnp.int32(self.prefill_len),
+                    jnp.asarray(slot_lens))
             self.decode_steps += 1
             self.rng, sub = jax.random.split(self.rng)
             bad = eng.nonfinite_rows(logits[:, -1])
@@ -293,9 +570,7 @@ class ContinuousBatcher:
                         rid=st.req.rid, stage="decode", step=len(st.tokens),
                         reason="non-finite logits at the decode step")
                     self.done[st.req.rid] = st.req
-                    self.slots[i] = None
-                    self.tok[i, 0] = self.pad_id
-                    self.dead_slots.add(i)
+                    self._quarantine(i)
                     continue
                 st.length += 1
                 st.tokens.append(int(toks[i]))

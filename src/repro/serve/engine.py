@@ -64,7 +64,18 @@ class GenerationEngine:
         # enc_feats as an extra traced arg (re-jitting per generate() call
         # recompiled the whole prefill graph every request).
         self._prefill = jax.jit(self.model.prefill)
-        self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
+        # one decode executable serves contiguous and block-paged slot
+        # pools alike: page_size is static (it shapes the index math), the
+        # block table is traced (tables change every step, the executable
+        # must not)
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,),
+                               static_argnames=("page_size",))
+        # the chunked-prefill step of paged continuous batching: one
+        # pinned (n_slots, chunk) executable streams every admission's
+        # prompt into its slot's pages (repro.serve.continuous)
+        self._prefill_chunk = jax.jit(self.model.prefill_chunk,
+                                      donate_argnums=(2,),
+                                      static_argnames=("page_size",))
 
     def generate(self, prompts: jax.Array, n_new: int,
                  rng: Optional[jax.Array] = None,

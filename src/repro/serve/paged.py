@@ -1,0 +1,121 @@
+"""Host-side page bookkeeping for block-paged KV serving.
+
+`PageAllocator` owns the physical pages of the pool cache built by
+`Model.init_slot_cache(page_size=..., n_pages=...)`. It is plain Python
+over numpy — page assignment is a *scheduling* decision, made once per
+admission on the host, so none of this touches a traced value: the device
+only ever sees the resulting (n_slots, max_pages) block-table array.
+
+Invariants (checked by `assert_invariants`, and asserted after every step
+by the property suite in tests/test_serve_paged.py):
+
+* page 0 is the trash page — never owned, never free, never issued;
+* every physical page is in exactly one of three sets: the free list, one
+  slot's owned list, or the leaked set;
+* leaked pages (quarantined slots — see `ContinuousBatcher`) are never
+  re-issued: a decode-fault map is static per executable, so a slot row
+  that faulted once will fault every step, and handing its pages to a new
+  request would couple the new request's cache to a dead row's writes.
+
+Allocation is whole-request and up-front: `ContinuousBatcher` reserves
+every page a request can ever need (prompt + n_new - 1 tokens) at
+admission, so a running request can never stall mid-stream waiting for a
+page — backpressure happens at admission time, where the request can
+simply stay queued.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+__all__ = ["PageAllocator"]
+
+
+class PageAllocator:
+    """Free-list allocator over physical pages [1, n_pages).
+
+    ``alloc(slot, n)`` hands ``n`` pages to ``slot`` (returns None without
+    side effects when fewer than ``n`` are free); ``free_slot`` returns a
+    slot's pages to the free list (normal retire); ``leak_slot`` drops
+    them permanently (quarantine).
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError(f"n_pages={n_pages}: need at least the trash "
+                             f"page plus one allocatable page")
+        self.n_pages = n_pages
+        # LIFO free list: recently-freed pages are re-issued first, which
+        # maximizes page shuffling across a trace — exactly the property
+        # the paged kernels' permutation-invariance tests feed on
+        self._free: list[int] = list(range(n_pages - 1, 0, -1))
+        self._owned: dict[int, list[int]] = {}
+        self._leaked: set[int] = set()
+
+    # ------------------------------------------------------------- queries
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_leaked(self) -> int:
+        return len(self._leaked)
+
+    @property
+    def pages_in_use(self) -> int:
+        """Pages currently owned by live slots (excludes trash + leaked)."""
+        return sum(len(p) for p in self._owned.values())
+
+    def owned(self, slot: int) -> list[int]:
+        return list(self._owned.get(slot, ()))
+
+    # ------------------------------------------------------- state changes
+    def alloc(self, slot: int, n: int) -> Optional[list[int]]:
+        """Reserve ``n`` pages for ``slot``; None (no side effects) when
+        the free list is short — the caller's backpressure signal."""
+        if slot in self._owned:
+            raise ValueError(f"slot {slot} already owns pages; free or "
+                             f"leak it before re-admitting")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned[slot] = pages
+        return list(pages)
+
+    def free_slot(self, slot: int) -> None:
+        """Normal retire: the slot's pages return to the free list."""
+        self._free.extend(self._owned.pop(slot, ()))
+
+    def leak_slot(self, slot: int) -> None:
+        """Quarantine retire: the slot's pages leave the economy for good.
+        The dead row keeps faulting every call; its writes are fenced to
+        the trash page by per-call block tables, but re-issuing pages a
+        dead row has addressed means one missed fence corrupts a live
+        request — cheap insurance on an already-degraded pool."""
+        self._leaked.update(self._owned.pop(slot, ()))
+
+    # ---------------------------------------------------------- invariants
+    def assert_invariants(self) -> None:
+        """Every page in exactly one of {free, owned-by-one-slot, leaked};
+        page 0 in none of them."""
+        seen: dict[int, str] = {}
+
+        def claim(page: int, owner: str) -> None:
+            if page == 0:
+                raise AssertionError(f"trash page 0 appears in {owner}")
+            if not 0 < page < self.n_pages:
+                raise AssertionError(f"page {page} out of range in {owner}")
+            if page in seen:
+                raise AssertionError(
+                    f"page {page} double-held: {seen[page]} and {owner}")
+            seen[page] = owner
+
+        for p in self._free:
+            claim(p, "free")
+        for slot, pages in self._owned.items():
+            for p in pages:
+                claim(p, f"slot {slot}")
+        for p in self._leaked:
+            claim(p, "leaked")
+        if len(seen) != self.n_pages - 1:
+            missing = set(range(1, self.n_pages)) - set(seen)
+            raise AssertionError(f"pages lost from the economy: {missing}")

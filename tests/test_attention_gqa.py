@@ -123,7 +123,7 @@ def test_layer_gqa_decode_bitexact_vs_fused_adapter(rng, rep):
     """The plan's default GQA decode == the flat fused adapter, bitwise —
     including per-row pad masks (left-padded buckets)."""
     plan = _plan(rep)
-    assert plan.backend("attention_decode") == "raceit_gqa_rows"
+    assert plan.backend("attention_decode") == "raceit_gqa_paged"
     B, Smax, KV, hd = 3, 64, 2, 16
     H = KV * rep
     fill = 40
@@ -154,16 +154,16 @@ def test_resolution_gqa_vs_mha():
     nothing lost). The scalar-kv_len variants stay registered for pins."""
     import warnings
     gqa = resolve_plan(_gqa_cfg(4), ExecConfig.serving())
-    assert gqa.backend("attention_decode") == "raceit_gqa_rows"
+    assert gqa.backend("attention_decode") == "raceit_gqa_paged"
     assert gqa.op("attention_decode").reason is None
     with warnings.catch_warnings():
         warnings.simplefilter("error")  # any RuntimeWarning fails the test
         mha = resolve_plan(_gqa_cfg(1), ExecConfig.serving())
     op = mha.op("attention_decode")
-    assert op.backend == "raceit_fused_rows"
-    assert op.requested == "raceit_gqa_rows"
+    assert op.backend == "raceit_fused_paged"
+    assert op.requested == "raceit_gqa_paged"
     assert "KV-head sharing" in op.reason
-    assert "raceit_gqa_rows" in mha.explain()
+    assert "raceit_gqa_paged" in mha.explain()
     # the pre-rows backends remain pinnable for A/B
     pinned = resolve_plan(_gqa_cfg(4), ExecConfig.serving().with_ops(
         attention_decode="raceit_gqa_native"))

@@ -205,7 +205,9 @@ def test_layer_adapters_perrow_bitexact_and_plan_dispatch(rng):
     match the flat backends' max-fill degrade bitwise (zeroed tails)."""
     rep, B, Smax, KV, hd = 4, 4, 64, 2, 16
     plan = resolve_plan(_gqa_cfg(rep), ExecConfig.serving())
-    assert plan.backend("attention_decode") == "raceit_gqa_rows"
+    # the paged default serves contiguous callers too (no block table ->
+    # falls through to the rows path, still per-row kv_len)
+    assert plan.backend("attention_decode") == "raceit_gqa_paged"
     H = KV * rep
     scale = 1.0 / math.sqrt(hd)
     lens = jnp.asarray((64, 20, 7, 0), jnp.int32)

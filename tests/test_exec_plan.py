@@ -71,8 +71,10 @@ def test_every_combo_resolves_deterministically(mode, softmax_mode, fidelity,
                      else "raceit_staged")
         assert chosen["attention_prefill"] == want_attn
         # _cfg() is a GQA config (n_kv_heads=2 < n_heads=4): a supported
-        # fused decode resolves to the per-row GQA-native kernel
-        want_dec = ("raceit_gqa_rows" if fused and fidelity == "int"
+        # fused decode resolves to the block-paged GQA-native kernel
+        # (paged backends also serve contiguous caches — block_table=None
+        # falls through to the per-row path)
+        want_dec = ("raceit_gqa_paged" if fused and fidelity == "int"
                     else want_attn)
         assert chosen["attention_decode"] == want_dec
     # explain() renders every slot and never raises
@@ -91,12 +93,12 @@ def test_unsupported_fused_degrades_with_structured_reason():
         resolve_plan(_cfg(), ec)  # cached: no second warning
     op = plan.op("attention_decode")
     assert op.backend == "raceit_staged"
-    # decode's preference head is the per-row GQA-native kernel; the whole
+    # decode's preference head is the paged GQA-native kernel; the whole
     # fused family is rejected by the same fidelity reason
-    assert op.requested == "raceit_gqa_rows"
+    assert op.requested == "raceit_gqa_paged"
     assert "acam" in op.reason
-    for name in ("raceit_gqa_rows", "raceit_gqa_native",
-                 "raceit_fused_rows", "raceit_fused"):
+    for name in ("raceit_gqa_paged", "raceit_gqa_rows", "raceit_gqa_native",
+                 "raceit_fused_paged", "raceit_fused_rows", "raceit_fused"):
         assert any(d.slot == "attention_decode" and d.requested == name
                    and d.chosen == "raceit_staged" for d in plan.degrades)
     msgs = [x for x in w if issubclass(x.category, RuntimeWarning)
@@ -158,7 +160,8 @@ def test_registry_lists_expected_backends():
     assert {"digital", "raceit_staged", "raceit_fused"} <= names[
         "attention_prefill"]
     assert {"digital", "raceit_staged", "raceit_fused",
-            "raceit_fused_rows", "raceit_gqa_rows"} <= names[
+            "raceit_fused_rows", "raceit_gqa_rows",
+            "raceit_fused_paged", "raceit_gqa_paged"} <= names[
         "attention_decode"]
     assert {"int", "acam"} <= names["dd_matmul"]
     assert {"digital", "raceit_q8"} <= names["lm_head"]

@@ -88,13 +88,14 @@ def test_equal_length_bucket_passes_no_pads(key, monkeypatch):
 
 def test_raceit_gqa_bucket_serves(key):
     """Mixed-length bucket on the raceit serving default (GQA config →
-    raceit_gqa_rows decode): runs end-to-end, tokens well-formed. Bitwise
-    solo parity is a digital-mode guarantee — raceit quantizer scales span
-    the whole batch tensor by design (see serve/batching.py); the masking
-    itself is proven bit-exact against the staged oracle in
+    raceit_gqa_paged decode, serving the bucketed contiguous cache via its
+    no-block-table fall-through): runs end-to-end, tokens well-formed.
+    Bitwise solo parity is a digital-mode guarantee — raceit quantizer
+    scales span the whole batch tensor by design (see serve/batching.py);
+    the masking itself is proven bit-exact against the staged oracle in
     tests/test_attention_gqa.py."""
     eng = _engine(key, name="command-r-35b", exec_cfg=ExecConfig.serving())
-    assert eng.plan.backend("attention_decode") == "raceit_gqa_rows"
+    assert eng.plan.backend("attention_decode") == "raceit_gqa_paged"
     sched = BatchScheduler(eng, bucket_size=2)
     rng = np.random.default_rng(3)
     for i, n in enumerate((6, 3)):

@@ -75,16 +75,27 @@ def test_continuous_parity_rope_gqa_digital(key):
 
 def test_continuous_single_compiled_step(key):
     """The whole mixed-length run reuses ONE decode executable and ONE
-    admission-prefill executable — the slot pool pins both shapes
-    (satellite 6: the bucketed path re-jits per bucket shape)."""
+    prefill executable — the slot pool pins both shapes (satellite 6: the
+    bucketed path re-jits per bucket shape). Paged mode (the default)
+    streams admissions through the pinned (n_slots, prefill_chunk) chunk
+    executable; the contiguous pin is the (1, prefill_len) solo prefill."""
     eng = _engine(key)
     rng = np.random.default_rng(2)
     cb = ContinuousBatcher(eng, n_slots=2)
+    assert cb.paged  # decoder-only all-attn model: paged by default
     for r in _mixed_trace(rng):
         cb.submit(r)
     cb.run_all()
     assert eng._decode._cache_size() == 1
-    assert eng._prefill._cache_size() == 1
+    assert eng._prefill_chunk._cache_size() == 1
+
+    eng2 = _engine(key)
+    cb2 = ContinuousBatcher(eng2, n_slots=2, paged=False)
+    for r in _mixed_trace(rng):
+        cb2.submit(r)
+    cb2.run_all()
+    assert eng2._decode._cache_size() == 1
+    assert eng2._prefill._cache_size() == 1
 
 
 def test_continuous_raceit_serving_smoke(key):
@@ -93,7 +104,7 @@ def test_continuous_raceit_serving_smoke(key):
     tokens (bitwise solo parity is the digital-mode guarantee; raceit
     couples slots only through whole-tensor activation scales)."""
     eng = _engine(key, name="command-r-35b", exec_cfg=ExecConfig.serving())
-    assert eng.plan.backend("attention_decode") == "raceit_gqa_rows"
+    assert eng.plan.backend("attention_decode") == "raceit_gqa_paged"
     rng = np.random.default_rng(3)
     cb = ContinuousBatcher(eng, n_slots=2)
     for r in _mixed_trace(rng, n=3):
@@ -149,8 +160,8 @@ def test_jointly_infeasible_queue_fails_fast_with_state_intact(key):
     pool width locks to the longest queued prompt; that must surface at
     lock time (nothing admitted, queue intact) — not as a crash after
     other requests are already in flight."""
-    eng = _engine(key)  # max_len = 64
-    cb = ContinuousBatcher(eng, n_slots=2)
+    eng = _engine(key)  # max_len = 64; paged=False: the shared-width lock
+    cb = ContinuousBatcher(eng, n_slots=2, paged=False)  # is contiguous-only
     cb.submit(Request(0, np.arange(4, dtype=np.int32), n_new=60))  # 4+60 ok
     cb.submit(Request(1, np.arange(8, dtype=np.int32), n_new=1))   # width 8
     with pytest.raises(ValueError, match="jointly infeasible"):
