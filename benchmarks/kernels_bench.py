@@ -365,7 +365,11 @@ def _serving_longprompt_rows():
     params = model.init(jax.random.PRNGKey(0))
     eng = GenerationEngine(cfg, params, exec_cfg=ExecConfig(), max_len=128)
     ps = 16
-    cb = ContinuousBatcher(eng, n_slots=4, page_size=ps)
+    # prefix cache OFF: promotion would drain pages_in_use into the shared
+    # pool mid-trace and the peak-footprint row would measure cache policy,
+    # not the block-paged reservation this row tracks (the cache has its
+    # own rows in _serving_prefix_router_rows)
+    cb = ContinuousBatcher(eng, n_slots=4, page_size=ps, prefix_cache=False)
     assert cb.paged, "paged serving must be the default on this model"
     rng = np.random.default_rng(0)
     lens_nnew = ((48, 4), (17, 2), (33, 3), (8, 6), (64, 2), (21, 4),
@@ -458,6 +462,111 @@ def _serving_occupancy_rows():
     ]
 
 
+def _serving_prefix_router_rows():
+    """Prefix-cache TTFT/footprint wins + weighted-fair routing fairness.
+
+    Two deterministic scheduler traces (zero run-to-run noise), each with
+    its acceptance gate asserted in-bench so a regression fails the run
+    outright rather than waiting for the trend comparison:
+
+    * a **shared-prefix trace** — six requests carrying the same 64-token
+      system prompt with distinct tails — served twice on the same
+      engine, prefix cache off then on. Emits
+      ``prefix_hit_ttft_ratio`` (mean step-TTFT with the cache over
+      without; must be < 1.0 — hits must actually skip chunk calls) and
+      ``prefix_hit_pages_saved_pct`` (prompt pages mapped from cache as a
+      % of all full prompt pages; floor 50 — the trace repeats one
+      4-page prefix 6x, so anything lower means lookups or promotion
+      broke). Outputs must match bitwise between the two runs (digital
+      greedy hit-path parity).
+    * a **two-tenant backlog** under the wfq router (weights 3:1),
+      truncated mid-backlog so the *router* (not the offered load)
+      determines who got served. Emits ``router_fairness_jain`` — Jain's
+      index over weight-normalized served tokens, floor 0.8. Higher is
+      better (the one board row that is): the floor is the gate; the
+      trend row is for visibility.
+    """
+    import jax
+    import numpy as np
+
+    from repro.configs.base import ExecConfig, ModelConfig
+    from repro.models import Model
+    from repro.serve import ContinuousBatcher, GenerationEngine, Request
+
+    cfg = ModelConfig(name="pfx", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_ff=128, vocab_size=256, head_dim=16,
+                      param_dtype="float32", compute_dtype="float32")
+    model = Model(cfg, ExecConfig())
+    params = model.init(jax.random.PRNGKey(0))
+    eng = GenerationEngine(cfg, params, exec_cfg=ExecConfig(), max_len=128)
+    ps = 16
+    rng = np.random.default_rng(0)
+    system = rng.integers(0, 255, 64).astype(np.int32)  # 4 shareable pages
+    tails = [rng.integers(0, 255, t).astype(np.int32)
+             for t in (5, 9, 3, 7, 11, 6)]
+
+    def serve(prefix_on):
+        cb = ContinuousBatcher(eng, n_slots=2, page_size=ps,
+                               prefix_cache=prefix_on)
+        for i, t in enumerate(tails):
+            cb.submit(Request(i, np.concatenate([system, t]), n_new=4))
+        cb.run_all()
+        if any(r.error is not None for r in cb.done.values()):
+            raise SystemExit("shared-prefix bench trace failed a request")
+        return cb
+
+    cold, hot = serve(False), serve(True)
+    for rid, r in cold.done.items():
+        if not np.array_equal(r.result, hot.done[rid].result):
+            raise SystemExit(
+                f"prefix-cache hit path diverged from the cold path on "
+                f"req {rid}: {hot.done[rid].result.tolist()} vs "
+                f"{r.result.tolist()} — shared pages must be bitwise "
+                f"transparent in digital greedy mode")
+    ttft_ratio = (hot.metrics.ttft.summary()["mean"]
+                  / cold.metrics.ttft.summary()["mean"])
+    if ttft_ratio >= 1.0:
+        raise SystemExit(
+            f"prefix-cache TTFT ratio {ttft_ratio:.2f} >= 1.0: hits are "
+            f"not skipping chunk calls on a fully-shared prefix trace")
+    stats = hot.prefix.stats()
+    total = stats["prefix_hit_pages"] + stats["prefix_miss_pages"]
+    saved_pct = 100.0 * stats["prefix_hit_pages"] / total
+    if saved_pct < 50.0:
+        raise SystemExit(
+            f"prefix cache saved {saved_pct:.0f}% of prompt pages on a "
+            f"6x-repeated 4-page prefix (floor 50%) — lookup or "
+            f"promotion is broken")
+
+    wfq = ContinuousBatcher(eng, n_slots=2, page_size=ps, router="wfq",
+                            tenant_weights={"heavy": 3.0, "light": 1.0})
+    rid = 0
+    for tenant in ("heavy", "light"):
+        for _ in range(6):
+            wfq.submit(Request(rid, rng.integers(0, 255, 8).astype(np.int32),
+                               n_new=8, tenant=tenant))
+            rid += 1
+    for _ in range(24):  # truncate mid-backlog: service reflects the policy
+        wfq.step()
+    fairness = wfq.metrics.fairness(wfq.queue.weights)
+    if fairness < 0.8:
+        raise SystemExit(
+            f"wfq served a 3:1 two-tenant backlog at Jain fairness "
+            f"{fairness:.3f} (floor 0.8) over weight-normalized tokens "
+            f"{wfq.metrics.tenant_tokens}")
+    return [
+        ("serve/prefix_hit_ttft_ratio", ttft_ratio,
+         f"ttft_mean_{hot.metrics.ttft.summary()['mean']:.1f}steps_vs_"
+         f"{cold.metrics.ttft.summary()['mean']:.1f}cold"),
+        ("serve/prefix_hit_pages_saved_pct", saved_pct,
+         f"{stats['prefix_hit_pages']}hit_{stats['prefix_miss_pages']}miss_"
+         f"gate_floor50"),
+        ("serve/router_fairness_jain", fairness,
+         f"tokens_{'_'.join(f'{t}{n}' for t, n in sorted(wfq.metrics.tenant_tokens.items()))}"
+         f"_gate_floor0.8_higher_better"),
+    ]
+
+
 def _noise_sweep_rows():
     """Fast accuracy-under-device-noise smoke (the CI noise gate).
 
@@ -509,6 +618,7 @@ def run() -> list[tuple]:
     rows.extend(_decode_paged_rows(rng))
     rows.extend(_serving_occupancy_rows())
     rows.extend(_serving_longprompt_rows())
+    rows.extend(_serving_prefix_router_rows())
     rows.extend(_noise_sweep_rows())
 
     for name, us, derived in rows:

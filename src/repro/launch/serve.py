@@ -16,6 +16,21 @@ import argparse
 import json
 
 
+def parse_tenant_weights(pairs: list[str]) -> dict:
+    """["tenant=weight", ...] -> AdmissionRouter weights dict."""
+    weights = {}
+    for pair in pairs:
+        tenant, _, w = pair.partition("=")
+        try:
+            weights[tenant] = float(w)
+        except ValueError:
+            w = ""
+        if not tenant or not w:
+            raise SystemExit(f"--tenant-weights entries are tenant=weight, "
+                             f"got {pair!r}")
+    return weights
+
+
 def parse_exec_plan(pairs: list[str]) -> tuple:
     """["slot=backend", ...] -> ExecConfig.op_overrides tuple."""
     overrides = []
@@ -56,6 +71,29 @@ def main():
                     help="pin the contiguous admission-prefill width "
                          "(opts OUT of paged serving; prompts are then "
                          "capped at this width)")
+    ap.add_argument("--router", default="fifo",
+                    choices=["fifo", "priority", "wfq"],
+                    help="admission policy across tenants (--continuous): "
+                         "global arrival order, strict priority by tenant "
+                         "weight, or weighted-fair deficit round-robin on "
+                         "a token budget")
+    ap.add_argument("--tenant-weights", nargs="*", default=[],
+                    metavar="TENANT=WEIGHT",
+                    help="tenant weights for --router priority/wfq, e.g. "
+                         "'paid=3 free=1'; the synthetic request trace "
+                         "round-robins over the named tenants (default: "
+                         "one 'default' tenant at weight 1)")
+    ap.add_argument("--tenant-cap", type=int, default=None,
+                    help="per-tenant queue-depth cap: submits past it are "
+                         "rejected with a structured admit-stage error")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=None,
+                    help="share identical prompt-prefix KV pages across "
+                         "requests (content-addressed, refcounted; the "
+                         "paged default)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false",
+                    help="disable prompt-prefix KV page sharing")
     ap.add_argument("--staged-attention", action="store_true",
                     help="opt out of the fused-attention serving default "
                          "(sugar for --exec-plan attention_prefill="
@@ -121,23 +159,42 @@ def main():
     eng = GenerationEngine(cfg, params, exec_cfg=exec_cfg, max_len=128)
     print("[serve] resolved execution plan:")
     print("\n".join("  " + l for l in eng.explain_plan().splitlines()))
+    weights = parse_tenant_weights(args.tenant_weights)
     if args.continuous:
         sched = ContinuousBatcher(eng, n_slots=args.slots,
                                   prefill_len=args.prefill_len,
                                   page_size=args.page_size,
-                                  prefill_chunk=args.prefill_chunk)
+                                  prefill_chunk=args.prefill_chunk,
+                                  router=args.router,
+                                  tenant_weights=weights or None,
+                                  tenant_cap=args.tenant_cap,
+                                  prefix_cache=args.prefix_cache)
         if sched.paged:
             print(f"[serve] block-paged KV: page_size={sched.page_size}, "
                   f"prefill_chunk={sched.prefill_chunk}, "
                   f"{sched.n_pages} pages "
-                  f"({sched.n_pages - 1} allocatable + trash)")
+                  f"({sched.n_pages - 1} allocatable + trash); "
+                  f"prefix cache "
+                  f"{'on' if sched.prefix is not None else 'off'}")
+        print(f"[serve] router: {sched.queue.policy}"
+              + (f", weights {weights}" if weights else "")
+              + (f", depth cap {args.tenant_cap}" if args.tenant_cap else ""))
     else:
+        if (args.router != "fifo" or weights or args.tenant_cap is not None
+                or args.prefix_cache is not None):
+            raise SystemExit("--router/--tenant-weights/--tenant-cap/"
+                             "--prefix-cache belong to the continuous "
+                             "batcher; add --continuous")
         sched = BatchScheduler(eng, bucket_size=args.slots)
+    # the synthetic trace round-robins requests over the named tenants so
+    # the routing policies have traffic classes to arbitrate
+    tenants = sorted(weights) or ["default"]
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         sched.submit(Request(rid, rng.integers(0, cfg.vocab_size,
                                                rng.integers(4, 9)).astype(np.int32),
-                             n_new=args.n_new))
+                             n_new=args.n_new,
+                             tenant=tenants[rid % len(tenants)]))
     done = sched.run_all()
     for rid in sorted(done):
         r = done[rid]
@@ -153,6 +210,30 @@ def main():
         print(f"[serve] continuous: {sched.prefills} prefills{extra}, "
               f"{sched.decode_steps} decode steps, "
               f"{occ:.2f} tokens/step occupancy")
+        s = sched.summary()
+        print(f"[serve] latency (steps): "
+              f"ttft p50={s['ttft_p50']} p99={s['ttft_p99']} "
+              f"(n={s['ttft_n']}); "
+              f"per-token p50={s['tpl_p50']} p99={s['tpl_p99']} "
+              f"(n={s['tpl_n']})")
+        print(f"[serve] tenants: tokens {s['tenant_tokens']}, "
+              f"fairness (Jain) {s['fairness_jain']:.3f}, "
+              f"rejected {s['rejected']}, errored {s['errored']}")
+        if sched.paged:
+            print(f"[serve] pages: {s['pages_in_use']} private + "
+                  f"{s['pages_shared']} shared in use, "
+                  f"{s['pages_leaked']} leaked, {s['pages_free']} free "
+                  f"(peak {s['pages_peak_in_use']} of "
+                  f"{s['pages_allocatable']})")
+            if sched.prefix is not None:
+                print(f"[serve] prefix cache: "
+                      f"{s['prefix_hit_pages']} hit / "
+                      f"{s['prefix_miss_pages']} miss pages "
+                      f"({s['prefix_hit_rate_pct']:.1f}% hit rate), "
+                      f"{s['prefix_pages_saved']} pages saved, "
+                      f"{s['prefix_promotions']} promotions, "
+                      f"{s['prefix_evictions']} evictions, "
+                      f"{s['prefix_entries']} entries resident")
 
 
 if __name__ == "__main__":

@@ -64,9 +64,19 @@ class RequestError:
 
 @dataclasses.dataclass
 class Request:
+    """One generation request.
+
+    ``tenant`` names the traffic class the admission router
+    (`repro.serve.router.AdmissionRouter`) schedules by — weights,
+    priorities and queue-depth caps are all keyed on it. The default
+    tenant makes single-tenant callers (and every pre-router test)
+    tenant-blind.
+    """
+
     rid: int
     prompt: np.ndarray  # (P,) int32
     n_new: int
+    tenant: str = "default"
     result: Optional[np.ndarray] = None
     error: Optional[RequestError] = None
 

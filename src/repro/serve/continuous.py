@@ -61,20 +61,43 @@ Per-call block tables fence non-participants: a decode call zeroes the
 rows of slots still mid-prompt (their pad-token decode writes route to
 the trash page instead of corrupting freshly streamed pages), and a chunk
 call zeroes the rows of decoding slots. Quarantined slots *leak* their
-pages (`PageAllocator.leak_slot`): a decode-fault map is static per
-executable, so the slot row is dead for the run and returning its pages
-to the free list would hand a live request pages a dead row still
+private pages (`PageAllocator.leak_slot`): a decode-fault map is static
+per executable, so the slot row is dead for the run and returning its
+pages to the free list would hand a live request pages a dead row still
 addresses. In digital greedy mode paged serving keeps token-level solo
 parity (tests/test_serve_paged.py fuzzes the lifecycle); raceit modes add
 one softening to the list above — chunked prefill quantizes k/v per page
 as it streams, while a solo prefill's quantizer sees the whole prompt at
 once, so admission-path logits may differ in the last quantization step.
+
+**The service layer on top** (PR 8): three host-side subsystems ride the
+paged pool without touching a kernel —
+
+* a **content-addressed prefix cache** (`serve.prefix.PrefixCache`, on by
+  default in paged mode): paged admission walks the prompt's chained
+  page hashes, maps every hit page straight into the slot's block table
+  (refcounted, immutable) and starts chunk streaming at the first miss;
+  miss requests promote their fully-streamed prompt pages back into the
+  cache. Hit-path outputs stay bitwise equal to cold-path outputs in
+  digital greedy mode: a shared page holds exactly the KV values the
+  request would have computed (same tokens, same absolute positions,
+  per-tensor RACE-IT scales), and the paged kernels are page-permutation
+  invariant;
+* a **tenant-aware admission router** (`serve.router.AdmissionRouter`)
+  replaces the FIFO deque: fifo / priority / weighted-fair (deficit
+  round-robin on a token budget) policies decide which queued request
+  the next admission sees, with per-tenant depth caps rejecting at
+  submit via structured ``RequestError(stage="admit")``;
+* a **step-clock metrics recorder** (`serve.metrics.ServeMetrics`):
+  TTFT and per-token-latency histograms in scheduler steps (no
+  wall-clock anywhere near traced code), per-tenant service counts, and
+  the allocator/prefix counters — all surfaced by `summary()` and the
+  ``serve/`` bench rows.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -82,7 +105,10 @@ import numpy as np
 
 from .batching import Request, RequestError
 from .engine import GenerationEngine
+from .metrics import ServeMetrics
 from .paged import PageAllocator
+from .prefix import PrefixCache
+from .router import AdmissionRouter
 
 __all__ = ["ContinuousBatcher"]
 
@@ -121,7 +147,18 @@ class _Slot:
     length: int           # valid cache columns (pad + real, incl. generated)
     fed: int = 0          # prompt tokens streamed so far (paged mode; a
                           # slot with fed < len(prompt) is mid-prefill and
-                          # joins chunk calls instead of decode calls)
+                          # joins chunk calls instead of decode calls).
+                          # Starts at the prefix-cache hit length: hit
+                          # pages are already resident, streaming begins
+                          # at the first miss token.
+    promoted: int = 0     # leading block-table pages that are shared
+                          # (prefix-cache hits + own promotions) — the
+                          # promotion walk's resume point
+    chain: bytes = b""    # chain digest after page ``promoted - 1``
+    promo_dead: bool = False  # promotion stopped (a concurrent request
+                          # registered the same digest first; promoting
+                          # past it would scramble the refs-then-owned
+                          # block-row order)
 
 
 class ContinuousBatcher:
@@ -160,7 +197,11 @@ class ContinuousBatcher:
                  rng: Optional[jax.Array] = None,
                  paged: Optional[bool] = None, page_size: int = 64,
                  prefill_chunk: Optional[int] = None,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None,
+                 router: Union[AdmissionRouter, str, None] = None,
+                 tenant_weights: Optional[dict] = None,
+                 tenant_cap: Optional[int] = None,
+                 prefix_cache: Optional[bool] = None):
         self.engine = engine
         self.n = n_slots
         self.prefill_len = prefill_len
@@ -180,6 +221,7 @@ class ContinuousBatcher:
                     "mode streams prompts in chunks — pass prefill_chunk "
                     "to size the chunk instead")
         self.paged = paged
+        self.prefix: Optional[PrefixCache] = None
         if paged:
             self.page_size = int(page_size)
             self.prefill_chunk = int(prefill_chunk or page_size)
@@ -190,7 +232,28 @@ class ContinuousBatcher:
                             else 1 + n_slots * self.max_pages)
             self.allocator = PageAllocator(self.n_pages)
             self.block_table = np.zeros((n_slots, self.max_pages), np.int32)
-        self.queue: deque[Request] = deque()
+            # content-addressed prefix reuse is the paged default: shared
+            # prompt pages cost nothing when no prefixes repeat (pure
+            # host-side bookkeeping) and admission maps hits for free
+            if prefix_cache is None or prefix_cache:
+                self.prefix = PrefixCache(self.allocator, self.page_size)
+        elif prefix_cache:
+            raise ValueError(
+                "the prefix cache shares immutable pages of the block-paged "
+                "pool; contiguous slot caches have nothing to share — drop "
+                "prefix_cache or serve paged")
+        if isinstance(router, AdmissionRouter):
+            if tenant_weights is not None or tenant_cap is not None:
+                raise ValueError(
+                    "pass tenant_weights/tenant_cap to the AdmissionRouter "
+                    "you are constructing, not alongside an instance")
+            self.queue = router
+        else:
+            self.queue = AdmissionRouter(policy=router or "fifo",
+                                         weights=tenant_weights,
+                                         max_queue_per_tenant=tenant_cap)
+        self.metrics = ServeMetrics()
+        self._rids: set[int] = set()  # every rid ever submitted
         self.done: dict[int, Request] = {}
         self.slots: list[Optional[_Slot]] = [None] * n_slots
         # slots quarantined by decode-step faults: the injected fault maps
@@ -246,7 +309,38 @@ class ContinuousBatcher:
         # written — the request retires first)
         return -(-(len(req.prompt) + req.n_new - 1) // self.page_size)
 
+    def _head_starved(self) -> bool:
+        """True when the policy head can NEVER be admitted from here.
+
+        Called only with every slot empty (nothing running, so no retire
+        will ever free a page). Prefix-cache hits reduce the head's
+        private-page need, and every ref==0 cached page is reclaimable by
+        eviction (with no live slots, *all* shared pages are at ref 0
+        except the head's own pinned hit run, which it doesn't need to
+        allocate anyway) — so starvation means: private need exceeds free
+        plus evictable.
+        """
+        head = self.queue[0]
+        need = self._pages_needed(head)
+        headroom = self.allocator.n_free
+        if self.prefix is not None:
+            hits, _, _ = self.prefix.match(head.prompt)
+            need -= len(hits)
+            headroom += self.prefix.n_evictable(
+                pinned=frozenset(page for _, page in hits))
+        return need > headroom
+
     def submit(self, req: Request):
+        if req.rid in self._rids:
+            # a silent re-submit would overwrite the first request's entry
+            # in ``done`` AND cross-wire allocator ownership (two live
+            # slots keyed by one rid) — malformed traffic, so raise rather
+            # than reject with a structured error
+            raise ValueError(
+                f"duplicate rid {req.rid}: a request with this rid was "
+                f"already submitted to this batcher (done, running, or "
+                f"queued) — rids key the result map and page ownership, "
+                f"so reuse would silently drop the earlier request")
         if len(req.prompt) == 0:
             raise ValueError(
                 f"request {req.rid}: empty prompt — the first token is "
@@ -263,7 +357,7 @@ class ContinuousBatcher:
                     f"request needs {self._pages_needed(req)} pages but "
                     f"the pool has {self.n_pages - 1} allocatable pages "
                     f"(n_pages={self.n_pages} incl. the trash page)")
-            self.queue.append(req)
+            self._enqueue(req)
             return
         if self.prefill_len is not None and len(req.prompt) > self.prefill_len:
             raise ValueError(
@@ -278,7 +372,21 @@ class ContinuousBatcher:
             raise ValueError(
                 f"prompt width {width} + n_new={req.n_new} exceeds the "
                 f"engine's max_len={self.engine.max_len}")
-        self.queue.append(req)
+        self._enqueue(req)
+
+    def _enqueue(self, req: Request):
+        """Hand a validated request to the admission router; a depth-cap
+        rejection retires it immediately with the router's structured
+        ``RequestError(stage="admit")`` (overload is data, not an
+        exception)."""
+        self._rids.add(req.rid)
+        err = self.queue.push(req)
+        if err is not None:
+            req.error = err
+            self.done[req.rid] = req
+            self.metrics.on_reject(req.rid)
+        else:
+            self.metrics.on_submit(req.rid, req.tenant)
 
     def _lock_prefill_len(self):
         if self.prefill_len is not None:
@@ -348,6 +456,7 @@ class ContinuousBatcher:
                     rid=req.rid, stage="prefill", step=0,
                     reason="non-finite logits from the admission prefill")
                 self.done[req.rid] = req
+                self.metrics.on_error(req.rid)
                 continue
             if self.cache is None:
                 self.cache = eng.model.init_slot_cache(self.n, eng.max_len)
@@ -365,6 +474,7 @@ class ContinuousBatcher:
             st = _Slot(req=req, tokens=[tok0], pad=pad,
                        length=self.prefill_len)
             self.tokens_out += 1
+            self.metrics.on_first_token(req.rid, req.tenant)
             self.tok[slot, 0] = tok0
             self.slots[slot] = st
             self._retire_if_done(slot)
@@ -376,8 +486,18 @@ class ContinuousBatcher:
         only with every page it can ever write already owned, so running
         requests never stall on allocation. When the head doesn't fit,
         admission stops entirely (``break``, not skip) — serving a later,
-        smaller request first would break FIFO completion order and can
-        starve the head indefinitely.
+        smaller request first would override the router's choice and can
+        starve the chosen tenant indefinitely (the policy head blocks,
+        whatever the policy).
+
+        With the prefix cache on, admission first walks the prompt's
+        chained page hashes: every hit page is mapped into the head of
+        the slot's block-table row as an immutable shared reference
+        (ref += 1, never written — the slot's first write lands at
+        ``fed``, which starts past the hit), only the remaining pages are
+        allocated privately, and chunk streaming begins at the first
+        miss. Under allocation pressure, ref==0 cached pages are evicted
+        LRU-first (the hit run itself is pinned) before giving up.
         """
         eng = self.engine
         for slot in range(self.n):
@@ -385,19 +505,37 @@ class ContinuousBatcher:
                     or not self.queue):
                 continue
             head = self.queue[0]
-            pages = self.allocator.alloc(slot, self._pages_needed(head))
+            hits, digest, hit_tokens = [], b"", 0
+            if self.prefix is not None:
+                hits, digest, hit_tokens = self.prefix.match(head.prompt)
+            hit_pages = [page for _, page in hits]
+            need = self._pages_needed(head) - len(hit_pages)
+            if need > self.allocator.n_free and self.prefix is not None:
+                self.prefix.evict(need - self.allocator.n_free,
+                                  pinned=frozenset(hit_pages))
+            pages = self.allocator.alloc(slot, need)
             if pages is None:
-                break  # backpressure: head stays queued, FIFO intact
+                break  # backpressure: head stays queued, policy intact
             req = self.queue.popleft()
+            for page in hit_pages:
+                self.allocator.acquire(slot, page)
+            if self.prefix is not None:
+                self.prefix.commit(hits, len(head.prompt) // self.page_size)
             if self.cache is None:
                 self.cache = eng.model.init_slot_cache(
                     self.n, eng.max_len, page_size=self.page_size,
                     n_pages=self.n_pages)
             self.block_table[slot, :] = 0
-            self.block_table[slot, : len(pages)] = pages
-            # no tokens yet: the slot is mid-prefill (fed=0) and joins
-            # chunk calls until the whole prompt is streamed in
-            self.slots[slot] = _Slot(req=req, tokens=[], pad=0, length=0)
+            self.block_table[slot, : len(hit_pages)] = hit_pages
+            self.block_table[slot, len(hit_pages):
+                             len(hit_pages) + len(pages)] = pages
+            # no tokens yet: the slot is mid-prefill and joins chunk calls
+            # until the rest of the prompt (everything past the hit) is
+            # streamed in; promotion resumes the hash chain at the hit's
+            # last digest
+            self.slots[slot] = _Slot(req=req, tokens=[], pad=0, length=0,
+                                     fed=hit_tokens,
+                                     promoted=len(hit_pages), chain=digest)
 
     def _quarantine(self, slot: int):
         """Retire a faulted slot row for the rest of the run.
@@ -471,9 +609,11 @@ class ContinuousBatcher:
                     rid=st.req.rid, stage="prefill", step=st.fed,
                     reason="non-finite logits from a prefill chunk")
                 self.done[st.req.rid] = st.req
+                self.metrics.on_error(st.req.rid)
                 self._quarantine(i)
                 continue
             st.fed += int(feeds[i])
+            self._promote_streamed(i)
             if st.fed == len(st.req.prompt):
                 # prompt complete: the chunk's last fed position IS the
                 # prompt's last position, so its logits seed generation
@@ -482,8 +622,41 @@ class ContinuousBatcher:
                 st.tokens.append(tok0)
                 st.length = len(st.req.prompt)
                 self.tokens_out += 1
+                self.metrics.on_first_token(st.req.rid, st.req.tenant)
                 self.tok[i, 0] = tok0
                 self._retire_if_done(i)
+
+    def _promote_streamed(self, slot: int):
+        """Register this slot's fully-streamed prompt pages as shared.
+
+        Runs after every chunk advance (a healthy chunk only — a faulted
+        row quarantines before reaching here, so a page written by a
+        faulting call is never promoted). Walks forward from
+        ``st.promoted``: a page is promotable once the stream passed its
+        end, and only full *prompt* pages qualify (a page that will also
+        hold decode-step writes stays private — it is not immutable).
+        Promotion stops for good at a digest some concurrent request
+        registered first: its copy serves future lookups, ours stays
+        private, and promoting past it would interleave shared and
+        private pages in the block-table row (the allocator keeps rows
+        as refs-then-owned).
+        """
+        st = self.slots[slot]
+        if self.prefix is None or st.promo_dead:
+            return
+        ps = self.page_size
+        prompt = st.req.prompt
+        limit = min(st.fed, len(prompt)) // ps  # pages fully streamed
+        while st.promoted < limit:
+            lo = st.promoted * ps
+            page = int(self.block_table[slot, st.promoted])
+            ok, nxt = self.prefix.promote(slot, page, st.chain,
+                                          prompt[lo: lo + ps])
+            if not ok:
+                st.promo_dead = True
+                break
+            st.chain = nxt
+            st.promoted += 1
 
     # ---------------------------------------------------------------- steps
     def step(self) -> list[int]:
@@ -493,6 +666,7 @@ class ContinuousBatcher:
         Returns the rids retired by this step (admission / a completing
         chunk can retire n_new=1 requests without a decode).
         """
+        self.metrics.tick()
         before = set(self.done)
         self._admit()
         if self.queue and len(self.dead_slots) >= self.n:
@@ -505,14 +679,16 @@ class ContinuousBatcher:
                     rid=req.rid, stage="admit", step=0,
                     reason="all slots quarantined by decode-step faults")
                 self.done[req.rid] = req
+                self.metrics.on_error(req.rid)
         elif (self.paged and self.queue
               and all(s is None for s in self.slots)
-              and self._pages_needed(self.queue[0]) > self.allocator.n_free):
+              and self._head_starved()):
             # page-pool deadlock: nothing is running (so no retire will
             # ever free a page — quarantine leaks shrank the pool for
-            # good) and the head can never be admitted. Fail it with a
-            # structured error; smaller queued requests get their chance
-            # next step, in FIFO order.
+            # good) and the head can never be admitted, even counting its
+            # prefix-cache hits and every evictable cached page. Fail it
+            # with a structured error; smaller queued requests get their
+            # chance next step, in policy order.
             req = self.queue.popleft()
             req.error = RequestError(
                 rid=req.rid, stage="admit", step=0,
@@ -521,6 +697,7 @@ class ContinuousBatcher:
                        f"({self.allocator.n_leaked} leaked by quarantined "
                        f"slots)")
             self.done[req.rid] = req
+            self.metrics.on_error(req.rid)
         if self.paged:
             self._chunk_step()
         # mid-prefill paged slots (fed < prompt) sit this decode out —
@@ -570,12 +747,14 @@ class ContinuousBatcher:
                         rid=st.req.rid, stage="decode", step=len(st.tokens),
                         reason="non-finite logits at the decode step")
                     self.done[st.req.rid] = st.req
+                    self.metrics.on_error(st.req.rid)
                     self._quarantine(i)
                     continue
                 st.length += 1
                 st.tokens.append(int(toks[i]))
                 self.tokens_out += 1
                 self.decode_tokens += 1
+                self.metrics.on_token(st.req.rid, st.req.tenant)
                 self.tok[i, 0] = int(toks[i])
                 self._retire_if_done(i)
         return sorted(set(self.done) - before)
@@ -584,3 +763,35 @@ class ContinuousBatcher:
         while self.queue or any(s is not None for s in self.slots):
             self.step()
         return self.done
+
+    def summary(self) -> dict:
+        """End-of-run service report: occupancy counters, step-clock
+        latency percentiles (TTFT / per-token, in scheduler steps),
+        per-tenant service + fairness, and — in paged mode — the page
+        economy (in-use / shared / leaked / peak) and prefix-cache hit
+        rates. Everything here is a deterministic host-side counter; the
+        launcher prints it and the ``serve/`` bench rows gate on it.
+        """
+        s = {
+            "requests_done": len(self.done),
+            "prefills": self.prefills,
+            "decode_steps": self.decode_steps,
+            "decode_tokens": self.decode_tokens,
+            "tokens_out": self.tokens_out,
+            "model_calls": self.model_calls,
+            "router_policy": self.queue.policy,
+            "router_rejected": self.queue.rejected,
+            "queue_depths": self.queue.depths(),
+            "fairness_jain": self.metrics.fairness(self.queue.weights),
+        }
+        if self.paged:
+            s["chunk_calls"] = self.chunk_calls
+            a = self.allocator
+            s.update(pages_allocatable=self.n_pages - 1,
+                     pages_in_use=a.pages_in_use, pages_shared=a.n_shared,
+                     pages_leaked=a.n_leaked, pages_free=a.n_free,
+                     pages_peak_in_use=a.peak_in_use)
+            if self.prefix is not None:
+                s.update(self.prefix.stats())
+        s.update(self.metrics.summary())
+        return s

@@ -215,6 +215,31 @@ def test_empty_prompt_rejected(key):
     assert not cb.queue
 
 
+def test_duplicate_rid_rejected_at_submit(key):
+    """rids key the result map and (paged) page ownership: a silent
+    re-submit would overwrite the first request's ``done`` entry and
+    cross-wire allocator slots, so the batcher raises at submit —
+    malformed traffic, not operational backpressure. The collision is
+    caught whether the first holder is queued, running, or already done."""
+    eng = _engine(key)
+    cb = ContinuousBatcher(eng, n_slots=2)
+    rng = np.random.default_rng(0)
+    cb.submit(Request(3, rng.integers(0, 255, 4).astype(np.int32), n_new=2))
+    with pytest.raises(ValueError, match="duplicate rid 3"):
+        cb.submit(Request(3, rng.integers(0, 255, 5).astype(np.int32),
+                          n_new=1))  # collides while QUEUED
+    cb.run_all()
+    assert cb.done[3].error is None
+    with pytest.raises(ValueError, match="duplicate rid 3"):
+        cb.submit(Request(3, rng.integers(0, 255, 4).astype(np.int32),
+                          n_new=2))  # collides while DONE
+    assert cb.done[3].result is not None  # the original survived intact
+    # distinct rids keep flowing
+    cb.submit(Request(4, rng.integers(0, 255, 4).astype(np.int32), n_new=1))
+    cb.run_all()
+    assert cb.done[4].error is None
+
+
 def _faulty_engine(key, fault_rate, seed=0):
     """Digital engine with ONLY the decode attention routed through the
     noisy staged backend, all sigmas at worst_case but fault_rate as

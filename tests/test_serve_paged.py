@@ -7,22 +7,30 @@ The paged-mode contract (serve/continuous.py + serve/paged.py):
   pages and however its neighbours churned (admission order, page
   shuffling, retire-mid-chunk, backpressure stalls change *nothing*);
 * **page-economy invariants** — after every step, each physical page is
-  in exactly one of {free list, one slot's owned list, leaked}, the trash
-  page 0 is in none, live block-table rows mirror ownership exactly, and
-  once the trace drains every page is back on the free list;
-* **quarantine accounting** — a faulted slot's pages leak (never
-  re-issued) and the slot never hosts another request (satellite: the
-  dead-slot re-admission regression).
+  in exactly one of {free list, one slot's private list, the prefix
+  cache's shared set, leaked} — the refcount-aware pool partition
+  ``free + leaked + Σ private + shared = n_pages − 1`` — the trash page 0
+  is in none, live block-table rows mirror shared references then private
+  ownership exactly, and once the trace drains everything except the
+  resident ref==0 cache pages is back on the free list;
+* **quarantine accounting** — a faulted slot's private pages leak (never
+  re-issued), its shared references are merely released, and the slot
+  never hosts another request (satellite: the dead-slot re-admission
+  regression).
 
 The fuzz runs ≥ 200 generated traces (110 per config: gpt2-large is MHA,
 command-r-35b is RoPE + GQA — the two fused-decode kernel families) with
 prompt lengths hitting the paging corner cases: 1 token, page_size ± 1,
 exact page multiples, and 3x the prefill chunk (longer than any pinned
-admission width the contiguous path would have locked). The page pool is
-deliberately undersized (8 allocatable pages for 3 slots x up to 4 pages
-per request) so admission backpressure and retire-reissue churn occur
-organically inside the traces. `tests/_hypothesis_compat.py` keeps the
-sweep deterministic when hypothesis isn't installed.
+admission width the contiguous path would have locked). Half the
+generated prompts are truncations of a small pool of shared long prompts,
+so traces mix shared-prefix requests organically and the prefix cache
+(on by default in paged mode since PR 8) sees hits, promotions, and
+evictions under the same bitwise-parity oracle as cold requests. The page
+pool is deliberately undersized (8 allocatable pages for 3 slots x
+up to 4-page requests) so admission backpressure and retire-reissue churn
+occur organically inside the traces. `tests/_hypothesis_compat.py` keeps
+the sweep deterministic when hypothesis isn't installed.
 """
 import dataclasses
 
@@ -60,35 +68,47 @@ def _engine(name):
     return _ENGINES[name]
 
 
-def _prompt(L, cseed):
+def _prompt(L, cseed, shared=False):
     """Deterministic prompt content per (length, content-seed): a small
-    pool keeps the memoized solo oracle's hit rate high across traces."""
+    pool keeps the memoized solo oracle's hit rate high across traces.
+    ``shared`` prompts are truncations of ONE 3-page pool prompt per
+    cseed, so requests of different lengths share page-aligned prefixes
+    — the traffic shape the prefix cache exists for."""
+    if shared:
+        return _prompt(3 * PS, cseed)[:L]
     rng = np.random.default_rng(100_000 * L + cseed)
     return rng.integers(0, 255, size=L, dtype=np.int64).tolist()
 
 
-def _solo(name, L, cseed, n_new):
+def _solo(name, L, cseed, n_new, shared=False):
     """Memoized solo-generation oracle (the parity reference)."""
-    key = (name, L, cseed, n_new)
+    key = (name, L, cseed, n_new, shared)
     if key not in _SOLO:
         eng = _engine(name)
-        prompt = np.asarray(_prompt(L, cseed), np.int32)
+        prompt = np.asarray(_prompt(L, cseed, shared), np.int32)
         _SOLO[key] = [int(t) for t in eng.generate(prompt[None, :], n_new)[0]]
     return _SOLO[key]
 
 
 def _check_invariants(cb):
     """The page-economy assertions run after EVERY step of every trace."""
-    cb.allocator.assert_invariants()  # exact partition, no double-holds
+    a = cb.allocator
+    a.assert_invariants()  # exact partition, refcounts, no double-holds
+    # the refcount-aware pool partition, spelled out (satellite 3):
+    assert (a.n_free + a.n_leaked + a.pages_in_use + a.n_shared
+            == cb.n_pages - 1)
     for slot, s in enumerate(cb.slots):
-        owned = cb.allocator.owned(slot)
+        owned = a.owned(slot)
+        refs = a.refs(slot)
         row = cb.block_table[slot]
         if s is not None:
-            # a live row maps exactly its owned pages, in order, then 0s
-            assert list(row[: len(owned)]) == owned
-            assert not row[len(owned):].any()
+            # a live row maps its shared references (prefix-cache hits +
+            # its own promotions) then its private pages, in order, then 0s
+            mapped = refs + owned
+            assert list(row[: len(mapped)]) == mapped
+            assert not row[len(mapped):].any()
         else:
-            assert not owned and not row.any()
+            assert not owned and not refs and not row.any()
     for slot in cb.dead_slots:
         # quarantined slots never host a request or map a page again
         assert cb.slots[slot] is None
@@ -106,8 +126,13 @@ def _fuzz_trace(name, trace_seed):
         L = int(LENGTHS[rng.integers(0, len(LENGTHS))])
         cseed = int(rng.integers(0, 3))
         n_new = int(rng.integers(1, 5))
-        reqs.append((Request(rid, _prompt(L, cseed), n_new=n_new), L, cseed))
-    for r, _, _ in reqs:
+        # half the prompts truncate a shared pool prompt: same-cseed
+        # requests then share page-aligned prefixes and the trace
+        # exercises prefix-cache hits/promotions against the same oracle
+        shared = bool(rng.integers(0, 2))
+        reqs.append((Request(rid, _prompt(L, cseed, shared), n_new=n_new),
+                     L, cseed, shared))
+    for r, _, _, _ in reqs:
         cb.submit(r)
     steps, max_in_use = 0, 0
     while cb.queue or any(s is not None for s in cb.slots):
@@ -116,19 +141,22 @@ def _fuzz_trace(name, trace_seed):
         assert steps < 500, "trace failed to drain"
         _check_invariants(cb)
         max_in_use = max(max_in_use, cb.allocator.pages_in_use)
-    # drained: every page is back on the free list (nothing leaked — no
-    # faults here — and nothing still owned by a retired slot)
+    # drained: nothing leaked (no faults here), nothing still owned by a
+    # retired slot, and every page is back on the free list EXCEPT the
+    # ref==0 prefix-cache pages — resident shared pages ARE the cache
     assert cb.allocator.pages_in_use == 0
     assert cb.allocator.n_leaked == 0
-    assert cb.allocator.n_free == N_PAGES - 1
+    assert cb.allocator.n_free + cb.allocator.n_shared == N_PAGES - 1
+    assert cb.allocator.n_shared == len(cb.prefix)
     assert max_in_use <= N_PAGES - 1
-    for r, L, cseed in reqs:
+    for r, L, cseed, shared in reqs:
         done = cb.done[r.rid]
         assert done.error is None, done.error
         got = [int(t) for t in done.result]
-        assert got == _solo(name, L, cseed, r.n_new), (
-            f"rid={r.rid} P={L} n_new={r.n_new} diverged from solo: "
-            f"{got} != {_solo(name, L, cseed, r.n_new)}")
+        want = _solo(name, L, cseed, r.n_new, shared)
+        assert got == want, (
+            f"rid={r.rid} P={L} n_new={r.n_new} shared={shared} diverged "
+            f"from solo: {got} != {want}")
 
 
 @settings(max_examples=110, deadline=None)
@@ -251,8 +279,13 @@ def test_quarantined_slot_leaks_pages_and_never_readmits():
     from repro.hw.noise import fault_rows, site_key
 
     eng = _faulty_engine(0.5)
+    # prefix cache off: this is the PR 7 regression pinned on *private*
+    # page counts — promotion would move the full prompt page to shared
+    # (released, not leaked, on quarantine) and change the arithmetic;
+    # the shared-page quarantine contract lives in test_serve_prefix.py
     cb = ContinuousBatcher(eng, n_slots=2, page_size=PS,
-                           n_pages=1 + 2 * (MAX_LEN // PS))
+                           n_pages=1 + 2 * (MAX_LEN // PS),
+                           prefix_cache=False)
     # pin the scenario: at seed 0 the (2,)-row fault map kills slot 1
     nz = eng.plan.exec_cfg.noise
     fmap = np.asarray(fault_rows(nz, site_key(nz, "decode_fault", (2,)), 2))
@@ -308,7 +341,7 @@ def test_allocator_unit_invariants():
     p0 = a.alloc(0, 2)
     p1 = a.alloc(1, 2)
     assert len(p0) == 2 and len(p1) == 2 and not set(p0) & set(p1)
-    with pytest.raises(ValueError, match="already owns"):
+    with pytest.raises(ValueError, match="already holds"):
         a.alloc(0, 1)
     a.assert_invariants()
     a.leak_slot(0)
