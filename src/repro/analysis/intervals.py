@@ -1,0 +1,238 @@
+"""Integer interval arithmetic + symbolic expressions for index-map proofs.
+
+Two abstract domains, both driven through the *real* BlockSpec index-map
+closures (no re-implementation of the maps, so the proof can't drift from
+the code):
+
+* `Iv` — closed integer intervals. Sound over +, -, *, //, %, min, max
+  for the operations the kernels' index maps use. Evaluating a map with
+  prefetched scalars as intervals yields an interval per block-index
+  component; bounds proofs compare those against the operand's block grid.
+
+* `Sym` — opaque integer expression trees with structural equality.
+  Block-table lookups return a `Sym` leaf keyed by the accessed cell, so
+  two evaluations of a map produce equal trees iff they read the same
+  table cells and combine them identically — exactly the "clamped dead
+  block re-addresses the live frontier's tile" fixed-point obligation,
+  valid for *every* table permutation at once.
+
+Index maps call `jnp.minimum`/`jnp.maximum`; evaluation temporarily swaps
+the map's module-global `jnp` for `JnpProxy`, which dispatches to the
+abstract domain when either argument is abstract and to real jnp
+otherwise.
+"""
+from __future__ import annotations
+
+from typing import Any, Union
+
+Num = Union[int, "Iv", "Sym"]
+
+
+class Iv:
+    """Closed integer interval [lo, hi]."""
+
+    __slots__ = ("lo", "hi")
+
+    def __init__(self, lo: int, hi: int):
+        if lo > hi:
+            raise ValueError(f"empty interval [{lo}, {hi}]")
+        self.lo, self.hi = int(lo), int(hi)
+
+    @staticmethod
+    def lift(x: Num) -> "Iv":
+        if isinstance(x, Iv):
+            return x
+        if isinstance(x, Sym):
+            raise TypeError("cannot lift a symbolic value to an interval")
+        return Iv(int(x), int(x))
+
+    @property
+    def concrete(self) -> bool:
+        return self.lo == self.hi
+
+    def __repr__(self):
+        return f"[{self.lo},{self.hi}]" if not self.concrete else f"[{self.lo}]"
+
+    def __add__(self, o):
+        if isinstance(o, Sym):
+            return NotImplemented
+        o = Iv.lift(o)
+        return Iv(self.lo + o.lo, self.hi + o.hi)
+
+    __radd__ = __add__
+
+    def __sub__(self, o):
+        if isinstance(o, Sym):
+            return NotImplemented
+        o = Iv.lift(o)
+        return Iv(self.lo - o.hi, self.hi - o.lo)
+
+    def __rsub__(self, o):
+        return Iv.lift(o).__sub__(self)
+
+    def __mul__(self, o):
+        if isinstance(o, Sym):
+            return NotImplemented
+        o = Iv.lift(o)
+        c = [self.lo * o.lo, self.lo * o.hi, self.hi * o.lo, self.hi * o.hi]
+        return Iv(min(c), max(c))
+
+    __rmul__ = __mul__
+
+    def __floordiv__(self, o):
+        o = Iv.lift(o)
+        if not o.concrete or o.lo <= 0:
+            raise ValueError(f"interval floordiv by {o}: need a positive "
+                             f"constant divisor")
+        return Iv(self.lo // o.lo, self.hi // o.lo)
+
+    def __mod__(self, o):
+        o = Iv.lift(o)
+        if not o.concrete or o.lo <= 0:
+            raise ValueError(f"interval mod by {o}: need a positive "
+                             f"constant divisor")
+        d = o.lo
+        if self.lo // d == self.hi // d and self.lo >= 0:
+            return Iv(self.lo % d, self.hi % d)  # same quotient: exact
+        return Iv(0, d - 1)
+
+    # equality is *structural* (used by the fixed-point comparison on
+    # degenerate intervals); ordering is deliberately not defined.
+    def __eq__(self, o):
+        if isinstance(o, Iv):
+            return self.lo == o.lo and self.hi == o.hi
+        if isinstance(o, int) or (hasattr(o, "__int__")
+                                  and not isinstance(o, Sym)):
+            return self.concrete and self.lo == int(o)
+        return NotImplemented
+
+    def __hash__(self):
+        return hash(("Iv", self.lo, self.hi))
+
+    @staticmethod
+    def min2(a: Num, b: Num) -> "Iv":
+        a, b = Iv.lift(a), Iv.lift(b)
+        return Iv(min(a.lo, b.lo), min(a.hi, b.hi))
+
+    @staticmethod
+    def max2(a: Num, b: Num) -> "Iv":
+        a, b = Iv.lift(a), Iv.lift(b)
+        return Iv(max(a.lo, b.lo), max(a.hi, b.hi))
+
+
+class Sym:
+    """Opaque integer expression with structural equality.
+
+    Leaves are `("var", key)`; internal nodes record the operator and
+    operand trees. Two `Sym`s compare equal iff their trees are identical,
+    which for index maps means: same table cells read, same arithmetic
+    applied — equal for any concrete table contents.
+    """
+
+    __slots__ = ("op", "args")
+
+    def __init__(self, op: str, args: tuple):
+        self.op = op
+        self.args = args
+
+    @staticmethod
+    def var(key: Any) -> "Sym":
+        return Sym("var", (key,))
+
+    @staticmethod
+    def _norm(x) -> Any:
+        if isinstance(x, Iv):
+            if not x.concrete:
+                raise TypeError(f"symbolic arithmetic with a non-degenerate "
+                                f"interval {x}")
+            return x.lo
+        return x
+
+    def _bin(self, op, a, b):
+        a, b = Sym._norm(a), Sym._norm(b)
+        return Sym(op, (a, b))
+
+    def __add__(self, o):
+        return self._bin("add", self, o)
+
+    def __radd__(self, o):
+        return self._bin("add", o, self)
+
+    def __sub__(self, o):
+        return self._bin("sub", self, o)
+
+    def __rsub__(self, o):
+        return self._bin("sub", o, self)
+
+    def __mul__(self, o):
+        return self._bin("mul", self, o)
+
+    def __rmul__(self, o):
+        return self._bin("mul", o, self)
+
+    def __floordiv__(self, o):
+        return self._bin("floordiv", self, o)
+
+    def __mod__(self, o):
+        return self._bin("mod", self, o)
+
+    def __eq__(self, o):
+        if not isinstance(o, Sym):
+            return False
+        return self.op == o.op and len(self.args) == len(o.args) and all(
+            (a == b if isinstance(a, Sym) else
+             (not isinstance(b, Sym) and a == b))
+            for a, b in zip(self.args, o.args))
+
+    def __hash__(self):
+        return hash((self.op, tuple(repr(a) for a in self.args)))
+
+    def __repr__(self):
+        if self.op == "var":
+            return f"${self.args[0]}"
+        return f"({self.op} {' '.join(map(repr, self.args))})"
+
+
+def is_abstract(x) -> bool:
+    return isinstance(x, (Iv, Sym))
+
+
+class JnpProxy:
+    """Stand-in for the `jnp` module inside index-map closures.
+
+    minimum/maximum dispatch to the abstract domain when an argument is
+    abstract; everything else forwards to the real jnp (index maps in this
+    repo only use minimum/maximum, but forwarding keeps the swap honest if
+    one ever grows another call).
+    """
+
+    def __init__(self, real_jnp):
+        self._real = real_jnp
+
+    def __getattr__(self, name):
+        return getattr(self._real, name)
+
+    def minimum(self, a, b):
+        if isinstance(a, Sym) or isinstance(b, Sym):
+            if a == b:
+                return a
+            return Sym("min", (Sym._norm(a), Sym._norm(b)))
+        if isinstance(a, Iv) or isinstance(b, Iv):
+            return Iv.min2(a, b)
+        return self._real.minimum(a, b)
+
+    def maximum(self, a, b):
+        if isinstance(a, Sym) or isinstance(b, Sym):
+            if a == b:
+                return a
+            return Sym("max", (Sym._norm(a), Sym._norm(b)))
+        if isinstance(a, Iv) or isinstance(b, Iv):
+            return Iv.max2(a, b)
+        return self._real.maximum(a, b)
+
+
+def concretize(x) -> Num:
+    """Degenerate intervals become ints; everything else passes through."""
+    if isinstance(x, Iv) and x.concrete:
+        return x.lo
+    return x

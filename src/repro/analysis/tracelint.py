@@ -1,0 +1,380 @@
+"""Trace-safety AST lint over src/repro.
+
+Static companions to the dynamic kernel probes — each rule targets a bug
+class this repo has actually hit or is structurally exposed to:
+
+TL101 — Python `if`/`while` on a *traced* value inside a jit scope or a
+    Pallas kernel body. Traced scopes are found syntactically: functions
+    decorated with `jax.jit` / `partial(jax.jit, ...)` (parameters not in
+    `static_argnames` are traced) and `*_kernel` functions in `kernels/`
+    (every Ref parameter's loads are traced), plus their nested defs.
+    `x is None` tests, `.shape`/`.ndim`/`.dtype` inspection, and branches
+    on static arguments are all fine — the lint taints values, not names.
+
+TL102 — tracer concretization: `int()`/`float()`/`bool()` or `.item()`/
+    `.tolist()` on a traced value in a traced scope. These raise
+    `ConcretizationTypeError` at trace time on TPU paths that interpret
+    mode can mask.
+
+TL103 — shape-dependent fallback branch inside a `@register(...)`-ed
+    backend implementation (warn): capability decisions belong in the
+    `supported=` predicate where resolve_plan can record a structured
+    degrade, not silently inside the impl. The known fused-path
+    `RACEIT_ATTENTION_MAX_KEYS` fallbacks are suppressed with
+    justification rather than exempted in code, so the next one is loud.
+
+TL104 — plan-cache key hygiene on the dataclasses in `resolve_plan`'s
+    lru_cache key (found by reading `exec/plan.py`, not hardcoded):
+    * list/dict/set-annotated fields are unhashable — always an error;
+    * fields with opaque annotations (`object`, `Any`, …) must be
+      fail-fast hashed in `__post_init__` (`hash(self.<field>)`), the
+      guard PR 6's hand-added `ExecConfig.noise` needed;
+    * a field the class itself sorts in a `with_*` builder is
+      order-insensitive by its own admission, so `__post_init__` must
+      canonicalize it too — direct construction must not mint a second
+      cache entry for the same logical config.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Optional
+
+from .findings import REPO_ROOT, Finding
+
+SRC = REPO_ROOT / "src" / "repro"
+SHAPE_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize"}
+CONCRETIZERS = {"int", "float", "bool"}
+CONCRETIZER_METHODS = {"item", "tolist"}
+HASHABLE_ANNOTATIONS = {"int", "float", "bool", "str", "bytes", "tuple"}
+
+
+def _rel(path: pathlib.Path) -> str:
+    try:
+        return str(path.resolve().relative_to(REPO_ROOT))
+    except ValueError:
+        return str(path)
+
+
+# ---------------------------------------------------------------------------
+# scope discovery
+# ---------------------------------------------------------------------------
+
+def _jit_static_names(dec: ast.expr) -> Optional[set]:
+    """If `dec` is a jit decorator, return its static_argnames (else None)."""
+    target = dec
+    statics: set = set()
+    if isinstance(dec, ast.Call):
+        fn = dec.func
+        # functools.partial(jax.jit, static_argnames=(...)) | jax.jit(...)
+        if (isinstance(fn, ast.Attribute) and fn.attr == "partial") or (
+                isinstance(fn, ast.Name) and fn.id == "partial"):
+            if not dec.args:
+                return None
+            target = dec.args[0]
+        else:
+            target = fn
+        for kw in dec.keywords:
+            if kw.arg == "static_argnames":
+                for node in ast.walk(kw.value):
+                    if isinstance(node, ast.Constant) and isinstance(
+                            node.value, str):
+                        statics.add(node.value)
+    if isinstance(target, ast.Attribute) and target.attr == "jit":
+        return statics
+    if isinstance(target, ast.Name) and target.id == "jit":
+        return statics
+    return None
+
+
+def _register_decorator(dec: ast.expr) -> bool:
+    if isinstance(dec, ast.Call):
+        fn = dec.func
+        name = fn.attr if isinstance(fn, ast.Attribute) else getattr(
+            fn, "id", "")
+        return name == "register"
+    return False
+
+
+def _supported_predicates(tree: ast.AST) -> set:
+    """Names passed as supported=/serving_supported= to @register calls."""
+    preds: set = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _register_decorator(node):
+            for kw in node.keywords:
+                if kw.arg and "supported" in kw.arg and isinstance(
+                        kw.value, ast.Name):
+                    preds.add(kw.value.id)
+    return preds
+
+
+# ---------------------------------------------------------------------------
+# taint walk within one traced scope
+# ---------------------------------------------------------------------------
+
+class _Taint:
+    def __init__(self, tainted: set):
+        self.tainted = set(tainted)
+
+    def expr_tainted(self, node: ast.expr) -> bool:
+        """Does evaluating `node` produce a traced value? `.shape`-family
+        attribute access and len() launder taint (static under tracing)."""
+        if isinstance(node, ast.Attribute) and node.attr in SHAPE_ATTRS:
+            return False
+        if isinstance(node, ast.Call):
+            fn = node.func
+            if isinstance(fn, ast.Name) and fn.id == "len":
+                return False
+            if isinstance(fn, ast.Attribute) and fn.attr in SHAPE_ATTRS:
+                return False
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False     # `x is None` yields a Python bool
+        return any(self.expr_tainted(c) for c in ast.iter_child_nodes(node)
+                   if isinstance(c, ast.expr))
+
+    def assign(self, stmt: ast.stmt):
+        if isinstance(stmt, ast.Assign):
+            if self.expr_tainted(stmt.value):
+                for t in stmt.targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            self.tainted.add(n.id)
+        elif isinstance(stmt, ast.AugAssign):
+            if isinstance(stmt.target, ast.Name) and (
+                    self.expr_tainted(stmt.value)
+                    or stmt.target.id in self.tainted):
+                self.tainted.add(stmt.target.id)
+
+
+def _lint_traced_scope(fn: ast.FunctionDef, statics: set, rel: str,
+                       is_kernel: bool) -> list[Finding]:
+    findings: list[Finding] = []
+    params = [a.arg for a in (fn.args.posonlyargs + fn.args.args
+                              + fn.args.kwonlyargs)]
+    tainted = {p for p in params if p not in statics}
+    if is_kernel:
+        # kernel kwonly params are compile-time closures bound via partial
+        tainted -= {a.arg for a in fn.args.kwonlyargs}
+    taint = _Taint(tainted)
+    site = fn.name
+
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            taint.assign(node)
+
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.If, ast.While)):
+            if taint.expr_tainted(node.test):
+                kind = "while" if isinstance(node, ast.While) else "if"
+                findings.append(Finding(
+                    "tracelint", "TL101", rel, node.lineno, site,
+                    f"Python `{kind}` on a traced value "
+                    f"({ast.unparse(node.test)}) — use jnp.where/"
+                    f"lax.cond/pl.when"))
+        elif isinstance(node, ast.Call):
+            fnode = node.func
+            if isinstance(fnode, ast.Name) and fnode.id in CONCRETIZERS:
+                if node.args and taint.expr_tainted(node.args[0]):
+                    findings.append(Finding(
+                        "tracelint", "TL102", rel, node.lineno, site,
+                        f"`{fnode.id}()` on a traced value "
+                        f"({ast.unparse(node.args[0])})"))
+            elif isinstance(fnode, ast.Attribute) and \
+                    fnode.attr in CONCRETIZER_METHODS:
+                if taint.expr_tainted(fnode.value):
+                    findings.append(Finding(
+                        "tracelint", "TL102", rel, node.lineno, site,
+                        f"`.{fnode.attr}()` on a traced value "
+                        f"({ast.unparse(fnode.value)})"))
+    return findings
+
+
+def _lint_backend_impl(fn: ast.FunctionDef, rel: str) -> list[Finding]:
+    """TL103: shape-derived `if` fallbacks inside a registered backend."""
+    findings: list[Finding] = []
+    shape_names: set = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            if any(isinstance(n, ast.Attribute) and n.attr in SHAPE_ATTRS
+                   for n in ast.walk(node.value)):
+                for t in node.targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            shape_names.add(n.id)
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.If):
+            continue
+        test_names = {n.id for n in ast.walk(node.test)
+                      if isinstance(n, ast.Name)}
+        direct = any(isinstance(n, ast.Attribute) and n.attr in SHAPE_ATTRS
+                     for n in ast.walk(node.test))
+        if direct or (test_names & shape_names):
+            findings.append(Finding(
+                "tracelint", "TL103", rel, node.lineno, fn.name,
+                f"shape-dependent fallback `{ast.unparse(node.test)}` "
+                f"inside a registered backend impl — belongs in the "
+                f"supported= capability predicate", severity="warn"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# TL104: plan-cache key dataclass hygiene
+# ---------------------------------------------------------------------------
+
+def _cache_key_classes(plan_path: pathlib.Path) -> set:
+    """Annotation names of lru_cache'd resolve-function params in plan.py."""
+    classes: set = set()
+    try:
+        tree = ast.parse(plan_path.read_text())
+    except (OSError, SyntaxError):
+        return classes
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        cached = any("lru_cache" in ast.unparse(d) or "cache" == getattr(
+            getattr(d, "attr", None), "__str__", lambda: "")()
+            for d in node.decorator_list)
+        if not cached:
+            continue
+        for a in node.args.args + node.args.kwonlyargs:
+            if a.annotation is not None:
+                ann = ast.unparse(a.annotation)
+                classes.add(ann.split("[")[0].split(".")[-1])
+    return classes
+
+
+def _lint_cache_key_class(cls: ast.ClassDef, rel: str) -> list[Finding]:
+    findings: list[Finding] = []
+    post = next((n for n in cls.body if isinstance(n, ast.FunctionDef)
+                 and n.name == "__post_init__"), None)
+    post_src = ast.unparse(post) if post else ""
+
+    # fields the class itself sorts in any builder method -> must be
+    # canonicalized at construction time too. The builder idiom is
+    # `dataclasses.replace(self, field=tuple(sorted(...)))`, so look for
+    # any call keyword named after a field whose value contains sorted()
+    field_names = {f.target.id for f in cls.body
+                   if isinstance(f, ast.AnnAssign)
+                   and isinstance(f.target, ast.Name)}
+    sorted_fields: set = set()
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg in field_names and "sorted(" in ast.unparse(kw.value):
+                sorted_fields.add(kw.arg)
+        if isinstance(node.func, ast.Name) and node.func.id == "sorted":
+            src = ast.unparse(node)
+            sorted_fields |= {n for n in field_names if n in src}
+
+    for f in cls.body:
+        if not (isinstance(f, ast.AnnAssign)
+                and isinstance(f.target, ast.Name)):
+            continue
+        name = f.target.id
+        ann = ast.unparse(f.annotation)
+        base = ann.replace("Optional[", "").rstrip("]").split("[")[0]
+        site = f"{cls.name}.{name}"
+        if base in ("list", "List", "dict", "Dict", "set", "Set"):
+            findings.append(Finding(
+                "tracelint", "TL104", rel, f.lineno, site,
+                f"unhashable annotation `{ann}` on a plan-cache key field"))
+        elif base not in HASHABLE_ANNOTATIONS:
+            if f"hash(self.{name})" not in post_src:
+                findings.append(Finding(
+                    "tracelint", "TL104", rel, f.lineno, site,
+                    f"opaque annotation `{ann}` on a plan-cache key field "
+                    f"without a fail-fast `hash(self.{name})` in "
+                    f"__post_init__"))
+        if name in sorted_fields:
+            if "sorted" not in post_src or name not in post_src:
+                findings.append(Finding(
+                    "tracelint", "TL104", rel, f.lineno, site,
+                    f"`{name}` is sorted by a builder method (order is "
+                    f"non-semantic) but __post_init__ does not "
+                    f"canonicalize it — direct construction mints "
+                    f"duplicate cache entries"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def lint_source(src: str, rel: str, in_kernels: bool,
+                ) -> tuple[list[Finding], dict]:
+    findings: list[Finding] = []
+    tree = ast.parse(src)
+    preds = _supported_predicates(tree)
+    scopes = 0
+
+    def visit_fn(fn: ast.FunctionDef, inherited: Optional[set]):
+        nonlocal scopes
+        statics = inherited
+        for dec in fn.decorator_list:
+            s = _jit_static_names(dec)
+            if s is not None:
+                statics = s
+        is_kernel = in_kernels and "kernel" in fn.name
+        if statics is not None or is_kernel:
+            scopes += 1
+            findings.extend(_lint_traced_scope(
+                fn, statics or set(), rel, is_kernel))
+            child_statics: Optional[set] = statics or set()
+        else:
+            child_statics = None
+        if any(_register_decorator(d) for d in fn.decorator_list) \
+                and fn.name not in preds:
+            findings.extend(_lint_backend_impl(fn, rel))
+        for node in fn.body:
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.FunctionDef):
+                    visit_fn(sub, child_statics)
+                    break
+
+    for node in tree.body:
+        if isinstance(node, ast.FunctionDef):
+            visit_fn(node, None)
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, ast.FunctionDef):
+                    visit_fn(sub, None)
+    return findings, dict(traced_scopes=scopes)
+
+
+def run(root: Optional[pathlib.Path] = None) -> tuple[list[Finding], dict]:
+    root = pathlib.Path(root) if root else SRC
+    findings: list[Finding] = []
+    files = scopes = 0
+    for path in sorted(root.rglob("*.py")):
+        if "analysis" in path.parts:
+            continue
+        rel = _rel(path)
+        try:
+            src = path.read_text()
+        except OSError:
+            continue
+        files += 1
+        in_kernels = "kernels" in path.parts
+        f, stats = lint_source(src, rel, in_kernels)
+        findings += f
+        scopes += stats["traced_scopes"]
+
+    # cache-key hygiene on whatever classes resolve_plan's cache keys on
+    plan_path = root / "exec" / "plan.py"
+    key_classes = _cache_key_classes(plan_path) if plan_path.exists() else set()
+    checked = []
+    if key_classes:
+        cfg_path = root / "configs" / "base.py"
+        if cfg_path.exists():
+            tree = ast.parse(cfg_path.read_text())
+            for node in ast.walk(tree):
+                if isinstance(node, ast.ClassDef) and node.name in key_classes:
+                    checked.append(node.name)
+                    findings += _lint_cache_key_class(node, _rel(cfg_path))
+    stats = dict(files=files, traced_scopes=scopes,
+                 cache_key_classes=sorted(checked))
+    return findings, stats

@@ -154,6 +154,30 @@ class ExecConfig:
     # this field.
     noise: Optional[object] = None
 
+    def __post_init__(self):
+        # This frozen dataclass *is* the resolve_plan lru-cache key, so two
+        # guards run at construction time rather than at first resolution:
+        # op_overrides order is non-semantic (later pins win; with_ops
+        # already sorts) — canonicalize here so directly constructed
+        # configs with permuted pins compare equal instead of minting
+        # duplicate cache entries and duplicate jit closures; and the
+        # object-typed noise field must be hashable *now*, not deep inside
+        # the first resolve_plan call (hash() on e.g. a dict raises here
+        # with a pointed message instead). repro.analysis (TL104) checks
+        # these guards exist for every opaque/order-insensitive field.
+        merged = {}
+        for slot, backend in self.op_overrides:
+            merged[slot] = backend          # later pins win, as with_ops
+        object.__setattr__(self, "op_overrides",
+                           tuple(sorted(merged.items())))
+        try:
+            hash(self.noise)
+        except TypeError as e:
+            raise TypeError(
+                f"ExecConfig.noise must be hashable (it is part of the "
+                f"resolve_plan cache key); got "
+                f"{type(self.noise).__name__}: {e}") from None
+
     def with_ops(self, **slot_backends: str) -> "ExecConfig":
         """Pin op slots to named backends: ``ec.with_ops(lm_head="raceit_q8")``.
 

@@ -440,6 +440,52 @@ def _raceit_paged_decode(q, k_pool, v_pool, kv_len, scale, plan: ExecPlan,
     return out.transpose(0, 2, 1, 3)  # (B, Sq, H, hd)
 
 
+def paged_write_targets_chunk(block_table, lens, chunk_offs, sq: int,
+                              page_size: int):
+    """Physical (pages, slots), each (B, sq), for a chunked-prefill write.
+
+    Row b streams its chunk into logical columns [chunk_offs[b], lens[b]).
+    The trash-page fence: any column that is not live — past the row's
+    feed, a whole row with lens == chunk_offs, or *beyond the block
+    table's capacity* — routes to physical page 0, which no live row ever
+    reads (the read side caps kv_len at capacity and the allocator never
+    issues page 0). Without the capacity clause an overflowing write
+    would be clamped into the slot's last live page, silently corrupting
+    a resident token; `repro.analysis` (KC107) checks this contract
+    exhaustively.
+    """
+    ps = int(page_size)
+    bt = jnp.asarray(block_table, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+    offs = jnp.asarray(chunk_offs, jnp.int32)
+    rows = jnp.arange(bt.shape[0])
+    capacity = bt.shape[1] * ps
+    cols = offs[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+    live = (cols < lens[:, None]) & (cols < capacity)
+    pages = jnp.where(live, bt[rows[:, None],
+                               jnp.minimum(cols // ps, bt.shape[1] - 1)], 0)
+    slots = jnp.where(live, cols % ps, 0)
+    return pages, slots
+
+
+def paged_write_targets_decode(block_table, lens, page_size: int):
+    """Physical (pages, slots), each (B,), for a decode-step write.
+
+    The new token is logical column lens[b] - 1. Empty slots (lens == 0)
+    and slots filled past the block table's capacity write to the trash
+    page 0 — same fence contract as the chunk path (KC107).
+    """
+    ps = int(page_size)
+    bt = jnp.asarray(block_table, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+    rows = jnp.arange(bt.shape[0])
+    capacity = bt.shape[1] * ps
+    pos = jnp.minimum(jnp.maximum(lens - 1, 0), capacity - 1)
+    live = (lens > 0) & (lens <= capacity)
+    pages = jnp.where(live, bt[rows, pos // ps], 0)
+    return pages, pos % ps
+
+
 def _attn_quantize(q, k, v, scale):
     """Shared Fig.-12 prolog: repeat KV heads to H, quantize to int8 codes."""
     rep = q.shape[2] // k.shape[2]
@@ -648,16 +694,10 @@ def attention(
         bt = jnp.asarray(block_table, jnp.int32)
         rows = jnp.arange(b)
         if chunk_offs is not None:
-            # chunked prefill: row b streams its chunk into logical columns
-            # [chunk_offs[b], lens[b]); positions past the row's feed (and
-            # whole rows with lens == chunk_offs) route to the trash page
-            offs = jnp.asarray(chunk_offs, jnp.int32)
-            cols = offs[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
-            live = cols < lens[:, None]
-            pages = jnp.where(live, bt[rows[:, None],
-                                       jnp.minimum(cols // ps,
-                                                   bt.shape[1] - 1)], 0)
-            slot = jnp.where(live, cols % ps, 0)
+            # chunked prefill: fenced physical targets from the shared
+            # routing helper (trash page 0 for dead or overflow columns)
+            pages, slot = paged_write_targets_chunk(bt, lens, chunk_offs,
+                                                    sq, ps)
             ck = cache["k"].at[pages, slot].set(k.astype(cache["k"].dtype))
             cv = cache["v"].at[pages, slot].set(v.astype(cache["v"].dtype))
         else:
@@ -665,13 +705,10 @@ def attention(
                 raise ValueError("paged caches take Sq=1 decode steps or "
                                  "chunked prefill (chunk_offs); whole-prompt "
                                  "prefill goes through Model.prefill_chunk")
-            # decode: the new token is logical column lens[b] - 1; empty
-            # slots (lens == 0) write to the trash page
-            pos = jnp.maximum(lens - 1, 0)
-            pages = jnp.where(lens > 0, bt[rows, pos // ps], 0)
-            ck = cache["k"].at[pages, pos % ps].set(
+            pages, slot = paged_write_targets_decode(bt, lens, ps)
+            ck = cache["k"].at[pages, slot].set(
                 k[:, 0].astype(cache["k"].dtype))
-            cv = cache["v"].at[pages, pos % ps].set(
+            cv = cache["v"].at[pages, slot].set(
                 v[:, 0].astype(cache["v"].dtype))
         new_cache = {"k": ck, "v": cv, "idx": lens}
         k, v = ck, cv

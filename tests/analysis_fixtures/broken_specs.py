@@ -1,0 +1,199 @@
+"""Deliberately broken synthetic kernels the contract checker MUST flag.
+
+Each fixture returns (probe, call, expected_rule): a hand-built
+`CapturedCall` whose index maps reproduce a specific contract violation.
+`tests/test_analysis.py` fails if `analyze_call` passes any of them —
+an analyzer that goes blind can never rot silently.
+
+The shapes mirror the real decode geometry (bg=1, bk=512, Smax=2048) so
+a fixture failing to trip its rule means the rule is broken, not that
+the fixture drifted from the kernel idiom.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.kernelcheck import CapturedCall, PagedMeta, Probe
+
+F32, I32 = jnp.float32, jnp.int32
+BK = 512
+SMAX = 2048
+NK = SMAX // BK
+
+
+@dataclasses.dataclass
+class FakeSpec:
+    block_shape: tuple
+    index_map: object
+
+
+def _st(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _probe(name, family="attention", smax=SMAX, paged=None):
+    return Probe(name=name, family=family, fn_name=f"fixture.{name}",
+                 build=None, smax=smax, kv_vector=True, paged=paged)
+
+
+def _zero2(p, g, i, k, kvl, kvm):
+    return (0, 0)
+
+
+def _q_map(p, g, i, k, kvl, kvm):
+    return (g, i, 0)
+
+
+def _lut_map(p, g, i, k, kvl, kvm):
+    return (0,)
+
+
+def _clamped_kv(p, g, i, k, kvl, kvm):
+    last = jnp.maximum((kvm[g] + BK - 1) // BK - 1, 0)
+    return (g, jnp.minimum(k, last), 0)
+
+
+def _attention_call(k_map, v_map=None, out_map=None, nsp=2, operands=None,
+                    in_specs=None, grid=(2, 1, 1, NK)):
+    """A decode-shaped call: [scale, qoff, q, k, v, lut x3] + (out, cmax)."""
+    v_map = v_map or _clamped_kv
+    out_map = out_map or _q_map
+    specs = in_specs or [
+        FakeSpec((1, 1), _zero2),              # scale
+        FakeSpec((1, 1), _zero2),              # qoff
+        FakeSpec((1, 1, 64), _q_map),          # q
+        FakeSpec((1, BK, 64), k_map),          # k
+        FakeSpec((1, BK, 64), v_map),          # v
+        FakeSpec((256,), _lut_map),            # lut_exp
+        FakeSpec((256,), _lut_map),            # lut_log
+        FakeSpec((256,), _lut_map),            # lut_prob
+    ]
+    prefetch = [_st((4,), I32), _st((1,), I32)]
+    if nsp == 3:
+        prefetch.append(_st((1, 4), I32))
+    ops = operands or [
+        _st((1, 1)), _st((1, 1)), _st((1, 1, 64)),
+        _st((1, SMAX, 64)), _st((1, SMAX, 64)),
+        _st((256,), I32), _st((256,), I32), _st((256,), I32),
+    ]
+    return CapturedCall(
+        grid=grid, num_scalar_prefetch=nsp, in_specs=specs,
+        out_specs=[FakeSpec((1, 1, 64), out_map), FakeSpec((1, 1), _zero2)],
+        scratch=[],
+        out_shape=(_st((1, 1, 64)), _st((1, 1))),
+        operands=prefetch + ops,
+        kernel_name="fixture")
+
+
+# ---------------------------------------------------------------------------
+# the corpus
+# ---------------------------------------------------------------------------
+
+def off_by_one_index_map():
+    """Classic +1 in a static row map: last grid step reads past the end."""
+    call = CapturedCall(
+        grid=(4,), num_scalar_prefetch=0,
+        in_specs=[FakeSpec((256, 512), lambda i: (i + 1, 0)),
+                  FakeSpec((256,), lambda i: (0,))],
+        out_specs=[FakeSpec((256, 512), lambda i: (i, 0))],
+        scratch=[], out_shape=_st((1024, 512), I32),
+        operands=[_st((1024, 512), I32), _st((256,), I32)],
+        kernel_name="fixture")
+    return _probe("fx_off_by_one", family="lut", smax=0), call, "KC101"
+
+
+def unclamped_dead_block():
+    """k/v map streams block k unconditionally — dead blocks DMA fresh
+    tiles and (worse) the quantizer sees garbage keys."""
+    def k_map(p, g, i, k, kvl, kvm):
+        return (g, k, 0)
+    return _probe("fx_unclamped"), _attention_call(k_map), "KC102"
+
+
+def off_frontier_clamp():
+    """Clamps, but to `ceil(kvm/bk)` instead of `ceil(kvm/bk) - 1`: the
+    first dead block is fetched once more past the frontier — the
+    off-by-one this proof exists for."""
+    def k_map(p, g, i, k, kvl, kvm):
+        last_plus_one = (kvm[g] + BK - 1) // BK
+        return (g, jnp.minimum(k, last_plus_one), 0)
+    return _probe("fx_off_frontier"), _attention_call(k_map), "KC102"
+
+
+def prefetch_vector_oob():
+    """Indexes the per-group kv_len vector past its length."""
+    def k_map(p, g, i, k, kvl, kvm):
+        last = jnp.maximum((kvm[g + 5] + BK - 1) // BK - 1, 0)
+        return (g, jnp.minimum(k, last), 0)
+    return _probe("fx_prefetch_oob"), _attention_call(k_map), "KC109"
+
+
+def out_map_reads_prefetch():
+    """Output routing through runtime lengths: the write side must be
+    length-independent (fencing lives in the serving layer)."""
+    def out_map(p, g, i, k, kvl, kvm):
+        return (jnp.minimum(kvm[g] // SMAX, 0), i, 0)
+    return (_probe("fx_out_prefetch"),
+            _attention_call(_clamped_kv, out_map=out_map), "KC104")
+
+
+def paged_column_past_frontier():
+    """Paged map clamps the slot dim but consults block-table column
+    k//spb raw — a dead step reads table entries past the live frontier
+    (and the address is no longer a fixed point)."""
+    ps, mp, n_pages, spb = 512, 4, 5, 1
+
+    def k_map(p, g, i, k, kvl, kvm, bt):
+        last = jnp.maximum((kvm[g] + BK - 1) // BK - 1, 0)
+        kc = jnp.minimum(k, last)
+        page = bt[0, k // spb]          # should be kc // spb
+        return (page, kc % spb, 0)
+
+    def v_map(p, g, i, k, kvl, kvm, bt):
+        last = jnp.maximum((kvm[g] + BK - 1) // BK - 1, 0)
+        kc = jnp.minimum(k, last)
+        return (bt[0, kc // spb], kc % spb, 0)
+
+    pool = _st((n_pages, ps, 64))
+    ops = [_st((1, 1)), _st((1, 1)), _st((1, 1, 64)), pool, pool,
+           _st((256,), I32), _st((256,), I32), _st((256,), I32)]
+    specs = [
+        FakeSpec((1, 1), lambda p, g, i, k, kvl, kvm, bt: (0, 0)),
+        FakeSpec((1, 1), lambda p, g, i, k, kvl, kvm, bt: (0, 0)),
+        FakeSpec((1, 1, 64), lambda p, g, i, k, kvl, kvm, bt: (g, i, 0)),
+        FakeSpec((1, ps, 64), k_map),
+        FakeSpec((1, ps, 64), v_map),
+        FakeSpec((256,), lambda p, g, i, k, kvl, kvm, bt: (0,)),
+        FakeSpec((256,), lambda p, g, i, k, kvl, kvm, bt: (0,)),
+        FakeSpec((256,), lambda p, g, i, k, kvl, kvm, bt: (0,)),
+    ]
+    call = _attention_call(k_map, nsp=3, operands=ops, in_specs=specs)
+    # out maps in the paged call take the bt ref too
+    call.out_specs = [
+        FakeSpec((1, 1, 64), lambda p, g, i, k, kvl, kvm, bt: (g, i, 0)),
+        FakeSpec((1, 1), lambda p, g, i, k, kvl, kvm, bt: (0, 0))]
+    probe = _probe("fx_paged_frontier",
+                   paged=PagedMeta(ps, mp, n_pages, 1))
+    return probe, call, "KC105"
+
+
+def vmem_blowup():
+    """A whole-array block: 2 x 4096 x 4096 x f32 double-buffered blows
+    any 16 MiB budget."""
+    call = CapturedCall(
+        grid=(1,), num_scalar_prefetch=0,
+        in_specs=[FakeSpec((4096, 4096), lambda i: (0, 0)),
+                  FakeSpec((256,), lambda i: (0,))],
+        out_specs=[FakeSpec((4096, 4096), lambda i: (0, 0))],
+        scratch=[], out_shape=_st((4096, 4096)),
+        operands=[_st((4096, 4096)), _st((256,), I32)],
+        kernel_name="fixture")
+    return _probe("fx_vmem", family="lut", smax=0), call, "KC106"
+
+
+ALL = [off_by_one_index_map, unclamped_dead_block, off_frontier_clamp,
+       prefetch_vector_oob, out_map_reads_prefetch,
+       paged_column_past_frontier, vmem_blowup]

@@ -1,0 +1,39 @@
+"""The pre-fix paged write routing, kept as a regression fixture.
+
+This is the routing `models.layers.attention` shipped between PR 7 and
+this PR: the chunk path clamps an overflowing column's *table index*
+(`minimum(cols // ps, mp - 1)`) instead of fencing the write, and the
+decode path doesn't consider capacity at all — so a slot filled past
+`block_table.shape[1] * page_size` silently overwrites the slot's last
+live page while the read side caps `kv_len` at capacity. The fixed
+helpers live in `models.layers.paged_write_targets_{chunk,decode}`;
+`kernelcheck.check_write_fence` run against *these* functions must
+report KC107, proving the pass catches the pre-fix code.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def chunk_targets_unfenced(block_table, lens, chunk_offs, sq, page_size):
+    ps = int(page_size)
+    bt = jnp.asarray(block_table, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+    offs = jnp.asarray(chunk_offs, jnp.int32)
+    rows = jnp.arange(bt.shape[0])
+    cols = offs[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+    live = cols < lens[:, None]                      # no capacity clause
+    pages = jnp.where(live, bt[rows[:, None],
+                               jnp.minimum(cols // ps, bt.shape[1] - 1)], 0)
+    slots = jnp.where(live, cols % ps, 0)
+    return pages, slots
+
+
+def decode_targets_unfenced(block_table, lens, page_size):
+    ps = int(page_size)
+    bt = jnp.asarray(block_table, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+    rows = jnp.arange(bt.shape[0])
+    pos = jnp.maximum(lens - 1, 0)
+    pages = jnp.where(lens > 0, bt[rows, pos // ps], 0)  # no capacity fence
+    return pages, pos % ps

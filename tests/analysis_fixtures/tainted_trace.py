@@ -1,0 +1,78 @@
+"""Tainted AST snippets the trace lint MUST flag (and clean ones it must
+not). Never imported at test time — `tests/test_analysis.py` feeds this
+file's *source* to `tracelint.lint_source` and checks the expected rules
+fire on the expected functions, so the lint can't silently go blind.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def branch_on_traced(x, mode):
+    if x > 0:                              # TL101: traced branch
+        return x
+    return -x
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def while_on_traced(x, mode):
+    s = x.sum()
+    while s > 0:                           # TL101: via taint propagation
+        s = s - 1
+    return s
+
+
+@partial(jax.jit, static_argnames=())
+def concretize_int(x):
+    n = int(x.sum())                       # TL102: int() on a tracer
+    return x * n
+
+
+@partial(jax.jit, static_argnames=())
+def concretize_item(x):
+    return x * x.max().item()              # TL102: .item() on a tracer
+
+
+def _tainted_kernel(x_ref, o_ref, *, bias):
+    v = x_ref[0, 0]
+    if v > bias:                           # TL101: kernel-scope branch
+        o_ref[0, 0] = v
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def clean_static_branches(x, mask, mode):
+    # none of these may fire: static arg, is-None test, shape inspection
+    if mode == "uniform":
+        x = x * 2
+    if mask is not None:
+        x = jnp.where(mask, x, 0)
+    if x.ndim == 3:
+        x = x[None]
+    if len(x.shape) > 2 and x.shape[0] > 4:
+        x = x.reshape(-1, x.shape[-1])
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class BrokenCacheKey:
+    """Pre-fix ExecConfig shape: every TL104 defect class in one key."""
+
+    mode: str = "digital"
+    # sorted by with_ops below but not canonicalized at construction
+    op_overrides: tuple = ()
+    # opaque annotation, no fail-fast hash() guard anywhere
+    noise: Optional[object] = None
+    # unhashable member in an lru_cache key
+    tags: list = dataclasses.field(default_factory=list)
+
+    def with_ops(self, **slot_backends):
+        merged = dict(self.op_overrides)
+        merged.update(slot_backends)
+        return dataclasses.replace(
+            self, op_overrides=tuple(sorted(merged.items())))

@@ -26,6 +26,20 @@ def key():
     return jax.random.PRNGKey(0)
 
 
+@pytest.fixture(scope="session")
+def analysis_results():
+    """One shared `repro.analysis` run (the kernel capture re-traces every
+    wrapper, ~a minute) — test_analysis.py and the test_docs.py contract
+    sync check both read from here instead of re-running the passes."""
+    from repro import analysis
+    findings, coverage, contracts = analysis.run_all()
+    sups, malformed = analysis.load_suppressions()
+    active, suppressed, stale = analysis.apply_suppressions(findings, sups)
+    return dict(findings=findings, coverage=coverage, contracts=contracts,
+                malformed=malformed, active=active, suppressed=suppressed,
+                stale=stale)
+
+
 def tiny_config(cfg):
     """Reduced same-family config for per-arch smoke tests."""
     kw = dict(d_model=64, d_ff=128, vocab_size=256, param_dtype="float32",

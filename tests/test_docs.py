@@ -73,3 +73,14 @@ def test_scanner_sees_references():
     arch_refs = list(_doc_refs((ROOT / "docs/architecture.md").read_text()))
     assert len(readme_refs) >= 5, readme_refs
     assert len(arch_refs) >= 10, arch_refs
+
+
+def test_kernel_contracts_report_in_sync(analysis_results):
+    """The committed per-kernel contract report is the analyzer's current
+    output, byte for byte — change a kernel's grid, blocks, or probe set
+    and this fails until the report is regenerated."""
+    committed = ROOT / "docs" / "kernel_contracts.md"
+    assert committed.exists(), "docs/kernel_contracts.md is missing"
+    assert committed.read_text() == analysis_results["contracts"], (
+        "docs/kernel_contracts.md is stale: regenerate with "
+        "`PYTHONPATH=src python -m repro.analysis --write-contracts`")
