@@ -36,12 +36,22 @@ def main():
                     help="run the raceit arm on device-varied arrays: a "
                          "repro.hw.noise preset (clean/nominal/worst_case) "
                          "or a float scale of the nominal profile")
+    ap.add_argument("--mesh", default=None, metavar="AXES",
+                    help="run the raceit arm tensor-parallel on a device "
+                         "mesh, e.g. --mesh model=4 (needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=4 on CPU); "
+                         "decode resolves to the raceit_*_tp backends and "
+                         "stays token-identical to the single-device arm")
     args = ap.parse_args()
     overrides = parse_exec_plan(args.exec_plan)
     noise = None
     if args.noise is not None:
         from repro.hw.noise import NoiseConfig
         noise = NoiseConfig.parse(args.noise)
+    mesh = None
+    if args.mesh is not None:
+        from repro.dist import MeshSpec
+        mesh = MeshSpec.parse(args.mesh)
 
     cfg = get_config("gpt2-large").replace(
         name="serve-demo", n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
@@ -74,7 +84,7 @@ def main():
     for mode, ec in (("digital", ExecConfig()),
                      ("raceit", ExecConfig.serving(softmax_mode="pot",
                                                    op_overrides=overrides,
-                                                   noise=noise))):
+                                                   noise=noise, mesh=mesh))):
         eng = GenerationEngine(cfg, params, exec_cfg=ec, max_len=64)
         print(f"      {mode} plan: " + "; ".join(
             f"{op.slot}={op.backend}" for op in eng.plan.ops

@@ -279,7 +279,7 @@ def _roles(probe: Probe, call: CapturedCall) -> tuple[list[str], list[str]]:
         return ["x", "lut"][:n], ["out"]
     if probe.family == "mvm":
         return ["x", "w"][:n], ["out"]
-    roles = ["scale", "qoff", "q", "k", "v"]
+    roles = ["scale", "qoff", "cmax_floor", "q", "k", "v"]
     if call.num_scalar_prefetch == 0:
         roles = ["kvlen", "kvmax"] + roles
     if n == len(roles) + 4:

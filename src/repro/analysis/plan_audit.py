@@ -48,18 +48,25 @@ def _matrix():
     from repro.configs import get_config
     from repro.configs.base import ExecConfig
     from repro.configs.catalog import ASSIGNED, PAPER_OWN
+    from repro.dist import MeshSpec
     from repro.hw.noise import NoiseConfig
 
     models = [get_config(n) for n in list(ASSIGNED) + list(PAPER_OWN)]
     noise = NoiseConfig.preset("nominal")
+    # mesh axis: resolution is device-independent (predicates only read
+    # MeshSpec.model_size; nothing builds the mesh), so the audit covers
+    # the sharded raceit_*_tp chains — including the model=3 non-divisor
+    # degrade and a data+model mesh — on a 1-device host.
+    meshes = (None, MeshSpec.parse("model=4"), MeshSpec.parse("model=3"),
+              MeshSpec.parse("data=2,model=2"))
     execs = []
     seen = set()
-    for mode, fused, softmax, fidelity, nz in itertools.product(
+    for mode, fused, softmax, fidelity, nz, mesh in itertools.product(
             ("digital", "raceit"), (False, True), ("pot", "uniform"),
-            ("int", "acam"), (None, noise)):
+            ("int", "acam"), (None, noise), meshes):
         ec = ExecConfig(mode=mode, fused_attention=fused,
                         softmax_mode=softmax, matmul_fidelity=fidelity,
-                        noise=nz)
+                        noise=nz, mesh=mesh)
         if ec not in seen:
             seen.add(ec)
             execs.append(ec)
@@ -68,9 +75,10 @@ def _matrix():
 
 def _describe(mcfg, ecfg) -> str:
     nz = "none" if ecfg.noise is None else "nominal"
+    mesh = "none" if ecfg.mesh is None else ecfg.mesh.describe()
     return (f"{mcfg.name}/mode={ecfg.mode},fused={ecfg.fused_attention},"
             f"softmax={ecfg.softmax_mode},fidelity={ecfg.matmul_fidelity},"
-            f"noise={nz}")
+            f"noise={nz},mesh={mesh}")
 
 
 def run() -> tuple[list[Finding], dict]:

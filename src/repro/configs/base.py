@@ -153,6 +153,20 @@ class ExecConfig:
     # recorded on the plan. Launchers parse `--noise <preset|sigma>` into
     # this field.
     noise: Optional[object] = None
+    # the declarative mesh shape (`repro.dist.MeshSpec`) this config
+    # executes on. None => single-device. With a "model" axis of size > 1,
+    # the tensor-parallel attention backends (`raceit_fused_tp` /
+    # `raceit_gqa_tp`) lead the attention chains; a 1-device mesh resolves
+    # to the same single-device chain as None. Typed object to keep
+    # configs importable without jax; the __post_init__ hash guard is the
+    # real contract (it rides the resolve_plan cache key).
+    mesh: Optional[object] = None
+    # per-mixer-kind plan overrides: ((mixer_kind, ((slot, backend), ...)),
+    # ...). `models/blocks.py::apply_layer` re-resolves the plan with the
+    # matching pins merged on top of op_overrides, so e.g. sliding-window
+    # "attn_local" layers can run the staged path while global "attn"
+    # layers stay fused — the PR-3 override surface, per layer kind.
+    layer_overrides: tuple = ()
 
     def __post_init__(self):
         # This frozen dataclass *is* the resolve_plan lru-cache key, so two
@@ -170,6 +184,16 @@ class ExecConfig:
             merged[slot] = backend          # later pins win, as with_ops
         object.__setattr__(self, "op_overrides",
                            tuple(sorted(merged.items())))
+        # layer_overrides gets the same canonicalization, one level down:
+        # mixer kinds sorted, each kind's pins merged later-wins + sorted
+        by_kind = {}
+        for kind, pins in self.layer_overrides:
+            kind_merged = dict(by_kind.get(kind, ()))
+            for slot, backend in pins:
+                kind_merged[slot] = backend
+            by_kind[kind] = tuple(sorted(kind_merged.items()))
+        object.__setattr__(self, "layer_overrides",
+                           tuple(sorted(by_kind.items())))
         try:
             hash(self.noise)
         except TypeError as e:
@@ -177,6 +201,14 @@ class ExecConfig:
                 f"ExecConfig.noise must be hashable (it is part of the "
                 f"resolve_plan cache key); got "
                 f"{type(self.noise).__name__}: {e}") from None
+        try:
+            hash(self.mesh)
+        except TypeError as e:
+            raise TypeError(
+                f"ExecConfig.mesh must be hashable (it is part of the "
+                f"resolve_plan cache key) — pass a repro.dist.MeshSpec, "
+                f"not a live Mesh; got "
+                f"{type(self.mesh).__name__}: {e}") from None
 
     def with_ops(self, **slot_backends: str) -> "ExecConfig":
         """Pin op slots to named backends: ``ec.with_ops(lm_head="raceit_q8")``.

@@ -3,7 +3,15 @@
 `ef_compress_update` compresses a gradient pytree after folding in the
 residual from the previous step, and returns the new residual so the
 time-averaged compressed gradient is unbiased — the standard error-feedback
-guarantee used by int8/sign compressors in data-parallel training.
+guarantee behind int8/sign gradient compressors.
+
+Call-path status: this module is NOT wired into the training step — the
+serving-side distribution work (`ExecConfig.mesh`, `exec/sharded.py`,
+FSDP-at-load in `serve/engine.py`) consumes `dist/sharding.py` only.
+`ef_compress_update`'s contract (unbiasedness of the error-fed compressed
+stream) is covered by `tests/test_substrate.py`; wiring it into a
+data-parallel `train/trainer.py` gradient exchange is future work, and any
+claim stronger than that would be aspirational.
 """
 from __future__ import annotations
 

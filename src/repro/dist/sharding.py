@@ -4,8 +4,28 @@ Model code annotates tensors with *logical* axis names ("batch", "heads",
 "mlp", ...) via `constraint`; a `ShardingPolicy` maps those names onto the
 physical mesh axes ("pod", "data", "model"), dropping any assignment that
 does not divide the dimension or would reuse a mesh axis twice. With no
-active policy every annotation is a no-op, so single-host tests and the
-serving stack run unchanged.
+active policy every `constraint` annotation is a no-op, so single-device
+tests run unchanged.
+
+Who consumes what (these are live call paths, not future plans):
+
+- `constraint` lands in the layer stack at the mixer/FFN seams —
+  `models/blocks.py::apply_layer` pins the residual stream to
+  ("batch", "sp_seq", None) after every block, and the attention/FFN
+  bodies in `models/layers.py` annotate activations at their head/mlp
+  splits. Active only under `use_policy` (the dry-run launcher and
+  mesh-sharded serving both enter it).
+- `param_specs` is called by `launch/inputs.py::input_specs` (dry-run
+  lowering: eval-shaped params get NamedShardings attached),
+  `launch/train.py` (real params `device_put` onto the mesh), and
+  `serve/engine.py` (FSDP-at-load for `ModelConfig.fsdp` configs served
+  with `ExecConfig.mesh` — command-r-35B / mixtral-8x22B-class trees
+  resolve without fitting one device).
+- `MeshSpec` is the *declarative, hashable* mesh shape that rides on
+  `ExecConfig.mesh` and therefore in the `resolve_plan` lru-cache key;
+  the tensor-parallel attention backends (`exec/sharded.py`) call
+  `MeshSpec.build()` to materialize the concrete `jax.sharding.Mesh`
+  and `repro.dist.shard_map` to run per-shard kernel bodies over it.
 
 Also hosts the small jax-version compatibility shims (`shard_map`,
 `compat_make_mesh`) so model code and tests run on both the 0.4.x toolchain
@@ -22,9 +42,9 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 __all__ = [
-    "MeshContext", "ShardingPolicy", "constraint", "current_policy",
-    "named_sharding_tree", "param_specs", "use_policy", "shard_map",
-    "compat_make_mesh",
+    "MeshContext", "MeshSpec", "ShardingPolicy", "constraint",
+    "current_policy", "named_sharding_tree", "param_specs", "use_policy",
+    "shard_map", "compat_make_mesh",
 ]
 
 _DP_AXES = ("pod", "data")
@@ -57,6 +77,103 @@ def compat_make_mesh(shape, axis_names):
         except TypeError:
             pass
     return jax.make_mesh(shape, axis_names)
+
+
+# --------------------------------------------------------------------------
+# declarative mesh shape (plan-cache safe)
+# --------------------------------------------------------------------------
+
+_BUILT_MESHES: dict = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Declarative mesh shape: what `ExecConfig.mesh` carries.
+
+    A frozen, hashable value object — `resolve_plan` is lru-cached over
+    `(ModelConfig, ExecConfig)`, so the config must carry the mesh *shape*
+    (which determines backend capability: divisibility, model_size), never
+    the live `jax.sharding.Mesh` (device handles don't belong in a cache
+    key). Backends materialize the concrete mesh via `build()` at trace
+    time; capability predicates stay purely structural so plans resolve —
+    and `plan_audit` exercises the catalog x mesh matrix — on a one-device
+    process with no `XLA_FLAGS` set.
+
+    ``axes`` is an ordered tuple of ``(name, size)`` pairs, e.g.
+    ``(("data", 2), ("model", 4))``. `parse` accepts the launcher
+    ``--mesh`` forms: ``"4"`` / ``"model=4"`` / ``"data=2,model=4"``.
+    """
+
+    axes: tuple = ()
+
+    def __post_init__(self):
+        seen = set()
+        for entry in self.axes:
+            name, size = entry
+            if name in seen:
+                raise ValueError(f"duplicate mesh axis {name!r} in {self.axes}")
+            seen.add(name)
+            if not isinstance(size, int) or size < 1:
+                raise ValueError(f"mesh axis {name!r} needs a positive int "
+                                 f"size, got {size!r}")
+
+    @classmethod
+    def parse(cls, text: str) -> "MeshSpec":
+        """``"4"`` (model=4) / ``"model=4"`` / ``"data=2,model=4"``."""
+        axes = []
+        for part in str(text).split(","):
+            part = part.strip()
+            if not part:
+                continue
+            name, eq, size = part.partition("=")
+            if not eq:
+                name, size = "model", part
+            try:
+                axes.append((name.strip(), int(size)))
+            except ValueError:
+                raise ValueError(f"--mesh entries are axis=size, got {part!r}")
+        return cls(axes=tuple(axes))
+
+    @property
+    def axis_names(self) -> tuple:
+        return tuple(name for name, _ in self.axes)
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod([size for _, size in self.axes], dtype=np.int64)) \
+            if self.axes else 1
+
+    @property
+    def model_size(self) -> int:
+        return dict(self.axes).get("model", 1)
+
+    def describe(self) -> str:
+        return ",".join(f"{n}={s}" for n, s in self.axes) or "1"
+
+    def build(self):
+        """The concrete `jax.sharding.Mesh` (cached per spec).
+
+        Raises with a run-it hint when the process has fewer devices than
+        the spec asks for — structural predicates never call this, so a
+        plan naming a TP backend resolves anywhere; only actually *running*
+        it needs the devices (simulated ones count:
+        ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+        """
+        cached = _BUILT_MESHES.get(self)
+        if cached is None:
+            have = len(jax.devices())
+            if self.n_devices > have:
+                raise RuntimeError(
+                    f"mesh {self.describe()} needs {self.n_devices} devices "
+                    f"but the process has {have}; run under XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count="
+                    f"{self.n_devices} (or on that many real devices)")
+            cached = _BUILT_MESHES[self] = compat_make_mesh(
+                tuple(size for _, size in self.axes), self.axis_names)
+        return cached
+
+    def context(self) -> "MeshContext":
+        return MeshContext(self.build())
 
 
 # --------------------------------------------------------------------------
@@ -194,8 +311,11 @@ def constraint(x, *names):
 # parameter sharding rules
 # --------------------------------------------------------------------------
 
-# logical axes per weight leaf, aligned to the *trailing* dims of the leaf
-# (leading scan/expert dims replicate). See DESIGN notes in models/layers.py.
+# logical axes per weight leaf, keyed by leaf name and aligned to the
+# *trailing* dims of the leaf — leading scan/expert dims replicate, so one
+# rule covers both a plain layer's (d_model, H, hd) wq and the scanned
+# stack's (n_layers, d_model, H, hd). Megatron split: qkv/up projections
+# shard their output (heads/mlp), wo/down their input, embeddings the vocab.
 _PARAM_RULES = {
     "wq": (None, "heads", None),
     "wk": (None, "heads", None),

@@ -470,3 +470,7 @@ def _lm_head_raceit_q8(plan, x, w):
 # every helper is defined) keeps `_ensure_backends_loaded` the single
 # load point.
 from . import noisy  # noqa: E402,F401
+
+# likewise the tensor-parallel raceit_*_tp family (mesh-sharded attention):
+# same slots, same registry surface, own module.
+from . import sharded  # noqa: E402,F401

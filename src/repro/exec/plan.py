@@ -33,7 +33,7 @@ from repro.configs.base import ExecConfig, ModelConfig
 from .registry import OP_SLOTS, BackendSpec, get_backend, list_backends
 
 __all__ = ["ExecPlan", "ResolvedOp", "Degrade", "resolve_plan", "as_plan",
-           "reset_plan_cache"]
+           "layer_plan", "reset_plan_cache"]
 
 _DEGRADE_WARNED: set = set()  # one-time fused-attention degrade warnings
 
@@ -212,6 +212,14 @@ def _default_chain(slot: str, exec_cfg: ExecConfig) -> tuple[str, ...]:
     # config paged-capable without an override.
     gqa_first = ("raceit_gqa_paged", "raceit_gqa_rows", "raceit_gqa_native",
                  "raceit_fused_paged", "raceit_fused_rows") + fused_first
+    # a model-axis mesh on the config puts the tensor-parallel family at
+    # the head of the attention chains: the TP predicates are structural
+    # (model_size > 1, n_kv_heads % model_size == 0, fused support), so a
+    # 1-device mesh — or a non-dividing head count — degrades to exactly
+    # the single-device chain below, recorded on the plan, never raised.
+    if getattr(exec_cfg.mesh, "model_size", 1) > 1:
+        fused_first = ("raceit_fused_tp",) + fused_first
+        gqa_first = ("raceit_gqa_tp", "raceit_fused_tp") + gqa_first
     return {
         "matmul": (("raceit_noisy_int", "raceit_int") if noisy
                    else ("raceit_int",)),
@@ -303,7 +311,8 @@ def resolve_plan(model_cfg: ModelConfig,
 
 _FUSED_FAMILY = ("raceit_fused", "raceit_gqa_native",
                  "raceit_fused_rows", "raceit_gqa_rows",
-                 "raceit_fused_paged", "raceit_gqa_paged")
+                 "raceit_fused_paged", "raceit_gqa_paged",
+                 "raceit_fused_tp", "raceit_gqa_tp")
 
 
 def _warn_fused_degrades(plan: ExecPlan) -> None:
@@ -329,6 +338,31 @@ def as_plan(model_cfg: ModelConfig, exec_cfg) -> ExecPlan:
     if isinstance(exec_cfg, ExecPlan):
         return exec_cfg
     return resolve_plan(model_cfg, exec_cfg)
+
+
+def layer_plan(plan: ExecPlan, mixer_kind: str) -> ExecPlan:
+    """The per-layer plan for a mixer kind (`ExecConfig.layer_overrides`).
+
+    Merges the kind's pins on top of the plan's ``op_overrides`` (pins win)
+    and re-resolves — `resolve_plan` is lru-cached, so every layer of a
+    kind shares one plan object and the per-layer call is a dict lookup.
+    With no pins for the kind, the incoming plan is returned as-is: the
+    default path allocates nothing. The standard recipe for mixed
+    local/global stacks — staged attention on sliding-window "attn_local"
+    layers, fused on global "attn" — is one config:
+
+        ExecConfig.serving(layer_overrides=(("attn_local",
+            (("attention_prefill", "raceit_staged"),
+             ("attention_decode", "raceit_staged"))),))
+    """
+    pins = dict(plan.exec_cfg.layer_overrides).get(mixer_kind)
+    if not pins:
+        return plan
+    merged = dict(plan.exec_cfg.op_overrides)
+    merged.update(dict(pins))
+    ec = dataclasses.replace(plan.exec_cfg,
+                             op_overrides=tuple(sorted(merged.items())))
+    return resolve_plan(plan.model_cfg, ec)
 
 
 def reset_plan_cache() -> None:

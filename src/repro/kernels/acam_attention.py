@@ -179,8 +179,8 @@ def _requant_code_table(cmax, prob_lut_vals):
                     -128, 127).astype(jnp.int32)
 
 
-def _attn_kernel(kvlen_ref, kvmax_ref, s1_ref, qoff_ref, q_ref, k_ref, v_ref,
-                 *rest,
+def _attn_kernel(kvlen_ref, kvmax_ref, s1_ref, qoff_ref, ecmax_ref, q_ref,
+                 k_ref, v_ref, *rest,
                  nq: int, nk: int, bg: int, bq: int, bk: int,
                  g_real: int, sq_real: int, sk_real: int,
                  sqrt_d: Optional[float],
@@ -270,7 +270,12 @@ def _attn_kernel(kvlen_ref, kvmax_ref, s1_ref, qoff_ref, q_ref, k_ref, v_ref,
     def _pass_a():
         @pl.when((g == 0) & (i == 0) & (k == 0))
         def _init_global():
-            cmax_ref[0, 0] = 0
+            # the running global PROB max starts at the external floor
+            # (0 for single-device calls): tensor-parallel shards seed it
+            # with the cross-shard pmax so every shard requantizes with
+            # the same — true global — scale. max(floor, local) needs no
+            # extra op: the floor is just the accumulator's initial value.
+            cmax_ref[0, 0] = ecmax_ref[0, 0]
 
         @pl.when(k == 0)
         def _init_rows():
@@ -337,8 +342,8 @@ def _attn_kernel(kvlen_ref, kvmax_ref, s1_ref, qoff_ref, q_ref, k_ref, v_ref,
             cmax_out_ref[0, 0] = cmax_ref[0, 0]
 
 
-def _attn_kernel_single(kvlen_ref, kvmax_ref, s1_ref, qoff_ref, q_ref, k_ref,
-                        v_ref, *rest, bg: int, bq: int, bk: int,
+def _attn_kernel_single(kvlen_ref, kvmax_ref, s1_ref, qoff_ref, ecmax_ref,
+                        q_ref, k_ref, v_ref, *rest, bg: int, bq: int, bk: int,
                         g_real: int, sq_real: int, sk_real: int,
                         sqrt_d: Optional[float],
                         e_min: float, octave_step: float, frac_shift: int,
@@ -397,7 +402,7 @@ def _attn_kernel_single(kvlen_ref, kvmax_ref, s1_ref, qoff_ref, q_ref, k_ref,
     c_row = jnp.where((rpos < sq_real) & (gpos < g_real), c_row, 0)
     if per_row:  # zero-length groups: all-zero rows, no cmax pollution
         c_row = jnp.where(lens > 0, c_row, 0)
-    cmax = jnp.max(c_row)
+    cmax = jnp.maximum(jnp.max(c_row), ecmax_ref[0, 0])
 
     d = jnp.clip(xc - (L << frac_shift),
                  LOGIT_FMT.code_min, LOGIT_FMT.code_max)
@@ -432,6 +437,7 @@ def acam_attention_codes(
     block_table: Optional[jax.Array] = None,  # (n_slots, max_pages) int32
     page_size: Optional[int] = None,          # static: rows per pool page
     groups_per_slot: Optional[int] = None,    # static: grid groups per slot
+    cmax_floor: Optional[jax.Array] = None,   # () int32: external PROB-max seed
 ) -> tuple[jax.Array, jax.Array]:
     """Fused Fig.-12 attention on int8 codes.
 
@@ -466,6 +472,16 @@ def acam_attention_codes(
     contiguous layout holding the same logical contents — pages move the
     DMA source of each key tile, never its logical coordinates or the
     block visit order.
+
+    ``cmax_floor`` (traced int32 scalar, default 0) seeds the global PROB
+    max: the returned cmax and the requant scale use
+    ``max(cmax_floor, local max)``. Since PROB codes are non-negative, 0 is
+    the exact identity. Tensor-parallel shards use this to agree on the
+    global scale: each shard runs a probe call, ``lax.pmax``es the local
+    cmax over the mesh axis, and re-runs with the floor set to the global
+    — every shard then requantizes with the same table and the sharded
+    output is bit-identical to the unsharded call (integer max is
+    order-free, so the floored local reduction equals the global one).
     """
     interpret = resolve_interpret(interpret)
     exp_val, log_lut, prob_lut, e_min, octave_step, frac_shift = \
@@ -593,6 +609,7 @@ def acam_attention_codes(
     in_specs = [
         spec_scalar,                                                # logit scale
         spec_scalar,                                                # q offset
+        spec_scalar,                                                # cmax floor
         pl.BlockSpec((bg, bq, Dp), _im(lambda p, g, i, k, kvl, kvm: (g, i, 0))),
         pl.BlockSpec((bg, bk, Dp), kv_index),                       # k
         pl.BlockSpec((bg, bk, Dp), kv_index),                       # v
@@ -606,6 +623,8 @@ def acam_attention_codes(
     operands += [
         logit_scale.reshape(1, 1),
         jnp.asarray(q_offset, jnp.int32).reshape(1, 1),
+        jnp.asarray(0 if cmax_floor is None else cmax_floor,
+                    jnp.int32).reshape(1, 1),
         qp, kp, vp,
     ]
     if mask is not None:
@@ -689,6 +708,7 @@ def acam_attention_decode_codes(
     block_table: Optional[jax.Array] = None,
     page_size: Optional[int] = None,
     groups_per_slot: Optional[int] = None,
+    cmax_floor: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Decode-mode fused attention: Sq=1 queries against a KV cache.
 
@@ -736,7 +756,7 @@ def acam_attention_decode_codes(
         mode=mode, scale_by_sqrt_d=scale_by_sqrt_d,
         block_k=block_k, block_g=block_g, interpret=interpret,
         block_table=block_table, page_size=page_size,
-        groups_per_slot=groups_per_slot)
+        groups_per_slot=groups_per_slot, cmax_floor=cmax_floor)
 
 
 def acam_attention_decode_gqa_codes(
@@ -754,6 +774,7 @@ def acam_attention_decode_gqa_codes(
     block_table: Optional[jax.Array] = None,
     page_size: Optional[int] = None,
     groups_per_slot: Optional[int] = None,
+    cmax_floor: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """GQA-native decode: k/v in their (B*KV, Smax, D) cache layout.
 
@@ -799,4 +820,4 @@ def acam_attention_decode_gqa_codes(
         mode=mode, scale_by_sqrt_d=scale_by_sqrt_d,
         block_k=block_k, block_g=block_g, interpret=interpret,
         block_table=block_table, page_size=page_size,
-        groups_per_slot=groups_per_slot)
+        groups_per_slot=groups_per_slot, cmax_floor=cmax_floor)

@@ -380,6 +380,69 @@ def raceit_attention_decode_gqa_paged(
             ).reshape(B, H, Sq, D)
 
 
+# ---------------------------------------------------------------------------
+# tensor-parallel quantizer twins (used inside repro.dist.shard_map bodies
+# by the exec/sharded.py backends)
+# ---------------------------------------------------------------------------
+# Each is the same f32 op sequence as its single-device twin above with one
+# change: the local |x| max is `jax.lax.pmax`-ed over the mesh axis before
+# the shared scale formula. f32 max is order-free, so the globalized amax —
+# and therefore the scale and every code — is bit-identical to what the
+# unsharded twin computes on the gathered tensor.
+
+def tp_quantize_tensor(x: jax.Array, axis_name: str):
+    """`quantize_tensor(x, bits=8)` inside a shard_map body, scale global."""
+    from repro.core.quant import QuantizedTensor
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name)
+    scale = jnp.maximum(amax, 1e-12) / 127
+    codes = jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+    return QuantizedTensor(codes, scale.astype(jnp.float32), 8)
+
+
+def tp_masked_prefix_quantize(x: jax.Array, kv_len: jax.Array,
+                              axis_name: str, axis: int = 2):
+    """`masked_prefix_quantize` with the amax pmax-ed over the mesh axis."""
+    idx = jnp.reshape(jnp.arange(x.shape[axis]),
+                      tuple(x.shape[axis] if d == axis else 1
+                            for d in range(x.ndim)))
+    kvl = jnp.asarray(kv_len, jnp.int32)
+    if kvl.ndim == 1:
+        kvl = kvl.reshape((-1,) + (1,) * (x.ndim - 1))
+    valid = idx < kvl
+    amax = jax.lax.pmax(jnp.max(jnp.where(valid, jnp.abs(x), 0.0)), axis_name)
+    scale = (jnp.maximum(amax, 1e-12) / 127).astype(jnp.float32)
+    codes = jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+    return jnp.where(valid, codes, 0), scale
+
+
+def tp_masked_page_quantize(x: jax.Array, page_valid: jax.Array,
+                            axis_name: str):
+    """`masked_page_quantize` with the amax pmax-ed over the mesh axis."""
+    idx = jnp.reshape(jnp.arange(x.shape[1]), (1, -1) + (1,) * (x.ndim - 2))
+    valid = idx < jnp.reshape(page_valid, (-1,) + (1,) * (x.ndim - 1))
+    amax = jax.lax.pmax(jnp.max(jnp.where(valid, jnp.abs(x), 0.0)), axis_name)
+    scale = (jnp.maximum(amax, 1e-12) / 127).astype(jnp.float32)
+    codes = jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+    return jnp.where(valid, codes, 0), scale
+
+
+def tp_exact_call(call, axis_name: str):
+    """The probe -> pmax -> exact protocol for a tensor-parallel kernel call.
+
+    ``call(cmax_floor)`` must run one of the ``acam_attention*_codes``
+    entries on this shard's groups and return its (out32, cmax). The probe
+    call (floor 0 — the exact-identity seed) yields the shard's local max
+    PROB code; `jax.lax.pmax` over the mesh axis turns it into the global
+    one (integer max is order-free); and the second call re-runs the shard
+    with the global floor, so every shard re-quantizes PROB with the same
+    table the unsharded kernel would have used — the returned cmax *is*
+    the global cmax on every shard, and the sharded output is bit-identical
+    to the single-device call on the gathered operands.
+    """
+    _, local_cmax = call(jnp.zeros((), jnp.int32))
+    return call(jax.lax.pmax(local_cmax, axis_name))
+
+
 @partial(jax.jit, static_argnames=("softmax_mode", "fold_scale",
                                    "block_k", "block_g", "interpret"))
 def raceit_attention_decode_gqa(

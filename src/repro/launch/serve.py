@@ -111,6 +111,15 @@ def main():
     ap.add_argument("--noise-seed", type=int, default=0,
                     help="device-variation seed (--noise); one seed = one "
                          "simulated chip, reproducibly")
+    ap.add_argument("--mesh", default=None, metavar="AXES",
+                    help="serve on a device mesh: '4' / 'model=4' / "
+                         "'data=2,model=4' (repro.dist.MeshSpec syntax). "
+                         "A 'model' axis shards attention heads and the "
+                         "paged KV pool over the raceit_*_tp backends; "
+                         "params load under FSDP specs when the config "
+                         "sets fsdp=True. Simulate N devices on one host "
+                         "with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N")
     ap.add_argument("--set", nargs="*", default=[])
     args = ap.parse_args()
 
@@ -147,11 +156,17 @@ def main():
         from repro.hw.noise import NoiseConfig
         noise = NoiseConfig.parse(args.noise, seed=args.noise_seed)
         print(f"[serve] device noise: {noise}")
+    mesh = None
+    if args.mesh is not None:
+        from repro.dist import MeshSpec
+        mesh = MeshSpec.parse(args.mesh)
+        print(f"[serve] device mesh: {mesh.describe()} "
+              f"({mesh.n_devices} devices)")
     exec_cfg = ExecConfig.serving(
         mode="raceit" if args.mode.startswith("raceit") else "digital",
         fused_attention=not args.staged_attention,
         op_overrides=parse_exec_plan(args.exec_plan),
-        noise=noise)
+        noise=noise, mesh=mesh)
     if args.mode == "raceit_q8":
         params = quantize_model_params(params)
         print("[serve] weights quantized to resident int8 crossbar codes")

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from repro.configs.base import ExecConfig, ModelConfig
 from repro.dist.sharding import MeshContext
 from repro.exec.plan import ExecPlan, as_plan
+from repro.exec.plan import layer_plan as _mixer_plan
 
 from repro.dist.sharding import constraint
 
@@ -68,6 +69,11 @@ def apply_layer(p: Params, x: jax.Array, *, cfg: ModelConfig,
                 chunk_offs: Optional[jax.Array] = None,
                 ) -> tuple[jax.Array, Any]:
     plan = as_plan(cfg, plan)
+    # per-mixer-kind plan overrides (ExecConfig.layer_overrides): e.g. pin
+    # sliding-window "attn_local" layers to the staged path while global
+    # "attn" layers stay fused — resolved through the same lru-cached
+    # resolve_plan, so this is a dict lookup per trace, not per step
+    plan = _mixer_plan(plan, mixer)
     h = layers.apply_norm(p["norm1"], x, cfg)
     if mixer in ("attn", "attn_local"):
         m, new_cache = layers.attention(

@@ -204,6 +204,15 @@ class ContinuousBatcher:
                  prefix_cache: Optional[bool] = None):
         self.engine = engine
         self.n = n_slots
+        # mesh-sharded serving: the batcher never touches the mesh itself
+        # (the TP attention backends shard the pool inside the jitted decode
+        # step; block tables and slot lengths stay replicated host state),
+        # it only surfaces the shape and the resolved decode backend in
+        # summary() so a silently-degraded mesh (non-dividing KV heads) is
+        # visible in the service report, not just in plan.explain()
+        _mesh = getattr(engine.exec_cfg, "mesh", None)
+        self.mesh_spec = (_mesh if _mesh is not None
+                          and getattr(_mesh, "n_devices", 1) > 1 else None)
         self.prefill_len = prefill_len
         self.pad_id = pad_id
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -784,6 +793,9 @@ class ContinuousBatcher:
             "queue_depths": self.queue.depths(),
             "fairness_jain": self.metrics.fairness(self.queue.weights),
         }
+        if self.mesh_spec is not None:
+            s["mesh"] = self.mesh_spec.describe()
+            s["decode_backend"] = self.engine.plan.backend("attention_decode")
         if self.paged:
             s["chunk_calls"] = self.chunk_calls
             a = self.allocator

@@ -58,6 +58,31 @@ class GenerationEngine:
     mesh_ctx: object = None
 
     def __post_init__(self):
+        # mesh-sharded serving: an ExecConfig.mesh (repro.dist.MeshSpec)
+        # materializes here — once, at engine construction — into the
+        # concrete Mesh and a MeshContext for the model stack, and the
+        # parameter tree is device_put onto it under `param_specs` (TP
+        # Megatron splits; ModelConfig.fsdp additionally hands the data
+        # axes to the weight shards, so command-r-35B/mixtral-8x22B-class
+        # trees load without ever fitting one device).
+        spec = self.exec_cfg.mesh
+        if spec is not None and getattr(spec, "n_devices", 1) > 1:
+            from repro.dist.sharding import (ShardingPolicy,
+                                             named_sharding_tree, param_specs)
+            mesh = spec.build()
+            if self.mesh_ctx is None:
+                self.mesh_ctx = spec.context()
+            policy = ShardingPolicy(mesh)
+            if self.cfg.fsdp:
+                amap = dict(policy.axis_map)
+                dp = tuple(a for a in ("pod", "data")
+                           if a in mesh.axis_names)
+                for name in ("heads", "mlp", "vocab"):
+                    amap[name] = tuple(amap.get(name, ())) + dp
+                policy.axis_map = amap
+            pspecs = param_specs(self.params, self.cfg, policy)
+            self.params = jax.device_put(
+                self.params, named_sharding_tree(pspecs, mesh))
         self.model = Model(self.cfg, self.exec_cfg, self.mesh_ctx)
         self.plan = self.model.plan  # resolved operator dispatch table
         # one jitted prefill serves both paths: encoder-decoder models pass

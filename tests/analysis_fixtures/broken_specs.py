@@ -58,12 +58,14 @@ def _clamped_kv(p, g, i, k, kvl, kvm):
 
 def _attention_call(k_map, v_map=None, out_map=None, nsp=2, operands=None,
                     in_specs=None, grid=(2, 1, 1, NK)):
-    """A decode-shaped call: [scale, qoff, q, k, v, lut x3] + (out, cmax)."""
+    """A decode-shaped call: [scale, qoff, cmax_floor, q, k, v, lut x3]
+    + (out, cmax)."""
     v_map = v_map or _clamped_kv
     out_map = out_map or _q_map
     specs = in_specs or [
         FakeSpec((1, 1), _zero2),              # scale
         FakeSpec((1, 1), _zero2),              # qoff
+        FakeSpec((1, 1), _zero2),              # cmax_floor
         FakeSpec((1, 1, 64), _q_map),          # q
         FakeSpec((1, BK, 64), k_map),          # k
         FakeSpec((1, BK, 64), v_map),          # v
@@ -75,7 +77,7 @@ def _attention_call(k_map, v_map=None, out_map=None, nsp=2, operands=None,
     if nsp == 3:
         prefetch.append(_st((1, 4), I32))
     ops = operands or [
-        _st((1, 1)), _st((1, 1)), _st((1, 1, 64)),
+        _st((1, 1)), _st((1, 1)), _st((1, 1), I32), _st((1, 1, 64)),
         _st((1, SMAX, 64)), _st((1, SMAX, 64)),
         _st((256,), I32), _st((256,), I32), _st((256,), I32),
     ]
@@ -158,9 +160,11 @@ def paged_column_past_frontier():
         return (bt[0, kc // spb], kc % spb, 0)
 
     pool = _st((n_pages, ps, 64))
-    ops = [_st((1, 1)), _st((1, 1)), _st((1, 1, 64)), pool, pool,
+    ops = [_st((1, 1)), _st((1, 1)), _st((1, 1), I32), _st((1, 1, 64)),
+           pool, pool,
            _st((256,), I32), _st((256,), I32), _st((256,), I32)]
     specs = [
+        FakeSpec((1, 1), lambda p, g, i, k, kvl, kvm, bt: (0, 0)),
         FakeSpec((1, 1), lambda p, g, i, k, kvl, kvm, bt: (0, 0)),
         FakeSpec((1, 1), lambda p, g, i, k, kvl, kvm, bt: (0, 0)),
         FakeSpec((1, 1, 64), lambda p, g, i, k, kvl, kvm, bt: (g, i, 0)),

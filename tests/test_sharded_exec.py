@@ -1,0 +1,202 @@
+"""Host-side (1-device) coverage for mesh-sharded ExecPlan serving.
+
+Everything here runs without building a mesh: capability predicates and
+`resolve_plan` are purely structural (they read `MeshSpec.model_size`,
+never `jax.devices()`), `ShardingPolicy`/`param_specs` only consult
+``mesh.shape``/``mesh.axis_names``, and the big-config dry-runs use
+`jax.eval_shape` — so command-r-35B / mixtral-8x22B-class parameter
+trees resolve their sharded serving plans and FSDP placement specs on a
+one-CPU pytest process. Actually *running* the TP backends needs
+devices: that's `tests/test_sharded_parity.py` (subprocess, 8 simulated
+devices).
+"""
+from types import SimpleNamespace
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ExecConfig
+from repro.configs.catalog import ASSIGNED, PAPER_OWN
+from repro.dist import MeshSpec
+from repro.dist.sharding import ShardingPolicy, param_specs
+from repro.exec.plan import layer_plan, resolve_plan
+from repro.exec.registry import get_backend
+
+CATALOG = list(ASSIGNED) + list(PAPER_OWN)
+
+
+def _gqa_cfg(**kw):
+    base = dict(n_layers=2, d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
+                vocab_size=512, pos_emb="rope", norm="rmsnorm", glu=False,
+                qkv_bias=False, param_dtype="float32",
+                compute_dtype="float32", remat="none", tie_embeddings=True)
+    base.update(kw)
+    return get_config("gpt2-large").replace(name="tp-exec-test", **base)
+
+
+def _serving(mesh_text=None):
+    mesh = MeshSpec.parse(mesh_text) if mesh_text else None
+    return ExecConfig.serving(mesh=mesh)
+
+
+# --------------------------------------------------------------- registry
+
+def test_tp_backends_registered():
+    import repro.exec.backends  # noqa: F401 — registration is import-time
+    for slot, name in (("attention_prefill", "raceit_fused_tp"),
+                       ("attention_decode", "raceit_fused_tp"),
+                       ("attention_decode", "raceit_gqa_tp")):
+        spec = get_backend(slot, name)
+        assert spec is not None, f"{slot}:{name} not registered"
+    # both TP decode backends take the block-paged KV pool directly
+    assert get_backend("attention_decode", "raceit_fused_tp").paged
+    assert get_backend("attention_decode", "raceit_gqa_tp").paged
+
+
+# ------------------------------------------------------------- resolution
+
+def test_tp_resolution_on_model_mesh():
+    plan = resolve_plan(_gqa_cfg(), _serving("model=4"))
+    assert plan.backend("attention_decode") == "raceit_gqa_tp"
+    assert plan.backend("attention_prefill") == "raceit_fused_tp"
+    mha = resolve_plan(_gqa_cfg(n_kv_heads=8), _serving("model=4"))
+    assert mha.backend("attention_decode") == "raceit_fused_tp"
+
+
+def test_tp_resolution_ignores_data_axes():
+    """A pure data-parallel mesh is not tensor parallelism."""
+    ref = resolve_plan(_gqa_cfg(), _serving())
+    dp = resolve_plan(_gqa_cfg(), _serving("data=4"))
+    for slot in ("attention_prefill", "attention_decode"):
+        assert dp.backend(slot) == ref.backend(slot)
+        assert "tp" not in dp.backend(slot)
+    mixed = resolve_plan(_gqa_cfg(), _serving("data=2,model=2"))
+    assert mixed.backend("attention_decode") == "raceit_gqa_tp"
+
+
+def test_tp_degrades_without_divisibility():
+    """model=3 on n_kv_heads=4: KV-head chunks would straddle shards, so
+    the chain falls through to the single-device fused family — same
+    backends as no mesh at all, with the reason on the predicate."""
+    ref = resolve_plan(_gqa_cfg(), _serving())
+    odd = resolve_plan(_gqa_cfg(), _serving("model=3"))
+    for slot in ("attention_prefill", "attention_decode"):
+        assert odd.backend(slot) == ref.backend(slot)
+    reason = get_backend("attention_decode", "raceit_gqa_tp").supported(
+        _gqa_cfg(), _serving("model=3"))
+    assert reason is not None and "divisible" in reason
+    # 1-device meshes degrade with the no-mesh reason
+    one = resolve_plan(_gqa_cfg(), _serving("model=1"))
+    assert one.backend("attention_decode") == ref.backend("attention_decode")
+
+
+def test_tp_mesh_is_part_of_plan_cache_key():
+    a = resolve_plan(_gqa_cfg(), _serving("model=4"))
+    b = resolve_plan(_gqa_cfg(), _serving())
+    assert a is not b
+    assert a.backend("attention_decode") != b.backend("attention_decode")
+    # same spec -> same lru entry
+    assert resolve_plan(_gqa_cfg(), _serving("model=4")) is a
+
+
+def test_layer_overrides_per_mixer_kind():
+    """The PR-3 override surface, per layer kind: pin sliding-window
+    attn_local layers to the staged path while global attn layers keep
+    the TP chain."""
+    ec = ExecConfig.serving(
+        mesh=MeshSpec.parse("model=4"),
+        layer_overrides=(("attn_local",
+                          (("attention_prefill", "raceit_staged"),
+                           ("attention_decode", "raceit_staged"))),))
+    plan = resolve_plan(_gqa_cfg(), ec)
+    assert plan.backend("attention_decode") == "raceit_gqa_tp"
+    local = layer_plan(plan, "attn_local")
+    assert local.backend("attention_decode") == "raceit_staged"
+    assert local.backend("attention_prefill") == "raceit_staged"
+    # kinds without pins share the incoming plan object (no allocation)
+    assert layer_plan(plan, "attn") is plan
+
+
+# ------------------------------------------- ShardingPolicy edge cases
+
+def _fake_mesh(**shape):
+    return SimpleNamespace(axis_names=tuple(shape), shape=dict(shape))
+
+
+def test_policy_nondividing_assignment_drops_silently():
+    pol = ShardingPolicy(_fake_mesh(data=2, model=8))
+    spec = pol.spec_for((6, 64), ("heads", "mlp"))
+    assert spec[0] is None      # 6 % 8 != 0 -> replicated, no error
+    assert spec[1] == "model"
+
+
+def test_policy_never_reuses_a_mesh_axis():
+    pol = ShardingPolicy(_fake_mesh(model=4))
+    spec = pol.spec_for((16, 16), ("heads", "mlp"))
+    assert spec[0] == "model" and spec[1] is None
+
+
+def test_policy_on_one_device_mesh():
+    """A 1-device mesh must produce valid (trivially replicated) specs,
+    not crash — the engine skips device_put at n_devices==1, but
+    `make_policy` call sites still build specs."""
+    pol = ShardingPolicy(_fake_mesh(model=1))
+    spec = pol.spec_for((8, 64), ("heads", "mlp"))
+    assert pol.axes_size(("model",)) == 1
+    assert all(e in (None, "model") for e in spec)
+
+
+@pytest.mark.parametrize("name", CATALOG)
+def test_param_specs_total_over_catalog(name):
+    """`param_specs` must assign a spec to every leaf of every catalog
+    architecture's parameter tree (eval_shape: no arrays materialize),
+    with each spec rank-matched to its leaf and every named axis real."""
+    from repro.models import Model
+    cfg = get_config(name)
+    shapes = jax.eval_shape(Model(cfg).init, jax.random.PRNGKey(0))
+    mesh = _fake_mesh(data=2, model=4)
+    specs = param_specs(shapes, cfg, ShardingPolicy(mesh))
+    leaves = jax.tree_util.tree_leaves_with_path(shapes)
+    spec_leaves = dict(jax.tree_util.tree_leaves_with_path(
+        specs, is_leaf=lambda x: isinstance(x, tuple) and not any(
+            isinstance(e, (list, dict)) for e in x)))
+    assert len(leaves) > 0
+    for path, leaf in leaves:
+        spec = spec_leaves[path]
+        assert len(spec) == len(leaf.shape), (name, path, spec, leaf.shape)
+        for dim, entry in zip(leaf.shape, spec):
+            for ax in ((entry,) if isinstance(entry, str) else entry or ()):
+                assert ax in mesh.axis_names
+                assert dim % mesh.shape[ax] == 0, (name, path, spec)
+
+
+# ----------------------------------------------- big-config dry runs
+
+@pytest.mark.parametrize("name", ["command-r-35b", "mixtral-8x22b"])
+def test_big_config_sharded_dryrun(name):
+    """command-r-35B / mixtral-8x22B-class configs resolve the sharded
+    serving chain and an FSDP placement for every parameter — without
+    ever fitting (or allocating) the tree on one device."""
+    from repro.models import Model
+    cfg = get_config(name)
+    assert cfg.fsdp
+    plan = resolve_plan(cfg, _serving("data=2,model=4"))
+    assert plan.backend("attention_decode") == "raceit_gqa_tp"
+
+    shapes = jax.eval_shape(Model(cfg).init, jax.random.PRNGKey(0))
+    mesh = _fake_mesh(data=2, model=4)
+    policy = ShardingPolicy(mesh)
+    # the engine's FSDP extension: weight axes may also take the data axes
+    amap = dict(policy.axis_map)
+    for ax in ("heads", "mlp", "vocab"):
+        amap[ax] = tuple(amap.get(ax, ())) + ("data",)
+    policy.axis_map = amap
+    specs = param_specs(shapes, cfg, policy)
+    flat = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, tuple) and not any(
+            isinstance(e, (list, dict)) for e in x))
+    used = {ax for spec in flat for entry in spec
+            for ax in ((entry,) if isinstance(entry, str) else entry or ())}
+    assert "model" in used, f"{name}: no parameter took the model axis"
+    assert "data" in used, f"{name}: FSDP never engaged the data axis"
